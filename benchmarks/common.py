@@ -1,0 +1,40 @@
+"""Shared benchmark harness bits: tiny model factory, timing, CSV output."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ART = Path(__file__).resolve().parent / "artifacts"
+ART.mkdir(exist_ok=True)
+
+
+def bench_model(d=64, layers=2, vocab=256, heads=4):
+    from repro.configs.base import ATTN, ModelConfig, Segment
+    return ModelConfig(
+        name=f"bench-{d}x{layers}",
+        family="dense", d_model=d, n_heads=heads, n_kv_heads=heads,
+        d_ff=2 * d, vocab_size=vocab,
+        segments=(Segment((ATTN,), layers),), dtype="float32")
+
+
+def timeit(fn, *args, iters=20, warmup=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def emit(name, us, derived=""):
+    print(f"{name},{us if us is not None else ''},{derived}", flush=True)
+
+
+def save_json(name, obj):
+    (ART / f"{name}.json").write_text(json.dumps(obj, indent=2, default=float))

@@ -1,0 +1,238 @@
+"""Paper-validation benchmarks — one per figure/table of
+Katharopoulos & Fleuret (ICML 2018).
+
+The paper's experiments are single-output classification (CIFAR / MIT67 /
+permuted-MNIST-as-sequence). We reproduce that setting exactly with
+``SyntheticCLS`` (loss on the final position only, heterogeneous per-sample
+difficulty) on CPU-scale models; fig5 uses the reduced xLSTM (the paper's
+LSTM analog). Wall-clock budgets are replaced by the paper's own cost model
+(forward = 1, backward = 2 ⇒ IS step with B=3b costs 2× a uniform step) —
+this container's CPU timing is not TPU wall-clock.
+
+fig1  variance reduction vs uniform        (paper Fig. 1)
+fig2  score ↔ true-gradient-norm fidelity  (paper Fig. 2; SSE loss≫ub)
+fig3  convergence at equal cost            (paper Fig. 3)
+fig4  fine-tuning                          (paper Fig. 4)
+fig5  recurrent sequence classification    (paper Fig. 5)
+fig7  pre-sample size B ablation           (paper Fig. 7)
+tau   τ-gate switch-on behaviour           (Algorithm 1)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_model, emit, save_json
+from repro.configs.base import ISConfig, OptimConfig, RunConfig, ShapeConfig
+from repro.core import importance as imp
+from repro.core.variance import correlation_sse, grad_distance_reduction
+from repro.data.pipeline import PipelineState, SyntheticCLS
+from repro.models.lm import LM
+from repro.runtime.trainer import Trainer
+
+SEQ = 16
+VOCAB = 128
+
+
+def _make(method, *, d=48, layers=2, b=16, ratio=3, tau_th=1.3, lr=2e-3,
+          seed=0, data_seed=5, model_cfg=None):
+    cfg = model_cfg or bench_model(d=d, layers=layers, vocab=VOCAB)
+    shape = ShapeConfig("bench", seq_len=SEQ, global_batch=b, kind="train")
+    icfg = ISConfig(enabled=method != "uniform", presample_ratio=ratio,
+                    tau_th=tau_th,
+                    score_by="loss" if method == "loss" else "upper-bound")
+    run = RunConfig(model=cfg, shape=shape,
+                    optim=OptimConfig(name="adamw", lr=lr, weight_decay=0.0),
+                    imp=icfg, remat=False, seed=seed)
+    src = SyntheticCLS(VOCAB, SEQ, seed=data_seed, host_id=0, n_hosts=1)
+    tr = Trainer(run, source=src, gate="never" if method == "uniform" else None)
+    return cfg, tr
+
+
+def _test_error(lm, params, src, n=256):
+    batch, _ = src.batch(PipelineState(epoch=987), n)
+    batch = {k: jnp.asarray(v) for k, v in batch.items()}
+    logits, _ = jax.jit(lm.logits)(params, batch)
+    pred = np.asarray(jnp.argmax(logits[:, -1], -1))
+    return float(np.mean(pred != np.asarray(batch["labels"][:, -1])))
+
+
+def _trained_cls(steps=250, seed=0):
+    cfg, tr = _make("uniform", seed=seed)
+    state, _ = tr.fit(steps=steps)
+    return cfg, LM(cfg), state["params"], tr.source
+
+
+def fig1_variance_reduction():
+    """Paper Fig. 1: ‖Ḡ_B − weighted Ḡ_b‖ per scheme / uniform."""
+    cfg, lm, params, src = _trained_cls()
+    batch, _ = src.batch(PipelineState(epoch=7), 96)
+    batch = {k: jnp.asarray(v) for k, v in batch.items()}
+    out = grad_distance_reduction(lm, params, batch, b=24,
+                                  key=jax.random.PRNGKey(0), n_rounds=10)
+    save_json("fig1_variance_reduction", out)
+    for k in ("uniform", "loss", "upper-bound", "gradient-norm"):
+        emit(f"fig1.grad_distance_ratio.{k.replace('-', '_')}", None,
+             f"{out[k]:.3f}")
+    ok = out["upper-bound"] < 1.0 and \
+        out["upper-bound"] <= out["loss"] + 0.05
+    emit("fig1.claim.upper_bound_reduces_variance", None, f"pass={ok}")
+    return out
+
+
+def fig2_correlation():
+    """Paper Fig. 2: Ĝ ≈ the oracle gradient norm; loss is much looser.
+    (Paper: SSE 0.017 loss vs 0.002 upper-bound — an ~8× gap.)"""
+    cfg, lm, params, src = _trained_cls()
+    batch, _ = src.batch(PipelineState(epoch=3), 128)
+    batch = {k: jnp.asarray(v) for k, v in batch.items()}
+    sse, dists = correlation_sse(lm, params, batch)
+    corr_ub = float(np.corrcoef(np.asarray(dists["upper-bound"]),
+                                np.asarray(dists["gradient-norm"]))[0, 1])
+    corr_loss = float(np.corrcoef(np.asarray(dists["loss"]),
+                                  np.asarray(dists["gradient-norm"]))[0, 1])
+    out = {"sse": sse, "corr_upper_bound": corr_ub, "corr_loss": corr_loss,
+           "sse_ratio_loss_over_ub": sse["loss"] / max(sse["upper-bound"], 1e-12)}
+    save_json("fig2_correlation", out)
+    emit("fig2.sse.loss", None, f"{sse['loss']:.5f}")
+    emit("fig2.sse.upper_bound", None, f"{sse['upper-bound']:.5f}")
+    emit("fig2.sse.ratio_loss_over_ub", None,
+         f"{out['sse_ratio_loss_over_ub']:.2f}")
+    emit("fig2.corr.upper_bound", None, f"{corr_ub:.4f}")
+    emit("fig2.corr.loss", None, f"{corr_loss:.4f}")
+    emit("fig2.claim.upper_bound_tighter_than_loss", None,
+         f"pass={sse['upper-bound'] < sse['loss'] and corr_ub > corr_loss}")
+    return out
+
+
+def _run_budgeted(method, steps, **kw):
+    cfg, tr = _make(method, **kw)
+    state, hist = tr.fit(steps=steps)
+    lm = LM(cfg)
+    te = _test_error(lm, state["params"], tr.source)
+    return hist, te
+
+
+def fig3_convergence(steps=150):
+    """Paper Fig. 3: equal cost budget; cost model fwd=1/bwd=2 ⇒ uniform
+    gets 2× the steps of an IS method with B=3b. Also reports the
+    equal-STEPS comparison, which isolates the variance-reduction effect
+    from the scoring overhead."""
+    out = {}
+    for method, n in (("uniform", 2 * steps), ("uniform-equal-steps", steps),
+                      ("loss", steps), ("upper-bound", steps)):
+        tls, tes = [], []
+        for seed in range(3):
+            hist, te = _run_budgeted(
+                "uniform" if method.startswith("uniform") else method,
+                n, seed=seed)
+            tls.append(np.mean([h["loss"] for h in hist[-10:]]))
+            tes.append(te)
+        out[method] = {"train_loss": float(np.mean(tls)),
+                       "test_error": float(np.mean(tes)), "steps": n}
+        emit(f"fig3.convergence.{method.replace('-', '_')}", None,
+             f"train={out[method]['train_loss']:.4f};"
+             f"test_err={out[method]['test_error']:.3f};steps={n}")
+    # the paper's headline metric is TEST error at an equalised budget
+    ok_test = out["upper-bound"]["test_error"] <= out["uniform"]["test_error"]
+    ok_steps = out["upper-bound"]["train_loss"] \
+        <= out["uniform-equal-steps"]["train_loss"] * 1.05
+    emit("fig3.claim.upper_bound_beats_uniform_test_error_equal_cost",
+         None, f"pass={ok_test}")
+    emit("fig3.claim.upper_bound_beats_uniform_equal_steps",
+         None, f"pass={ok_steps}")
+    save_json("fig3_convergence", out)
+    return out
+
+
+def fig4_finetune(steps=80):
+    """Paper Fig. 4: fine-tune a pretrained model on a shifted task — most
+    samples are handled early, IS focuses on the rest."""
+    cfg, lm, params, _ = _trained_cls(steps=250, seed=1)
+    out = {}
+    for method in ("uniform", "upper-bound"):
+        n = 2 * steps if method == "uniform" else steps
+        cfg2, tr = _make(method, data_seed=11, tau_th=1.1, lr=1e-3,
+                         model_cfg=cfg)
+        state, pstate = tr.init_state()
+        state["params"] = params          # warm start
+        state["opt"] = tr.opt.init(params)
+        hist = []
+        for i in range(n):
+            batch, pstate = tr.source.batch(pstate, tr.B)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            state, m = tr.step_fn(state, batch)
+            hist.append({k: float(v) for k, v in m.items()})
+        te = _test_error(lm, state["params"], tr.source)
+        out[method] = {
+            "train_loss": float(np.mean([h["loss"] for h in hist[-10:]])),
+            "test_error": te,
+            "is_frac": float(np.mean([h.get("is_active", 0) for h in hist]))}
+        emit(f"fig4.finetune.{method.replace('-', '_')}", None,
+             f"train={out[method]['train_loss']:.4f};"
+             f"test_err={te:.3f};is_frac={out[method]['is_frac']:.2f}")
+    ok = out["upper-bound"]["test_error"] <= out["uniform"]["test_error"] + 0.03
+    emit("fig4.claim.is_effective_for_finetuning", None, f"pass={ok}")
+    save_json("fig4_finetune", out)
+    return out
+
+
+def fig5_sequence(steps=100):
+    """Paper Fig. 5: recurrent sequence classification (xLSTM reduced —
+    the framework's LSTM-family arch) with IS."""
+    from repro.configs import get_config
+    from repro.configs.base import reduced
+    xcfg = dataclasses.replace(reduced(get_config("xlstm-350m"), repeats=1),
+                               vocab_size=VOCAB, dtype="float32")
+    out = {}
+    for method, n in (("uniform", 2 * steps), ("loss", steps),
+                      ("upper-bound", steps)):
+        # paper §4.4 sets a conservative tau_th (1.8): IS starts only when
+        # variance reduction is substantial; it also reports loss-sampling
+        # HURTING the RNN — we check the same ordering
+        hist, te = _run_budgeted(method, n, model_cfg=xcfg, b=8, lr=2e-3,
+                                 tau_th=1.8, seed=3)
+        out[method] = {
+            "train_loss": float(np.mean([h["loss"] for h in hist[-10:]])),
+            "test_error": te}
+        emit(f"fig5.sequence.{method.replace('-', '_')}", None,
+             f"train={out[method]['train_loss']:.4f};test_err={te:.3f}")
+    emit("fig5.claim.upper_bound_no_worse_than_loss_on_recurrent", None,
+         f"pass={out['upper-bound']['train_loss'] <= out['loss']['train_loss'] * 1.1}")
+    save_json("fig5_sequence", out)
+    return out
+
+
+def fig7_ablation_B(steps=100):
+    """Paper Fig. 7: larger B ⇒ more variance-reduction headroom."""
+    out = {}
+    for ratio in (2, 3, 6):
+        hist, te = _run_budgeted("upper-bound", steps, ratio=ratio, tau_th=1.2)
+        out[f"B={ratio}b"] = {
+            "train_loss": float(np.mean([h["loss"] for h in hist[-10:]])),
+            "test_error": te}
+        emit(f"fig7.ablation.B_ratio_{ratio}", None,
+             f"train={out[f'B={ratio}b']['train_loss']:.4f}")
+    save_json("fig7_ablation_B", out)
+    return out
+
+
+def tau_gate_behaviour(steps=150):
+    """Algorithm 1's τ gate: uniform early, IS on once τ_ema > τ_th."""
+    cfg, tr = _make("upper-bound", tau_th=1.5)
+    state, hist = tr.fit(steps=steps)
+    taus = [h["tau"] for h in hist]
+    acts = [h["is_active"] for h in hist]
+    first_on = next((i for i, a in enumerate(acts) if a > 0), None)
+    out = {"first_is_step": first_on, "tau_start": taus[0],
+           "tau_end": taus[-1], "is_frac": float(np.mean(acts))}
+    save_json("tau_gate", out)
+    emit("tau.gate.first_is_step", None, str(first_on))
+    emit("tau.gate.is_frac", None, f"{out['is_frac']:.2f}")
+    emit("tau.gate.tau_final", None, f"{taus[-1]:.2f}")
+    emit("tau.claim.gate_delays_then_activates", None,
+         f"pass={first_on is not None and first_on > 0}")
+    return out

@@ -1,0 +1,77 @@
+"""§Roofline table generator: reads the dry-run artifacts and renders the
+per-(arch × shape × mesh) roofline terms, dominant bottleneck, useful-flops
+ratio and roofline fraction. Markdown written to
+benchmarks/artifacts/roofline.md; CSV rows to stdout via run.py."""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parent / "artifacts"
+
+
+def load_cells(pattern="*.json", d="dryrun"):
+    rows = []
+    for f in sorted(glob.glob(str(ART / d / pattern))):
+        r = json.loads(Path(f).read_text())
+        rows.append(r)
+    return rows
+
+
+def roofline_table(mesh="pod"):
+    rows = [r for r in load_cells() if r.get("ok") and r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    lines = [
+        f"### Roofline — single-pod (16×16 = 256 chips, v5e)"
+        if mesh == "pod" else
+        f"### Roofline — multi-pod (2×16×16 = 512 chips)",
+        "",
+        "| arch | shape | variant | compute (s) | memory (s) | collective (s)"
+        " | dominant | useful-FLOPs | roofline frac | peak GB/chip |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        t = r["terms"]
+        uf = r.get("useful_flop_frac")
+        rf = r.get("roofline_frac")
+        peak = (r.get("memory") or {}).get("peak_bytes") or 0
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['variant']} "
+            f"| {t['compute_s']:.3e} | {t['memory_s']:.3e} "
+            f"| {t['collective_s']:.3e} | {r['dominant'].replace('_s','')} "
+            f"| {uf:.2f} | {rf * 100 if rf else 0:.1f}% | {peak / 1e9:.1f} |")
+    return "\n".join(lines)
+
+
+def skipped_cells():
+    """long_500k is skipped for pure full-attention archs (assignment)."""
+    from repro.configs import ARCHS, get_config
+    from repro.configs.base import applicable_shapes
+    out = []
+    for arch in ARCHS:
+        if arch.startswith("lm-"):
+            continue
+        cfg = get_config(arch)
+        names = {s.name for s in applicable_shapes(cfg)}
+        if "long_500k" not in names:
+            out.append(arch)
+    return out
+
+
+def render(emit=print):
+    md = [roofline_table("pod"), "", roofline_table("multipod"), ""]
+    md.append("Skipped cells: `long_500k` for pure full-attention archs "
+              "(quadratic attention at 524k): " + ", ".join(skipped_cells()))
+    text = "\n".join(md)
+    (ART / "roofline.md").write_text(text)
+    cells = [r for r in load_cells() if r.get("ok")]
+    emit(f"roofline.cells_ok,,{len(cells)}")
+    for r in cells:
+        t = r["terms"]
+        emit(f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}.{r['variant']},,"
+             f"dom={r['dominant'].replace('_s','')};"
+             f"frac={(r.get('roofline_frac') or 0) * 100:.1f}%;"
+             f"c={t['compute_s']:.2e};m={t['memory_s']:.2e};"
+             f"x={t['collective_s']:.2e}")
+    return text

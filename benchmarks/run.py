@@ -1,0 +1,49 @@
+"""Benchmark orchestrator: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One function per paper table/figure (+ the roofline report). Prints
+``name,us_per_call,derived`` CSV lines; artifacts land in
+benchmarks/artifacts/.
+
+Subsets: ``python -m benchmarks.run fig1 fig3 roofline``
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import paper_figures as pf
+    from benchmarks import roofline, scoring_overhead, svrg_compare
+
+    suites = {
+        "fig1": pf.fig1_variance_reduction,
+        "fig2": pf.fig2_correlation,
+        "fig3": pf.fig3_convergence,
+        "fig4": pf.fig4_finetune,
+        "fig5": pf.fig5_sequence,
+        "fig7": pf.fig7_ablation_B,
+        "tau": pf.tau_gate_behaviour,
+        "scoring": scoring_overhead.scoring_overhead,
+        "svrg": svrg_compare.svrg_compare,
+        "roofline": lambda: roofline.render(emit=print),
+    }
+    wanted = sys.argv[1:] or list(suites)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in wanted:
+        t0 = time.time()
+        try:
+            suites[name]()
+            print(f"{name}.elapsed_s,,{time.time() - t0:.1f}", flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"{name}.ERROR,,{type(e).__name__}: {e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Scoring-cost microbenchmarks (paper §3.2-3.3: the score must be ~free
+relative to the forward pass).
+
+Times the three scoring implementations per call (CPU numbers — relative
+cost is what matters here; the TPU story is in §Roofline/§Perf via the
+dry-run bytes) and the forward pass itself for scale.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_model, emit, timeit
+from repro.models.lm import LM, token_stats_chunked, token_stats_fused, token_stats_naive
+
+
+def scoring_overhead():
+    rng = np.random.RandomState(0)
+    T, V = 512, 8192
+    z = jnp.asarray(rng.randn(T, V).astype(np.float32))
+    y = jnp.asarray(rng.randint(0, V, (T,)))
+
+    fns = {
+        "naive": jax.jit(token_stats_naive),
+        "chunked": jax.jit(token_stats_chunked),
+        "fused": jax.jit(token_stats_fused),
+    }
+    out = {}
+    for name, fn in fns.items():
+        us = timeit(fn, z, y, iters=10)
+        out[name] = us
+        emit(f"score.{name}.us_per_call", round(us, 1), f"T={T},V={V}")
+
+    # pallas kernel (interpret mode on CPU — correctness/time shape only)
+    from repro.kernels.ce_score.ops import ce_score
+    us = timeit(lambda: ce_score(z, y), iters=2, warmup=1)
+    emit("score.pallas_interpret.us_per_call", round(us, 1),
+         "interpret-mode; TPU timing n/a in container")
+
+    # scoring vs model forward (the paper's "single forward pass" claim):
+    cfg = bench_model(d=128, layers=4, vocab=V)
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.zeros((8, 64), jnp.int32),
+             "labels": jnp.zeros((8, 64), jnp.int32)}
+    fwd = jax.jit(lambda p, b: lm.logits(p, b)[0])
+    us_fwd = timeit(fwd, params, batch, iters=10)
+    stats = jax.jit(lambda p, b: lm.sample_stats(p, b))
+    us_stats = timeit(stats, params, batch, iters=10)
+    emit("score.forward_only.us_per_call", round(us_fwd, 1), "logits only")
+    emit("score.forward_plus_score.us_per_call", round(us_stats, 1),
+         f"overhead={(us_stats / us_fwd - 1) * 100:.1f}%")
+    return out

@@ -1,0 +1,74 @@
+"""Fine-tuning with importance sampling (the paper's §4.3 scenario).
+
+Pretrains a small model on one task distribution, then fine-tunes on a
+shifted one, comparing uniform vs IS at the paper's equalised cost model
+(IS step with B=3b costs 2 uniform steps). Fine-tuning is IS's best case:
+most samples are handled almost immediately, so τ crosses the threshold
+within a few steps and the sampler focuses on the genuinely new samples.
+
+    PYTHONPATH=src python examples/finetune_is.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (ATTN, ISConfig, ModelConfig, OptimConfig,
+                                RunConfig, Segment, ShapeConfig)
+from repro.data.pipeline import PipelineState, SyntheticCLS
+from repro.models.lm import LM
+from repro.runtime.trainer import Trainer
+
+
+def make_run(cfg, enabled, lr=1e-3, tau_th=1.1):
+    return RunConfig(
+        model=cfg,
+        shape=ShapeConfig("ft", seq_len=16, global_batch=16, kind="train"),
+        optim=OptimConfig(name="adamw", lr=lr, weight_decay=0.0),
+        imp=ISConfig(enabled=enabled, presample_ratio=3, tau_th=tau_th),
+        remat=False)
+
+
+def main():
+    cfg = ModelConfig(name="ft-demo", family="dense", d_model=48, n_heads=4,
+                      n_kv_heads=4, d_ff=96, vocab_size=128,
+                      segments=(Segment((ATTN,), 2),), dtype="float32")
+    # --- pretrain -----------------------------------------------------------
+    pre_src = SyntheticCLS(128, 16, seed=5, host_id=0, n_hosts=1)
+    pre = Trainer(make_run(cfg, enabled=False, lr=2e-3), source=pre_src,
+                  gate="never")
+    state, _ = pre.fit(steps=200)
+    print("pretrained.")
+
+    # --- finetune: uniform vs IS at equal cost ------------------------------
+    results = {}
+    for method, steps in (("uniform", 120), ("importance", 60)):
+        src = SyntheticCLS(128, 16, seed=42, host_id=0, n_hosts=1)
+        tr = Trainer(make_run(cfg, enabled=method == "importance"),
+                     source=src, gate="never" if method == "uniform" else None)
+        st, pstate = tr.init_state()
+        st["params"] = state["params"]
+        st["opt"] = tr.opt.init(state["params"])
+        hist = []
+        for i in range(steps):
+            batch, pstate = src.batch(pstate, tr.B)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            st, m = tr.step_fn(st, batch)
+            hist.append(float(m["loss"]))
+            if i % 20 == 0:
+                print(f"  {method} step {i:3d} loss {hist[-1]:.4f}"
+                      + (f" tau {float(m['tau']):.2f}" if method != "uniform" else ""))
+        # held-out error
+        lm = LM(cfg)
+        test, _ = src.batch(PipelineState(epoch=99), 256)
+        test = {k: jnp.asarray(v) for k, v in test.items()}
+        logits, _ = lm.logits(st["params"], test)
+        err = float(np.mean(np.asarray(jnp.argmax(logits[:, -1], -1))
+                            != np.asarray(test["labels"][:, -1])))
+        results[method] = (np.mean(hist[-10:]), err)
+        print(f"{method}: final train loss {results[method][0]:.4f}, "
+              f"test error {err:.3f} ({steps} steps)")
+    print("\n(equal cost: 60 IS steps ≈ 120 uniform steps under the paper's "
+          "fwd=1/bwd=2 cost model)")
+
+
+if __name__ == "__main__":
+    main()

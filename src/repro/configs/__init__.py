@@ -1,0 +1,34 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``--arch <id>``."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (ISConfig, ModelConfig, OptimConfig, RunConfig,
+                                SHAPES, Segment, ShapeConfig, applicable_shapes,
+                                reduced)
+
+ARCHS = (
+    "zamba2-1.2b",
+    "musicgen-medium",
+    "internlm2-20b",
+    "yi-34b",
+    "llama3.2-3b",
+    "gemma3-12b",
+    "deepseek-v2-236b",
+    "granite-moe-3b-a800m",
+    "xlstm-350m",
+    "llava-next-34b",
+    # paper-scale demo configs (CPU-runnable end-to-end)
+    "lm-100m",
+    "lm-tiny",
+)
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(
+        "repro.configs." + name.replace("-", "_").replace(".", "_"))
+    return mod.CONFIG
+
+
+def all_configs():
+    return {a: get_config(a) for a in ARCHS}

@@ -1,0 +1,273 @@
+"""Config system for repro.
+
+A ``ModelConfig`` fully determines an architecture; a ``ShapeConfig`` is one
+of the assigned input-shape cells; a ``MeshConfig`` names the device mesh;
+``RunConfig`` bundles them with training hyper-parameters (including the
+paper's importance-sampling knobs).
+
+Architectures are registered in ``repro.configs`` (one module per arch) and
+selected with ``--arch <id>``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+
+# ---------------------------------------------------------------------------
+# Block kinds (entries of a layer pattern)
+# ---------------------------------------------------------------------------
+ATTN = "attn"                # global self-attention (GQA)
+ATTN_LOCAL = "attn_local"    # sliding-window self-attention
+ATTN_MLA = "attn_mla"        # multi-head latent attention (deepseek-v2)
+SHARED_ATTN = "shared_attn"  # zamba2: single shared attention block reused
+MAMBA2 = "mamba2"            # Mamba2 / SSD block
+MLSTM = "mlstm"              # xLSTM matrix-memory block
+SLSTM = "slstm"              # xLSTM scalar-memory block (sequential)
+
+ATTENTION_KINDS = (ATTN, ATTN_LOCAL, ATTN_MLA, SHARED_ATTN)
+RECURRENT_KINDS = (MAMBA2, MLSTM, SLSTM)
+
+
+@dataclass(frozen=True)
+class Segment:
+    """A homogeneous, scannable run of layers.
+
+    ``pattern`` is applied ``repeats`` times in sequence; parameters for each
+    pattern position are stacked over ``repeats`` and the stack is traversed
+    with ``lax.scan`` so compile time is O(len(pattern)), not O(layers).
+    """
+
+    pattern: tuple  # tuple[str, ...] of block kinds
+    repeats: int
+    dense_ffn: bool = False   # force dense FFN even when cfg.moe is set
+                              # (deepseek-v2: first layer is dense)
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.pattern) * self.repeats
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0            # routed experts
+    n_experts_pad: int = 0        # pad expert AXIS to this (0 = no pad) so
+                                  # EP divides the TP degree (granite 40->48;
+                                  # dead experts are never routed to)
+    top_k: int = 0
+    d_expert: int = 0             # per-expert FFN hidden size
+    n_shared_experts: int = 0     # always-on experts (deepseek-v2)
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    # sharding: "ep" shards the expert axis over the model axis; "tp" shards
+    # each expert's hidden dim instead (for n_experts not divisible by TP).
+    shard_mode: str = "auto"
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 256              # SSD chunk length
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | audio | vlm
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    segments: tuple               # tuple[Segment, ...]
+    head_dim: int = 0             # 0 -> d_model // n_heads
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    sliding_window: int = 1024    # used by ATTN_LOCAL blocks
+    tie_embeddings: bool = False
+    act: str = "swiglu"           # swiglu | gelu
+    moe: MoEConfig = field(default_factory=MoEConfig)
+    mla: MLAConfig = field(default_factory=MLAConfig)
+    ssm: SSMConfig = field(default_factory=SSMConfig)
+    # modality frontend stub: "tokens" feeds ids; "embeddings" feeds
+    # precomputed frame/patch embeddings of shape (batch, seq, d_model);
+    # "tokens+image" (llava) prepends n_prefix_embeds patch embeddings.
+    input_mode: str = "tokens"
+    n_prefix_embeds: int = 0
+    dtype: str = "bfloat16"
+    # does any block give sub-quadratic/persistent-state decode?
+    # (used to decide long_500k applicability)
+
+    @property
+    def n_layers(self) -> int:
+        return sum(s.n_layers for s in self.segments)
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def block_kinds(self) -> tuple:
+        ks = []
+        for s in self.segments:
+            ks.extend(s.pattern)
+        return tuple(dict.fromkeys(ks))
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True when every non-shared block is recurrent/local (long-context OK)."""
+        ks = set()
+        for s in self.segments:
+            ks.update(s.pattern)
+        quad = {ATTN, ATTN_MLA} & ks
+        return not quad or ks <= {MAMBA2, MLSTM, SLSTM, ATTN_LOCAL, SHARED_ATTN}
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings + blocks), used for roofline
+        MODEL_FLOPS = 6 N D."""
+        from repro.models.counting import count_params
+        return count_params(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.counting import count_params
+        return count_params(self, active_only=True)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (the assigned 4-cell set for LM transformers)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524_288, 1, "decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+def applicable_shapes(cfg: ModelConfig):
+    """The assigned shape cells that are well-defined for this arch.
+
+    ``long_500k`` needs sub-quadratic attention: run for SSM/hybrid archs,
+    skip (and record the skip) for pure full-attention archs per assignment.
+    """
+    out = [TRAIN_4K, PREFILL_32K, DECODE_32K]
+    if cfg.is_subquadratic:
+        out.append(LONG_500K)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Importance sampling (the paper's knobs — Algorithm 1)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ISConfig:
+    enabled: bool = True
+    presample_ratio: int = 3       # B = ratio * b  (paper: 2 < B/b < 6)
+    tau_th: float = 0.0            # 0 -> derive from eq. 26: (B+3b)/(3b)
+    ema: float = 0.9               # a_tau
+    # scoring implementation: "naive" materialises the softmax gradient
+    # (paper-faithful reference), "fused" uses direct sharded reductions
+    # (production default), "chunked" streams vocab tiles (CPU benches),
+    # "pallas" uses the fused TPU kernel.
+    score_impl: str = "fused"
+    score_dtype: str = "bfloat16"
+    # sampling score: "upper-bound" (the paper's Ĝ, eq. 20) or "loss"
+    # (the Loshchilov/Schaul-style baseline the paper compares against)
+    score_by: str = "upper-bound"
+    # BEYOND-PAPER (the paper's §5 future work): when IS is active the
+    # gradient variance drops as if the batch were τ× larger, so the lr can
+    # scale like a √τ batch-size-scaling rule (capped). 0 disables.
+    lr_tau_boost_cap: float = 0.0
+
+    def resolved_tau_th(self, b: int) -> float:
+        if self.tau_th > 0:
+            return self.tau_th
+        B = self.presample_ratio * b
+        return (B + 3 * b) / (3 * b)
+
+
+@dataclass(frozen=True)
+class OptimConfig:
+    name: str = "sgd"              # sgd | adamw
+    lr: float = 0.1
+    momentum: float = 0.9
+    nesterov: bool = False
+    weight_decay: float = 5e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    # cross-pod gradient compression: none | int8 | topk
+    compression: str = "none"
+    topk_frac: float = 0.01
+    zero1: bool = True             # shard optimizer state over data axis
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    shape: ShapeConfig = TRAIN_4K
+    optim: OptimConfig = field(default_factory=OptimConfig)
+    imp: ISConfig = field(default_factory=ISConfig)
+    steps: int = 100
+    microbatches: int = 1          # gradient accumulation
+    remat: bool = True
+    seed: int = 0
+    # fault tolerance
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep_ckpts: int = 3
+    step_deadline_factor: float = 2.0   # straggler guard
+
+
+def reduced(cfg: ModelConfig, *, d_model=64, n_heads=4, n_kv_heads=2,
+            d_ff=128, vocab=256, repeats=1) -> ModelConfig:
+    """A tiny same-family variant of ``cfg`` for CPU smoke tests."""
+    segs = tuple(Segment(s.pattern, min(s.repeats, repeats)) for s in cfg.segments)
+    hd = max(8, d_model // n_heads)
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        d_model=d_model,
+        n_heads=n_heads,
+        n_kv_heads=min(n_kv_heads, n_heads),
+        d_ff=d_ff if cfg.d_ff else 0,
+        vocab_size=vocab,
+        head_dim=hd,
+        segments=segs,
+        sliding_window=min(cfg.sliding_window, 64) or 64,
+        moe=dataclasses.replace(
+            cfg.moe,
+            n_experts=min(cfg.moe.n_experts, 4),
+            top_k=min(cfg.moe.top_k, 2),
+            d_expert=min(cfg.moe.d_expert, 64) if cfg.moe.d_expert else 0,
+            n_shared_experts=min(cfg.moe.n_shared_experts, 1),
+        ),
+        mla=dataclasses.replace(
+            cfg.mla, q_lora_rank=32, kv_lora_rank=16,
+            rope_head_dim=8, nope_head_dim=hd, v_head_dim=hd),
+        ssm=dataclasses.replace(cfg.ssm, d_state=16, head_dim=16, chunk=16),
+        n_prefix_embeds=min(cfg.n_prefix_embeds, 8),
+        dtype="float32",
+    )

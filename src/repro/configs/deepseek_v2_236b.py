@@ -1,0 +1,24 @@
+"""deepseek-v2-236b [moe] MLA (kv_lora=512) + 160 routed experts top-6 +
+2 shared experts; first layer dense. [arXiv:2405.04434; hf]
+60L d_model=5120 128H d_expert=1536 vocab=102400."""
+from repro.configs.base import (ATTN_MLA, MLAConfig, MoEConfig, ModelConfig,
+                                Segment)
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    d_model=5120,
+    n_heads=128,
+    n_kv_heads=128,
+    d_ff=12288,                      # dense first layer
+    vocab_size=102400,
+    head_dim=192,                    # nope 128 + rope 64
+    segments=(
+        Segment((ATTN_MLA,), 1, dense_ffn=True),
+        Segment((ATTN_MLA,), 59),
+    ),
+    moe=MoEConfig(n_experts=160, top_k=6, d_expert=1536, n_shared_experts=2,
+                  capacity_factor=1.25),
+    mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512, rope_head_dim=64,
+                  nope_head_dim=128, v_head_dim=128),
+)

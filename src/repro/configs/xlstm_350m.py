@@ -1,0 +1,16 @@
+"""xlstm-350m [ssm] sLSTM + mLSTM blocks. [arXiv:2405.04517; unverified]
+24L d_model=1024 4H vocab=50304; 1 sLSTM per 4-block group (xLSTM[3:1])."""
+from repro.configs.base import MLSTM, SLSTM, ModelConfig, Segment, SSMConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-350m",
+    family="ssm",
+    d_model=1024,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    segments=(Segment((MLSTM, MLSTM, MLSTM, SLSTM), 6),),
+    ssm=SSMConfig(chunk=256),
+    tie_embeddings=True,
+)

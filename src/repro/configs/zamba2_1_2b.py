@@ -1,0 +1,21 @@
+"""zamba2-1.2b [hybrid] — Mamba2 backbone with a shared attention block
+applied every 6th layer (weights shared across invocations).
+[arXiv:2411.15242; hf]  38L d_model=2048 32H d_ff=8192 vocab=32000 ssm_state=64.
+38 = 6x(5 mamba + 1 shared attn) + 2 mamba."""
+from repro.configs.base import MAMBA2, SHARED_ATTN, ModelConfig, SSMConfig, Segment
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32000,
+    segments=(
+        Segment((MAMBA2,) * 5 + (SHARED_ATTN,), 6),
+        Segment((MAMBA2,), 2),
+    ),
+    ssm=SSMConfig(d_state=64, d_conv=4, expand=2, head_dim=64, chunk=256),
+    tie_embeddings=True,
+)

@@ -1,0 +1,102 @@
+"""The paper's core quantities (Katharopoulos & Fleuret, ICML 2018).
+
+* ``gnorm_upper_bound`` — eq. 20: Ĝᵢ ∝ ‖Σ'_L(z⁽ᴸ⁾) ∇_{x(L)} L‖₂, the gradient
+  of the loss w.r.t. the last layer's pre-activations. For softmax-CE this is
+  ‖softmax(z) − 1_y‖₂ (computed by ``repro.models.lm.token_stats`` /
+  ``repro.kernels.ce_score``). The constant L·ρ is common to all samples and
+  cancels when normalising to a distribution, so we drop it.
+
+* ``variance_reduction`` — eq. 23: Tr V_u[G] − Tr V_g[wG]
+  = (mean ‖G‖)² · B · ‖g − u‖₂².
+
+* ``tau_inverse`` / ``tau`` — eq. 26: the *equivalent batch-size increment*
+  1/τ = sqrt(1 − ‖g−u‖₂² / Σgᵢ²). IS is switched on when the EMA of τ exceeds
+  τ_th; guaranteed speedup when B + 3b < 3τb (backward ≈ 2× forward).
+
+* ``unbiased_weights`` — wᵢ = 1/(B·gᵢ) (eq. 2-5), which keeps the weighted
+  gradient estimator unbiased for the uniform-expectation gradient.
+
+Everything is pure JAX and shape-polymorphic in B so it runs sharded under
+pjit (the score vector is replicated before sampling — B scalars).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def normalize_scores(scores, eps=1e-12):
+    """ĝᵢ → probability distribution gᵢ = ĝᵢ / Σĝⱼ (paper line 7)."""
+    s = scores.astype(jnp.float32)
+    return s / jnp.maximum(s.sum(), eps)
+
+
+def tau_inverse(g):
+    """eq. 26, from a *normalised* score distribution g over B samples."""
+    B = g.shape[0]
+    u = 1.0 / B
+    dist2 = jnp.sum(jnp.square(g - u))
+    sum_g2 = jnp.maximum(jnp.sum(jnp.square(g)), 1e-20)
+    return jnp.sqrt(jnp.clip(1.0 - dist2 / sum_g2, 0.0, 1.0))
+
+
+def tau(g):
+    return 1.0 / jnp.maximum(tau_inverse(g), 1e-6)
+
+
+def variance_reduction(gnorms):
+    """eq. 23 from raw (unnormalised) per-sample gradient-norm estimates."""
+    B = gnorms.shape[0]
+    g = normalize_scores(gnorms)
+    u = 1.0 / B
+    return (jnp.mean(gnorms) ** 2) * B * jnp.sum(jnp.square(g - u))
+
+
+def unbiased_weights(g, idx):
+    """wᵢ = 1/(B·gᵢ) for the sampled indices (eq. 2-5)."""
+    B = g.shape[0]
+    return 1.0 / (B * jnp.maximum(g[idx], 1e-20))
+
+
+def sample_with_replacement(key, g, b):
+    """Draw b indices ∝ g (Algorithm 1, line 8). g must be replicated."""
+    return jax.random.categorical(key, jnp.log(jnp.maximum(g, 1e-20)), shape=(b,))
+
+
+class ISControllerState(NamedTuple):
+    """EMA of τ (Algorithm 1, line 17) + bookkeeping."""
+    tau_ema: jnp.ndarray      # scalar f32
+    steps_is: jnp.ndarray     # int32 — steps with IS active
+    steps_total: jnp.ndarray  # int32
+
+
+def controller_init():
+    return ISControllerState(jnp.zeros((), jnp.float32),
+                             jnp.zeros((), jnp.int32),
+                             jnp.zeros((), jnp.int32))
+
+
+def controller_update(state: ISControllerState, g, a_tau: float,
+                      was_is: jnp.ndarray) -> ISControllerState:
+    t = tau(g)
+    ema = a_tau * state.tau_ema + (1.0 - a_tau) * t
+    return ISControllerState(ema,
+                             state.steps_is + was_is.astype(jnp.int32),
+                             state.steps_total + 1)
+
+
+def speedup_guaranteed(tau_val, B, b):
+    """Paper §3.3: guaranteed speedup iff B + 3b < 3·τ·b."""
+    return B + 3 * b < 3 * tau_val * b
+
+
+def max_variance_reduction(B, b):
+    """§3.3: upper bound 1/b² − 1/B² on achievable variance reduction."""
+    return 1.0 / b ** 2 - 1.0 / B ** 2
+
+
+def max_speedup(B, b):
+    """§3.3: max speedup (B+3b)/(3B) assuming backward = 2× forward."""
+    return (B + 3 * b) / (3 * B)

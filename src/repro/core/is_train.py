@@ -1,0 +1,192 @@
+"""Importance-sampled training step — the paper's Algorithm 1 as one jitted,
+pjit-shardable function.
+
+Per step (gate="cond", faithful):
+
+    if tau_ema > tau_th:                       # IS phase
+        score the pre-sample batch of B samples (ONE forward pass, eq. 20)
+        g ∝ Ĝ;  update τ EMA (line 17)
+        resample b of B with replacement ∝ g (line 8)
+        weighted SGD step with wᵢ = 1/(B gᵢ)   (lines 9-10)
+    else:                                      # uniform phase
+        SGD step on the first b samples (uniform)
+        τ EMA updated from the scores of those b — computed from the SAME
+        logits as the loss, i.e. "for free" (line 15)
+
+``gate="always"`` forces the IS branch (used by the dry-run / roofline so
+the technique's cost is what gets lowered); ``gate="never"`` is the uniform
+baseline.
+
+Distribution: the batch axis is sharded over ("pod","data"); scores are B
+scalars — replicating them (tiny all-gather) lets every device draw the same
+categorical sample, and the row gather lowers to an all-to-all.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import importance as imp
+from repro.models.lm import LM, token_stats, _valid_mask
+
+
+def train_state_init(lm: LM, optimizer, key, params=None):
+    params = lm.init(key) if params is None else params
+    return {
+        "params": params,
+        "opt": optimizer.init(params),
+        "ctrl": imp.controller_init(),
+        "step": jnp.zeros((), jnp.int32),
+        "rng": jax.random.PRNGKey(0),
+    }
+
+
+def _batch_rows(batch, idx):
+    return {k: (jnp.take(v, idx, axis=0) if hasattr(v, "ndim") and v.ndim >= 1 else v)
+            for k, v in batch.items()}
+
+
+def _loss_scores_grads(lm, params, batch, *, remat, score_impl, microbatches=1):
+    """Weighted loss + grads + per-sample scores from the same forward."""
+
+    def loss_fn(p, mb):
+        logits, aux = lm.logits(p, mb, remat=remat)
+        labels = mb["labels"]
+        if lm.cfg.input_mode == "tokens+image":
+            pad = logits.shape[1] - labels.shape[1]
+            if pad:
+                labels = jnp.pad(labels, ((0, 0), (pad, 0)), constant_values=-1)
+        mask = _valid_mask(labels)
+        ce, g2 = token_stats(logits, jnp.maximum(labels, 0), impl=score_impl)
+        denom = jnp.maximum(mask.sum(-1), 1.0)
+        per_sample = (ce * mask).sum(-1) / denom
+        scores = jnp.sqrt(jnp.maximum((g2 * mask).sum(-1), 1e-20))
+        w = mb.get("weights")
+        loss = (per_sample * w).mean() if w is not None else per_sample.mean()
+        return loss + aux, (per_sample, jax.lax.stop_gradient(scores))
+
+    if microbatches == 1:
+        (loss, (ps, sc)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        return loss, ps, sc, grads
+
+    b = batch["labels"].shape[0]
+    mb_size = b // microbatches
+    split = {k: v.reshape((microbatches, mb_size) + v.shape[1:])
+             for k, v in batch.items()}
+
+    def body(carry, mb):
+        acc, loss_acc = carry
+        (loss, (ps, sc)), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+        acc = jax.tree_util.tree_map(jnp.add, acc, g)
+        return (acc, loss_acc + loss), (ps, sc)
+
+    zero = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (gsum, loss_sum), (ps, sc) = jax.lax.scan(body, (zero, 0.0), split)
+    grads = jax.tree_util.tree_map(lambda g: g / microbatches, gsum)
+    return loss_sum / microbatches, ps.reshape(b), sc.reshape(b), grads
+
+
+def build_train_step(lm: LM, run_cfg, optimizer, *, gate=None):
+    """Returns step(state, big_batch) -> (state, metrics).
+
+    ``big_batch`` holds B = presample_ratio × b samples (leading axis B).
+    """
+    icfg = run_cfg.imp
+    b = run_cfg.shape.global_batch
+    B = b * icfg.presample_ratio
+    tau_th = icfg.resolved_tau_th(b)
+    gate = gate or ("cond" if icfg.enabled else "never")
+    remat = run_cfg.remat
+    micro = run_cfg.microbatches
+
+    def opt_apply(state, loss, grads, extra):
+        params, opt_state, m = optimizer.update(
+            grads, state["opt"], state["params"], state["step"])
+        metrics = dict(m)
+        metrics.update(extra)
+        metrics["loss"] = loss
+        new_state = dict(state)
+        new_state.update(params=params, opt=opt_state, step=state["step"] + 1)
+        return new_state, metrics
+
+    def is_branch(state, big_batch, key):
+        # Algorithm 1 lines 6-10 (scoring pass is forward-only)
+        loss_ps, scores = lm.sample_stats(state["params"], big_batch,
+                                          score_impl=icfg.score_impl)
+        if icfg.score_by == "loss":
+            scores = loss_ps            # baseline scheme (paper §4: "loss")
+        g = imp.normalize_scores(scores)
+        idx = imp.sample_with_replacement(key, g, b)
+        w = imp.unbiased_weights(g, idx)
+        small = _batch_rows(big_batch, idx)
+        small["weights"] = w
+        loss, _, _, grads = _loss_scores_grads(
+            lm, state["params"], small, remat=remat,
+            score_impl=icfg.score_impl, microbatches=micro)
+        ctrl = imp.controller_update(state["ctrl"], g, icfg.ema,
+                                     jnp.ones((), jnp.bool_))
+        return loss, grads, ctrl, jnp.float32(1.0)
+
+    def uniform_branch(state, big_batch, key):
+        # Algorithm 1 lines 12-15: τ refreshed from the b-sample forward
+        small = {k: v[:b] for k, v in big_batch.items()}
+        loss, per_sample, scores, grads = _loss_scores_grads(
+            lm, state["params"], small, remat=remat,
+            score_impl=icfg.score_impl, microbatches=micro)
+        if icfg.score_by == "loss":
+            scores = per_sample
+        g = imp.normalize_scores(jax.lax.stop_gradient(scores))
+        ctrl = imp.controller_update(state["ctrl"], g, icfg.ema,
+                                     jnp.zeros((), jnp.bool_))
+        return loss, grads, ctrl, jnp.float32(0.0)
+
+    def step(state, big_batch):
+        key = jax.random.fold_in(state["rng"], state["step"])
+        if gate == "always":
+            loss, grads, ctrl, was_is = is_branch(state, big_batch, key)
+        elif gate == "never":
+            loss, grads, ctrl, was_is = uniform_branch(state, big_batch, key)
+        else:
+            use_is = state["ctrl"].tau_ema > tau_th
+            loss, grads, ctrl, was_is = jax.lax.cond(
+                use_is, is_branch, uniform_branch, state, big_batch, key)
+        if icfg.lr_tau_boost_cap > 0:
+            # paper §5 future work: variance reduction ≙ a τ×-larger batch,
+            # so scale the step like sqrt-batch-size scaling (capped), only
+            # while IS is actually active.
+            boost = jnp.where(
+                was_is > 0,
+                jnp.clip(jnp.sqrt(jnp.maximum(ctrl.tau_ema, 1.0)),
+                         1.0, icfg.lr_tau_boost_cap),
+                1.0)
+            grads = jax.tree_util.tree_map(lambda g: g * boost, grads)
+        new_state, metrics = opt_apply(
+            dict(state, ctrl=ctrl), loss, grads,
+            {"tau": ctrl.tau_ema, "is_active": was_is})
+        return new_state, metrics
+
+    return step
+
+
+def build_uniform_step(lm: LM, run_cfg, optimizer):
+    """Plain-SGD baseline step on a batch of exactly b samples."""
+    remat = run_cfg.remat
+    micro = run_cfg.microbatches
+
+    def step(state, batch):
+        loss, _, _, grads = _loss_scores_grads(
+            lm, state["params"], batch, remat=remat,
+            score_impl=run_cfg.imp.score_impl, microbatches=micro)
+        params, opt_state, m = optimizer.update(
+            grads, state["opt"], state["params"], state["step"])
+        new_state = dict(state)
+        new_state.update(params=params, opt=opt_state, step=state["step"] + 1)
+        m = dict(m)
+        m["loss"] = loss
+        return new_state, m
+
+    return step

@@ -1,0 +1,82 @@
+"""Variance-reduction diagnostics — the machinery behind the paper's
+Fig. 1 (gradient-distance reduction) and Fig. 2 (score correlation).
+
+These compute *true* per-sample gradient norms (batch-size-1 backprop, as
+the paper does for its `gradient-norm` oracle) so they are meant for small
+models / benchmark harnesses, not production steps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import importance as imp
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree_util.tree_leaves(tree)))
+
+
+def _flat_grad(tree):
+    return jnp.concatenate([g.astype(jnp.float32).ravel()
+                            for g in jax.tree_util.tree_leaves(tree)])
+
+
+def per_sample_gradients(lm, params, batch):
+    """(B, P) matrix of flattened per-sample gradients (the paper's oracle:
+    backprop with batch size 1)."""
+    ex = jax.tree_util.tree_map(lambda x: x[:, None], batch)
+
+    def gfn(one):
+        g = jax.grad(lambda p: lm.loss(p, one, remat=False)[0])(params)
+        return _flat_grad(g)
+
+    return jax.lax.map(gfn, ex)
+
+
+def sampling_distributions(lm, params, batch):
+    """All four of the paper's distributions over the pre-sample batch:
+    uniform / loss / upper-bound (ours) / gradient-norm (oracle)."""
+    B = batch["labels"].shape[0]
+    loss_ps, score = lm.sample_stats(params, batch)
+    grads = per_sample_gradients(lm, params, batch)
+    gnorm = jnp.linalg.norm(grads, axis=1)
+    return {
+        "uniform": jnp.full((B,), 1.0 / B),
+        "loss": imp.normalize_scores(loss_ps),
+        "upper-bound": imp.normalize_scores(score),
+        "gradient-norm": imp.normalize_scores(gnorm),
+    }, grads
+
+
+def grad_distance_reduction(lm, params, batch, b, key, n_rounds=10):
+    """Fig. 1: ‖mean-grad(B) − weighted-mean-grad(b)‖₂ per sampling scheme,
+    normalised by the uniform distance. Averaged over ``n_rounds`` draws."""
+    dists, grads = sampling_distributions(lm, params, batch)
+    B = grads.shape[0]
+    gB = grads.mean(0)
+
+    out = {}
+    for name, g in dists.items():
+        d = 0.0
+        for r in range(n_rounds):
+            k = jax.random.fold_in(key, r)
+            idx = imp.sample_with_replacement(k, g, b)
+            w = imp.unbiased_weights(g, idx)
+            gb = (grads[idx] * w[:, None]).mean(0)
+            d += jnp.linalg.norm(gb - gB)
+        out[name] = float(d) / n_rounds
+    base = out["uniform"]
+    return {k: v / base for k, v in out.items()}
+
+
+def correlation_sse(lm, params, batch):
+    """Fig. 2 metric: sum of squared errors of (loss, upper-bound) probs vs
+    the gradient-norm probs."""
+    dists, _ = sampling_distributions(lm, params, batch)
+    ref = dists["gradient-norm"]
+    return {
+        "loss": float(jnp.sum(jnp.square(dists["loss"] - ref))),
+        "upper-bound": float(jnp.sum(jnp.square(dists["upper-bound"] - ref))),
+    }, dists

@@ -1,0 +1,113 @@
+"""Fused cross-entropy + importance-score Pallas TPU kernel.
+
+The scoring pass of the paper (Algorithm 1 line 7) needs, per token,
+three vocab reductions: logsumexp(z), logsumexp(2z), and z_y. A naive
+implementation round-trips the (tokens × V) softmax gradient through HBM
+(V up to 262k). This kernel streams vocab tiles HBM→VMEM once, keeping
+four (tokens_tile,) running accumulators in VMEM scratch — the classic
+online-softmax trick applied to BOTH moments simultaneously, fused with the
+label gather.
+
+Grid: (T/bt, V/bv) — the vocab axis is the minor (sequential) grid dim, so
+scratch persists across it. Tiles are MXU/VPU aligned (bt×bv multiples of
+8×128). Everything accumulates in f32 regardless of input dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(z_ref, labels_ref, ce_ref, g2_ref,
+            m1_ref, s1_ref, m2_ref, s2_ref, zy_ref, *, bv, n_v):
+    v_idx = pl.program_id(1)
+
+    @pl.when(v_idx == 0)
+    def _init():
+        m1_ref[...] = jnp.full_like(m1_ref, NEG)
+        s1_ref[...] = jnp.zeros_like(s1_ref)
+        m2_ref[...] = jnp.full_like(m2_ref, NEG)
+        s2_ref[...] = jnp.zeros_like(s2_ref)
+        zy_ref[...] = jnp.zeros_like(zy_ref)
+
+    z = z_ref[...].astype(jnp.float32)                 # (bt, bv)
+    labels = labels_ref[...]                           # (bt,)
+
+    # streaming logsumexp of z
+    m1 = m1_ref[...]
+    mt = jnp.max(z, axis=-1)
+    m1n = jnp.maximum(m1, mt)
+    s1_ref[...] = s1_ref[...] * jnp.exp(m1 - m1n) + \
+        jnp.sum(jnp.exp(z - m1n[:, None]), axis=-1)
+    m1_ref[...] = m1n
+
+    # streaming logsumexp of 2z
+    z2 = 2.0 * z
+    m2 = m2_ref[...]
+    mt2 = jnp.max(z2, axis=-1)
+    m2n = jnp.maximum(m2, mt2)
+    s2_ref[...] = s2_ref[...] * jnp.exp(m2 - m2n) + \
+        jnp.sum(jnp.exp(z2 - m2n[:, None]), axis=-1)
+    m2_ref[...] = m2n
+
+    # fused label gather: exactly one column matches across all tiles
+    cols = v_idx * bv + jax.lax.broadcasted_iota(jnp.int32, z.shape, 1)
+    match = cols == labels[:, None]
+    zy_ref[...] += jnp.sum(jnp.where(match, z, 0.0), axis=-1)
+
+    @pl.when(v_idx == n_v - 1)
+    def _finalize():
+        lse = m1_ref[...] + jnp.log(s1_ref[...])
+        lse2 = m2_ref[...] + jnp.log(jnp.maximum(s2_ref[...], 1e-30))
+        zy = zy_ref[...]
+        ce_ref[...] = lse - zy
+        g2 = jnp.exp(lse2 - 2.0 * lse) - 2.0 * jnp.exp(zy - lse) + 1.0
+        g2_ref[...] = jnp.maximum(g2, 0.0)
+
+
+def ce_score_pallas(logits, labels, *, block_t=128, block_v=2048,
+                    interpret=False):
+    """logits: (T, V); labels: (T,) int32 → (ce, gnorm2) f32 (T,)."""
+    T, V = logits.shape
+    bt = min(block_t, T)
+    bv = min(block_v, V)
+    # pad to tile multiples; padded logits = NEG (no mass), padded rows inert
+    Tp, Vp = -(-T // bt) * bt, -(-V // bv) * bv
+    if (Tp, Vp) != (T, V):
+        logits = jnp.pad(logits, ((0, Tp - T), (0, Vp - V)),
+                         constant_values=NEG)
+        labels = jnp.pad(labels, (0, Tp - T))
+    n_v = Vp // bv
+
+    kernel = functools.partial(_kernel, bv=bv, n_v=n_v)
+    ce, g2 = pl.pallas_call(
+        kernel,
+        grid=(Tp // bt, n_v),
+        in_specs=[
+            pl.BlockSpec((bt, bv), lambda t, v: (t, v)),
+            pl.BlockSpec((bt,), lambda t, v: (t,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt,), lambda t, v: (t,)),
+            pl.BlockSpec((bt,), lambda t, v: (t,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Tp,), jnp.float32),
+            jax.ShapeDtypeStruct((Tp,), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bt,), jnp.float32),   # m1
+            pltpu.VMEM((bt,), jnp.float32),   # s1
+            pltpu.VMEM((bt,), jnp.float32),   # m2
+            pltpu.VMEM((bt,), jnp.float32),   # s2
+            pltpu.VMEM((bt,), jnp.float32),   # zy
+        ],
+        interpret=interpret,
+    )(logits, labels)
+    return ce[:T], g2[:T]

@@ -1,0 +1,29 @@
+"""jit'd public wrapper for the fused CE+score kernel.
+
+On TPU this calls the Pallas kernel; elsewhere (this CPU container) it runs
+the kernel body in interpret mode. Leading dims are flattened to tokens.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ce_score.ce_score import ce_score_pallas
+
+
+def _on_tpu():
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_v"))
+def ce_score(logits, labels, block_t=128, block_v=2048):
+    """logits: (..., V); labels: (...,) → per-token (ce, gnorm2), f32."""
+    shape = labels.shape
+    V = logits.shape[-1]
+    z = logits.reshape(-1, V)
+    y = labels.reshape(-1).astype(jnp.int32)
+    ce, g2 = ce_score_pallas(z, y, block_t=block_t, block_v=block_v,
+                             interpret=not _on_tpu())
+    return ce.reshape(shape), g2.reshape(shape)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the fused CE + importance-score kernel.
+
+Given logits z (tokens, V) and labels y (tokens,), returns per token:
+    ce      = logsumexp(z) − z_y
+    gnorm2  = ‖softmax(z) − onehot(y)‖₂²  (the paper's Ĝ² per token, eq. 20)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ce_score_ref(logits, labels):
+    z = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(z, axis=-1)
+    zy = jnp.take_along_axis(z, labels[..., None], axis=-1)[..., 0]
+    ce = lse - zy
+    p = jnp.exp(z - lse[..., None])
+    onehot = jax.nn.one_hot(labels, z.shape[-1], dtype=jnp.float32)
+    gnorm2 = jnp.sum(jnp.square(p - onehot), axis=-1)
+    return ce, gnorm2

@@ -1,0 +1,108 @@
+"""Flash-attention forward Pallas TPU kernel (serving/prefill hot spot).
+
+Classic schedule: for each (batch·head, q-tile) the kv axis is the minor
+sequential grid dim; (acc, m, l) live in VMEM scratch across kv tiles.
+Causal/sliding-window masking is positional (q_offset supports decode where
+queries sit at the end of the cache). Tiles are MXU-aligned: bq×d and bk×d
+multiples of (8, 128).
+
+The XLA expression of the same schedule lives in
+repro.models.attention.online_attention — that is what the CPU dry-run
+lowers; this kernel is the TPU drop-in with explicit VMEM control.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, scale, causal, window, q_offset, bq, bk, n_k, skv):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                    # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                    # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (bq, bk)
+
+    q_idx = pl.program_id(1)
+    qpos = q_offset + q_idx * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = k_idx * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < skv                     # padded kv columns are invalid
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + \
+        jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+    m_ref[...] = m_new
+
+    @pl.when(k_idx == n_k - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal=True, window=0, q_offset=0,
+                           scale=None, block_q=128, block_k=512,
+                           interpret=False):
+    """q: (B, sq, d); k, v: (B, skv, d) — B folds batch×heads (GQA handled
+    by the wrapper). Returns o: (B, sq, d)."""
+    B, sq, d = q.shape
+    skv = k.shape[1]
+    scale = scale or d ** -0.5
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    sqp, skp = -(-sq // bq) * bq, -(-skv // bk) * bk
+    if sqp != sq:
+        q = jnp.pad(q, ((0, 0), (0, sqp - sq), (0, 0)))
+    if skp != skv:
+        # padded kv columns are masked off via kpos >= skv
+        k = jnp.pad(k, ((0, 0), (0, skp - skv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, skp - skv), (0, 0)))
+    n_k = skp // bk
+
+    # mask padded kv by window-free positional check: kpos < skv
+    def kernel(q_ref, k_ref, v_ref, o_ref, acc, m, l):
+        _kernel(q_ref, k_ref, v_ref, o_ref, acc, m, l, scale=scale,
+                causal=causal, window=window, q_offset=q_offset,
+                bq=bq, bk=bk, n_k=n_k, skv=skv)
+
+    o = pl.pallas_call(
+        kernel,
+        grid=(B, sqp // bq, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, sqp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return o[:, :sq]

@@ -1,0 +1,37 @@
+"""jit'd public wrapper: (b, s, heads, hd) GQA interface over the Pallas
+flash-attention kernel. Folds batch×kv-heads×group into the kernel's B dim;
+interpret mode off-TPU."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn.flash_attn import flash_attention_pallas
+
+
+def _on_tpu():
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, causal=True, window=0, q_offset=0,
+                    block_q=128, block_k=512):
+    """q: (b, sq, hq, hd); k, v: (b, skv, hkv, hd) → (b, sq, hq, hd)."""
+    b, sq, hq, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    # fold (b, hkv, g) -> B; k/v broadcast over g
+    qf = q.reshape(b, sq, hkv, g, hd).transpose(0, 2, 3, 1, 4) \
+          .reshape(b * hkv * g, sq, hd)
+    kf = jnp.broadcast_to(k.transpose(0, 2, 1, 3)[:, :, None],
+                          (b, hkv, g, skv, hd)).reshape(b * hkv * g, skv, hd)
+    vf = jnp.broadcast_to(v.transpose(0, 2, 1, 3)[:, :, None],
+                          (b, hkv, g, skv, hd)).reshape(b * hkv * g, skv, hd)
+    o = flash_attention_pallas(qf, kf, vf, causal=causal, window=window,
+                               q_offset=q_offset, block_q=block_q,
+                               block_k=block_k, interpret=not _on_tpu())
+    return o.reshape(b, hkv, g, sq, hd).transpose(0, 3, 1, 2, 4) \
+            .reshape(b, sq, hq, hd)

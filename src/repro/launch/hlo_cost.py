@@ -1,0 +1,263 @@
+"""Trip-count-aware cost analysis over compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop body ONCE, which
+undercounts scan-over-layers models by the layer count (verified in
+tests/test_hlo_cost.py). This analyzer walks the HLO computation graph,
+multiplies while bodies by their trip counts (parsed from the loop
+condition's comparison constant — the shape lax.scan emits), and produces:
+
+    flops       — dot/convolution MACs ×2 (the MXU term)
+    bytes       — Σ (operand + result bytes) over real ops; fusions count
+                  as one op (their internals live in registers/VMEM), which
+                  models HBM traffic the way the TPU roofline wants
+    collectives — result bytes per collective kind, trip-multiplied
+
+This is the "profile" the perf loop reads — the dry-run equivalent of a
+wall-clock trace.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+    "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(
+    r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|"
+    r"token|opaque|c64|c128)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|\S+?))\s+"
+    r"([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+_CALLED_RE = re.compile(r"(?:condition|body|to_apply|calls)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_elems_bytes(text):
+    total_b = 0
+    elems = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems.append((n, dt))
+        total_b += n * _DTYPE_BYTES[dt]
+    return elems, total_b
+
+
+_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _dot_flops(result_text, lhs_shape_text, attrs):
+    """2 × result elems × contraction size (lhs shape from the def site)."""
+    res_elems = sum(n for n, _ in _shape_elems_bytes(result_text)[0])
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", attrs)
+    shapes = _SHAPE_RE.findall(lhs_shape_text or "")
+    if not shapes:
+        return 0
+    lhs_dims = shapes[0][1].split(",") if shapes[0][1] else []
+    contr = 1
+    if m and m.group(1):
+        for ax in m.group(1).split(","):
+            if int(ax) < len(lhs_dims):
+                contr *= int(lhs_dims[int(ax)])
+    return 2 * res_elems * contr
+
+
+def parse_hlo(text: str):
+    """Returns (computations, entry_name). Each computation is a list of op
+    dicts: {name, op, result, operands, attrs, called}."""
+    comps = {}
+    entry = None
+    cur = None
+    for line in text.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc and ("->" in line):
+            cur = mc.group(1)
+            comps[cur] = []
+            if line.strip().startswith("ENTRY"):
+                entry = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mo = _OP_RE.match(line)
+        if not mo:
+            continue
+        name, result, op, rest = mo.groups()
+        # split operands from attrs at the matching paren
+        depth = 1
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        operands, attrs = rest[:i], rest[i + 1:]
+        called = [m.group(1) for m in _CALLED_RE.finditer(attrs)]
+        for m in _BRANCHES_RE.finditer(attrs):
+            called += [c.strip().lstrip("%") for c in m.group(1).split(",")]
+        comps[cur].append({"name": name, "op": op, "result": result,
+                           "operands": operands, "attrs": attrs,
+                           "called": called})
+    return comps, entry
+
+
+def _trip_count(cond_ops):
+    """Max integer constant in the loop condition ≈ trip count (lax.scan
+    emits `compare(ind, constant(N)), direction=LT`)."""
+    best = 1
+    for op in cond_ops:
+        if op["op"] == "constant":
+            try:
+                best = max(best, int(op["operands"].strip()))
+            except ValueError:
+                pass
+        for m in _CONST_RE.finditer(op["operands"] + op["attrs"]):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "while", "call", "conditional", "after-all",
+               "iota"}
+
+# Ops whose CPU-HLO appearance is an artifact of the CPU backend's weaker
+# fusion: on TPU these fuse into neighbouring producers/consumers and touch
+# no HBM of their own. Billing them would make every model look memory-bound
+# by 10-50x (measured — see EXPERIMENTS.md §Roofline method).
+_FUSABLE_ELEMENTWISE = {
+    "convert", "multiply", "add", "subtract", "divide", "maximum", "minimum",
+    "exponential", "log", "negate", "abs", "tanh", "logistic", "rsqrt",
+    "sqrt", "power", "select", "compare", "and", "or", "not", "xor",
+    "broadcast", "reshape", "sign", "floor", "ceil", "round-nearest-afz",
+    "clamp", "exponential-minus-one", "log-plus-one", "is-finite",
+    "shift-right-logical", "shift-left", "reduce-precision", "real", "imag",
+}
+
+# slice-like ops read/write only the slice, not the sliced buffer
+_SLICE_RESULT_ONLY = {"dynamic-slice", "slice", "gather", "reverse"}
+
+
+def _bytes_for_op(op, operand_bytes_fn, shape_bytes_fn):
+    """TPU-flavoured HBM traffic for one HLO op (see module docstring)."""
+    o = op["op"]
+    if o in _SKIP_BYTES or o in _FUSABLE_ELEMENTWISE or o.endswith("-done"):
+        return 0
+    rb = shape_bytes_fn(op["result"])
+    if o in _SLICE_RESULT_ONLY:
+        return 2 * rb                       # read slice + write result
+    if o == "dynamic-update-slice":
+        # in-place: read+write the update region only
+        ops_b = operand_bytes_fn(op["operands"], individually=True)
+        upd = ops_b[1] if len(ops_b) > 1 else 0
+        return 2 * upd
+    if o == "fusion":
+        ops_b = operand_bytes_fn(op["operands"], individually=True)
+        small = [b for b in ops_b if b < rb]
+        if any(b == rb for b in ops_b) and small and sum(small) < rb // 4:
+            # in-place-update fusion (scan carry / ys stacking): traffic is
+            # the small inputs read + written, not the aliased big buffer
+            return 2 * sum(small)
+        return rb + sum(ops_b)
+    # dot/conv/reduce/copy/transpose/concatenate/pad/scatter/sort/custom-call
+    return rb + operand_bytes_fn(op["operands"])
+
+
+def analyze(text: str):
+    comps, entry = parse_hlo(text)
+
+    # def-site shape map per computation (operands are listed by name only)
+    shape_of = {}
+    for cname, ops in comps.items():
+        local = {}
+        for op in ops:
+            local[op["name"]] = op["result"]
+        shape_of[cname] = local
+
+    memo = {}
+
+    def _operand_bytes(comp_name, operands_text, individually=False):
+        out = []
+        local = shape_of.get(comp_name, {})
+        for m in _NAME_RE.finditer(operands_text):
+            shp = local.get(m.group(1))
+            if shp:
+                out.append(_shape_elems_bytes(shp)[1])
+        return out if individually else sum(out)
+
+    def cost(comp_name):
+        if comp_name in memo:
+            return memo[comp_name]
+        flops = 0
+        bbytes = 0
+        coll = defaultdict(int)
+        local = shape_of.get(comp_name, {})
+        for op in comps.get(comp_name, ()):
+            o = op["op"]
+            if o == "while":
+                cond, body = None, None
+                for c in op["called"]:
+                    if "cond" in c or "condition" in c:
+                        cond = c
+                    else:
+                        body = body or c
+                # attrs order: condition=..., body=... — fall back to order
+                mcond = re.search(r"condition=%?([\w.\-]+)", op["attrs"])
+                mbody = re.search(r"body=%?([\w.\-]+)", op["attrs"])
+                cond = mcond.group(1) if mcond else cond
+                body = mbody.group(1) if mbody else body
+                trips = _trip_count(comps.get(cond, ()))
+                f, b, c = cost(body)
+                flops += trips * f
+                bbytes += trips * b
+                for k, v in c.items():
+                    coll[k] += trips * v
+                continue
+            if o in ("call", "conditional"):
+                for cname in op["called"]:
+                    f, b, c = cost(cname)
+                    flops += f
+                    bbytes += b
+                    for k, v in c.items():
+                        coll[k] += v
+                continue
+            if o == "fusion":
+                # one HBM-level op; also count dots inside the fused comp
+                for cname in op["called"]:
+                    f, _, c = cost(cname)
+                    flops += f
+                    for k, v in c.items():
+                        coll[k] += v
+            if o in ("dot", "convolution"):
+                first = _NAME_RE.search(op["operands"])
+                lhs_shape = local.get(first.group(1)) if first else None
+                flops += _dot_flops(op["result"], lhs_shape, op["attrs"])
+            base = o.split("-start")[0]
+            if base in COLLECTIVES and not o.endswith("-done"):
+                coll[base] += _shape_elems_bytes(op["result"])[1]
+            bbytes += _bytes_for_op(
+                op,
+                lambda t, individually=False: _operand_bytes(
+                    comp_name, t, individually),
+                lambda t: _shape_elems_bytes(t)[1])
+        memo[comp_name] = (flops, bbytes, dict(coll))
+        return memo[comp_name]
+
+    flops, bbytes, coll = cost(entry)
+    return {"flops": float(flops), "bytes": float(bbytes),
+            "collectives": {k: float(v) for k, v in coll.items()},
+            "collective_bytes": float(sum(coll.values()))}

@@ -1,0 +1,55 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run lowers
+against these; nothing is allocated."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig, presample_ratio=1):
+    """Training batch of B = presample_ratio × global_batch rows."""
+    B = shape.global_batch * presample_ratio
+    s = shape.seq_len
+    i32 = jnp.int32
+    sd = jax.ShapeDtypeStruct
+    if cfg.input_mode == "tokens":
+        return {"tokens": sd((B, s), i32), "labels": sd((B, s), i32)}
+    if cfg.input_mode == "embeddings":
+        return {"embeds": sd((B, s, cfg.d_model), jnp.dtype(cfg.dtype)),
+                "labels": sd((B, s), i32)}
+    if cfg.input_mode == "tokens+image":
+        st = s - cfg.n_prefix_embeds
+        return {"tokens": sd((B, st), i32),
+                "image_embeds": sd((B, cfg.n_prefix_embeds, cfg.d_model),
+                                   jnp.dtype(cfg.dtype)),
+                "labels": sd((B, st), i32)}
+    raise ValueError(cfg.input_mode)
+
+
+def serve_input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """(batch_inputs, cache_shapes) for one serve step.
+
+    prefill: the prompt block (seq_len tokens) into empty caches.
+    decode:  ONE new token with a cache holding seq_len past tokens.
+    """
+    from repro.models.lm import LM
+    b = shape.global_batch
+    i32 = jnp.int32
+    sd = jax.ShapeDtypeStruct
+    lm = LM(cfg)
+    cap = shape.seq_len
+    caches = jax.eval_shape(lambda: lm.caches(b, cap))
+    s = shape.seq_len if shape.kind == "prefill" else 1
+    if cfg.input_mode == "embeddings":
+        batch = {"embeds": sd((b, s, cfg.d_model), jnp.dtype(cfg.dtype))}
+    elif cfg.input_mode == "tokens+image" and shape.kind == "prefill":
+        # anyres-stub prefill: image patch embeddings + text tokens
+        batch = {"tokens": sd((b, s - cfg.n_prefix_embeds), i32),
+                 "image_embeds": sd((b, cfg.n_prefix_embeds, cfg.d_model),
+                                    jnp.dtype(cfg.dtype))}
+    else:  # decode is text-token based after the multimodal prefill
+        batch = {"tokens": sd((b, s), i32)}
+    batch["positions"] = sd((b, s), i32)
+    return batch, caches

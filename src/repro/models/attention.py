@@ -1,0 +1,387 @@
+"""Attention blocks: GQA (global + sliding-window) and MLA (deepseek-v2).
+
+Two execution paths:
+
+* ``online`` — blockwise attention with an online softmax (lax.scan over KV
+  chunks, optionally over Q chunks). Memory-efficient (never materialises
+  the full (Sq, Skv) score matrix), compiles on any backend, and is what the
+  multi-pod dry-run lowers. This is the XLA expression of the flash-attention
+  schedule; the Pallas kernel in ``repro.kernels.flash_attn`` implements the
+  same schedule with explicit VMEM tiling for TPU.
+* ``naive`` — plain einsum attention, used for tiny smoke shapes and as the
+  test oracle.
+
+Decode uses a KV cache; sliding-window layers use a ring-buffer cache of
+size ``window`` (positions stored alongside so masking is exact).
+MLA decode uses the *absorbed* formulation over the compressed cache so the
+full K/V are never materialised.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, dense_init, dtype_of, split_key
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_gqa(key, cfg):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    dt = dtype_of(cfg)
+    k1, k2, k3, k4 = split_key(key, 4)
+    return {
+        "wq": dense_init(k1, (d, hq * hd), dt),
+        "wk": dense_init(k2, (d, hkv * hd), dt),
+        "wv": dense_init(k3, (d, hkv * hd), dt),
+        "wo": dense_init(k4, (hq * hd, d), dt),
+    }
+
+
+def init_mla(key, cfg):
+    d, m = cfg.d_model, cfg.mla
+    hq = cfg.n_heads
+    dt = dtype_of(cfg)
+    k1, k2, k3, k4, k5 = split_key(key, 5)
+    qd = m.nope_head_dim + m.rope_head_dim
+    return {
+        "wq_a": dense_init(k1, (d, m.q_lora_rank), dt),
+        "q_norm": {"scale": jnp.ones((m.q_lora_rank,), dt)},
+        "wq_b": dense_init(k2, (m.q_lora_rank, hq * qd), dt),
+        # separate c_kv / k_rope projections: a fused matrix splits at a
+        # shard-misaligned boundary and GSPMD reshards the activation
+        "wkv_c": dense_init(k3, (d, m.kv_lora_rank), dt),
+        "wk_rope": dense_init(jax.random.fold_in(k3, 1), (d, m.rope_head_dim), dt),
+        "kv_norm": {"scale": jnp.ones((m.kv_lora_rank,), dt)},
+        "wkv_b": dense_init(k4, (m.kv_lora_rank, hq * (m.nope_head_dim + m.v_head_dim)), dt),
+        "wo": dense_init(k5, (hq * m.v_head_dim, d), dt),
+    }
+
+
+def init_attn(key, cfg, kind):
+    if kind == "attn_mla":
+        return init_mla(key, cfg)
+    return init_gqa(key, cfg)
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+def cache_init(cfg, kind, batch, max_len, dtype):
+    """Decode-time cache for one attention layer."""
+    hd = cfg.resolved_head_dim
+    if kind == "attn_mla":
+        m = cfg.mla
+        return {
+            "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_len, m.rope_head_dim), dtype),
+            "pos": jnp.full((batch, max_len), -1, jnp.int32),
+        }
+    length = min(max_len, cfg.sliding_window) if kind == "attn_local" else max_len
+    return {
+        "k": jnp.zeros((batch, length, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, length, cfg.n_kv_heads, hd), dtype),
+        "pos": jnp.full((batch, length), -1, jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# cache insertion (batched serving: positions aligned across the batch)
+# ---------------------------------------------------------------------------
+def _dus_insert(cache, new, positions):
+    """Insert ``new`` tensors (b, s, ...) at slot positions[0,0] % cap via
+    dynamic_update_slice. If s > cap (prefill into a ring buffer) only the
+    trailing window is kept. Multi-token blocks that would wrap are not
+    supported (single-token decode wraps fine step-by-step)."""
+    names = list(new.keys())
+    cap = cache[names[0]].shape[1]
+    s = new[names[0]].shape[1]
+    if s >= cap:
+        sl = lambda t: t[:, -cap:]
+        new = {k: sl(v) for k, v in new.items()}
+        pos_new = positions[:, -cap:]
+        slot = jnp.zeros((), jnp.int32)
+        s = cap
+    else:
+        pos_new = positions
+        slot = (positions[0, 0] % cap).astype(jnp.int32)
+    out = []
+    for k in names:
+        start = (0, slot) + (0,) * (cache[k].ndim - 2)
+        out.append(jax.lax.dynamic_update_slice(
+            cache[k], new[k].astype(cache[k].dtype), start))
+    cp = jax.lax.dynamic_update_slice(cache["pos"], pos_new, (0, slot))
+    return (*out, cp)
+
+
+# ---------------------------------------------------------------------------
+# core attention math
+# ---------------------------------------------------------------------------
+def _mask(q_pos, kv_pos, window):
+    """(…, sq, skv) boolean mask: causal, windowed, and validity."""
+    m = kv_pos[..., None, :] <= q_pos[..., :, None]
+    if window and window > 0:
+        m &= kv_pos[..., None, :] > q_pos[..., :, None] - window
+    m &= kv_pos[..., None, :] >= 0
+    return m
+
+
+def naive_attention(q, k, v, q_pos, kv_pos, window=0, scale=None):
+    """q: (b,sq,hq,hd); k,v: (b,skv,hkv,hd). Oracle path."""
+    b, sq, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    scale = scale or hd ** -0.5
+    qg = q.reshape(b, sq, hkv, g, hd)
+    s = jnp.einsum("bqkgd,bckd->bkgqc", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = _mask(q_pos, kv_pos, window)[:, None, None]            # b,1,1,sq,skv
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqc,bckd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, hq, hd).astype(q.dtype)
+
+
+def online_attention(q, k, v, q_pos, kv_pos, *, window=0, scale=None,
+                     q_chunk=2048, kv_chunk=1024):
+    """Blockwise attention with online softmax (flash schedule in XLA).
+
+    Scans over KV chunks (inner) and Q chunks (outer); peak live score
+    tensor is (b, hq, q_chunk, kv_chunk) in f32.
+    """
+    from repro.distributed.collectives import constrain_bsd
+    q = constrain_bsd(q, head_dim_index=2)
+    k = constrain_bsd(k, head_dim_index=2)
+    v = constrain_bsd(v, head_dim_index=2)
+    b, sq, hq, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = scale or hd ** -0.5
+
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    # pad seq dims to chunk multiples
+    def pad_to(x, n, axis, value=0):
+        pad = (-x.shape[axis]) % n
+        if pad == 0:
+            return x
+        cfgp = [(0, 0)] * x.ndim
+        cfgp[axis] = (0, pad)
+        return jnp.pad(x, cfgp, constant_values=value)
+
+    qp = pad_to(q, q_chunk, 1)
+    qpp = pad_to(q_pos, q_chunk, 1, value=-(10 ** 9))  # padded q rows attend nothing
+    kp = pad_to(k, kv_chunk, 1)
+    vp = pad_to(v, kv_chunk, 1)
+    kpp = pad_to(kv_pos, kv_chunk, 1, value=-1)        # invalid kv positions
+
+    nq = qp.shape[1] // q_chunk
+    nk = kp.shape[1] // kv_chunk
+
+    qc = qp.reshape(b, nq, q_chunk, hkv, g, hd).astype(jnp.float32)
+    qpc = qpp.reshape(b, nq, q_chunk)
+    kc = kp.reshape(b, nk, kv_chunk, hkv, hd).astype(jnp.float32)
+    vc = vp.reshape(b, nk, kv_chunk, hkv, hd).astype(jnp.float32)
+    kpc = kpp.reshape(b, nk, kv_chunk)
+
+    # sliding-window banding: a q chunk starting at position p only sees
+    # kv in [p - window, p + q_chunk), i.e. a static-width band of chunks.
+    # Without this, ATTN_LOCAL layers paid full-sequence attention cost
+    # (mask-only limiting): 2x at train_4k, ~10x at prefill_32k (§Perf A2).
+    band = None
+    if window and window > 0:
+        band = min(nk, (window + q_chunk) // kv_chunk + 1)
+
+    def q_step(_, qi):
+        qblk, qpos, qidx = qi                          # (b,qc,hkv,g,hd), (b,qc)
+
+        if band is not None:
+            start = jnp.clip((qidx * q_chunk - window) // kv_chunk,
+                             0, nk - band)
+            kc_b = jax.lax.dynamic_slice_in_dim(kcT, start, band, 0)
+            vc_b = jax.lax.dynamic_slice_in_dim(vcT, start, band, 0)
+            kpc_b = jax.lax.dynamic_slice_in_dim(kpcT, start, band, 0)
+        else:
+            kc_b, vc_b, kpc_b = kcT, vcT, kpcT
+
+        def kv_step(carry, ki):
+            acc, m, l = carry
+            kblk, vblk, kpos = ki
+            s = jnp.einsum("bqkgd,bckd->bkgqc", qblk, kblk) * scale
+            msk = _mask(qpos, kpos, window)[:, None, None]
+            s = jnp.where(msk, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum("bkgqc,bckd->bkgqd", p, vblk)
+            return (acc, m_new, l), None
+
+        from repro.distributed.collectives import constrain
+        acc0 = constrain(jnp.zeros((b, hkv, g, q_chunk, hd), jnp.float32),
+                         "dp", "model", None, None, None)
+        m0 = constrain(jnp.full((b, hkv, g, q_chunk), NEG_INF, jnp.float32),
+                       "dp", "model", None, None)
+        l0 = constrain(jnp.zeros((b, hkv, g, q_chunk), jnp.float32),
+                       "dp", "model", None, None)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0), (kc_b, vc_b, kpc_b))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]   # b,hkv,g,qc,hd
+        return None, out.transpose(0, 3, 1, 2, 4)      # b,qc,hkv,g,hd
+
+    kcT = kc.transpose(1, 0, 2, 3, 4)
+    vcT = vc.transpose(1, 0, 2, 3, 4)
+    kpcT = kpc.transpose(1, 0, 2)
+    _, outs = jax.lax.scan(q_step, None,
+                           (qc.transpose(1, 0, 2, 3, 4, 5),
+                            qpc.transpose(1, 0, 2),
+                            jnp.arange(nq)))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * q_chunk, hq, hd)
+    return out[:, :sq].astype(q.dtype)
+
+
+def attention_op(q, k, v, q_pos, kv_pos, *, window=0, scale=None, impl="auto"):
+    if impl == "naive" or (impl == "auto" and
+                           (q.shape[1] <= 16 or  # decode: partial softmax over
+                            q.shape[1] * k.shape[1] <= 256 * 256)):  # sharded cache
+        return naive_attention(q, k, v, q_pos, kv_pos, window, scale)
+    return online_attention(q, k, v, q_pos, kv_pos, window=window, scale=scale)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+def apply_gqa(params, x, *, cfg, kind, positions, cache=None, impl="auto"):
+    """x: (b, s, d). Returns (y, new_cache).
+
+    Train/prefill: ``cache is None`` → causal self-attention over x (filling
+    and returning a fresh cache when ``positions`` says prefill is needed is
+    handled by the caller via ``make_prefill_cache``).
+    Decode: ``cache`` holds past K/V; x is the new token block (s == 1).
+    """
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    window = cfg.sliding_window if kind == "attn_local" else 0
+
+    q = (x @ params["wq"]).reshape(b, s, hq, hd)
+    k = (x @ params["wk"]).reshape(b, s, hkv, hd)
+    v = (x @ params["wv"]).reshape(b, s, hkv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        o = attention_op(q, k, v, positions, positions, window=window, impl=impl)
+        new_cache = None
+    else:
+        # Batched serving keeps positions aligned across the batch, so the
+        # insert is a dynamic_update_slice at a scalar slot — in-place under
+        # GSPMD (a gather/scatter insert would all-gather the whole cache).
+        ck, cv, cp = _dus_insert(cache, {"k": k, "v": v}, positions)
+        o = attention_op(q, ck, cv, positions, cp, window=window, impl=impl)
+        new_cache = {"k": ck, "v": cv, "pos": cp}
+
+    y = o.reshape(b, s, hq * hd) @ params["wo"]
+    return y, new_cache
+
+
+def prefill_gqa_cache(params, x, *, cfg, kind, positions):
+    """Build the decode cache from a prefill pass (K/V of the prompt)."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    hkv = cfg.n_kv_heads
+    k = (x @ params["wk"]).reshape(b, s, hkv, hd)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    v = (x @ params["wv"]).reshape(b, s, hkv, hd)
+    if kind == "attn_local":
+        w = cfg.sliding_window
+        k, v, pos = k[:, -w:], v[:, -w:], positions[:, -w:]
+    else:
+        pos = positions
+    return {"k": k, "v": v, "pos": pos}
+
+
+# ---------------------------------------------------------------------------
+# MLA block (deepseek-v2)
+# ---------------------------------------------------------------------------
+def _mla_qkv(params, x, cfg, positions):
+    from repro.models.common import rmsnorm
+    m = cfg.mla
+    b, s, _ = x.shape
+    hq = cfg.n_heads
+    ql = rmsnorm(params["q_norm"], x @ params["wq_a"], cfg.norm_eps)
+    q = (ql @ params["wq_b"]).reshape(b, s, hq, m.nope_head_dim + m.rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = rmsnorm(params["kv_norm"], x @ params["wkv_c"], cfg.norm_eps)
+    k_rope = x @ params["wk_rope"]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def apply_mla(params, x, *, cfg, positions, cache=None, impl="auto"):
+    m = cfg.mla
+    b, s, _ = x.shape
+    hq = cfg.n_heads
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, x, cfg, positions)
+    wkv_b = params["wkv_b"].reshape(m.kv_lora_rank, hq, m.nope_head_dim + m.v_head_dim)
+    w_k = wkv_b[..., : m.nope_head_dim]                   # (r, hq, nope)
+    w_v = wkv_b[..., m.nope_head_dim:]                    # (r, hq, v)
+
+    if cache is None:
+        # prefill/train: expand K/V (blockwise path keeps peak bounded)
+        k_nope = jnp.einsum("bsr,rhd->bshd", c_kv, w_k)
+        v = jnp.einsum("bsr,rhd->bshd", c_kv, w_v)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, hq, m.rope_head_dim))],
+            axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, 0),
+                         (0, k.shape[-1] - v.shape[-1])))  # pad v to k width for shared op
+        o = attention_op(q, k, vp, positions, positions, scale=scale, impl=impl)
+        o = o[..., : m.v_head_dim]
+        new_cache = None
+    else:
+        # decode: absorbed attention over the compressed cache
+        cc, cr, cp = _dus_insert(cache, {"c_kv": c_kv, "k_rope": k_rope},
+                                 positions)
+        # q_eff[h] = W_k[:,h] @ q_nope[h] -> score against c_kv directly
+        q_eff = jnp.einsum("bshd,rhd->bshr", q_nope.astype(jnp.float32),
+                           w_k.astype(jnp.float32))
+        sc = jnp.einsum("bshr,bcr->bhsc", q_eff, cc.astype(jnp.float32))
+        sc += jnp.einsum("bshd,bcd->bhsc", q_rope.astype(jnp.float32),
+                         cr.astype(jnp.float32))
+        sc *= scale
+        msk = _mask(positions, cp, 0)[:, None]
+        sc = jnp.where(msk, sc, NEG_INF)
+        p = jax.nn.softmax(sc, axis=-1)
+        ctx = jnp.einsum("bhsc,bcr->bshr", p, cc.astype(jnp.float32))
+        o = jnp.einsum("bshr,rhd->bshd", ctx, w_v.astype(jnp.float32)).astype(x.dtype)
+        new_cache = {"c_kv": cc, "k_rope": cr, "pos": cp}
+
+    y = o.reshape(b, s, hq * m.v_head_dim) @ params["wo"]
+    return y, new_cache
+
+
+def prefill_mla_cache(params, x, *, cfg, positions):
+    from repro.models.common import rmsnorm
+    c_kv = rmsnorm(params["kv_norm"], x @ params["wkv_c"], cfg.norm_eps)
+    k_rope = x @ params["wk_rope"]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return {"c_kv": c_kv, "k_rope": k_rope, "pos": positions}
+
+
+def apply_attn(params, x, *, cfg, kind, positions, cache=None, impl="auto"):
+    if kind == "attn_mla":
+        return apply_mla(params, x, cfg=cfg, positions=positions, cache=cache, impl=impl)
+    return apply_gqa(params, x, cfg=cfg, kind=kind, positions=positions,
+                     cache=cache, impl=impl)

@@ -1,0 +1,88 @@
+"""Shared model components: norms, rotary embeddings, init helpers.
+
+Parameters are plain pytrees (nested dicts of jnp arrays). Sharding is
+derived from parameter *paths* by ``repro.distributed.sharding`` — keep
+parameter names stable and descriptive.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initialisers
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, dtype, in_axis=0):
+    """Truncated-normal fan-in init (maxtext-style)."""
+    fan_in = shape[in_axis]
+    std = 1.0 / np.sqrt(fan_in)
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def embed_init(key, shape, dtype, std=0.02):
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def zeros(shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def rmsnorm_init(d, dtype):
+    return {"scale": ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim, theta):
+    half = head_dim // 2
+    return 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(head_dim, theta))          # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(ang)[..., :, None, :]                        # (..., seq, 1, hd/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+def act_fn(name):
+    return {"swiglu": jax.nn.silu, "geglu": jax.nn.gelu, "gelu": jax.nn.gelu,
+            "silu": jax.nn.silu, "tanh": jnp.tanh}[name]
+
+
+def split_key(key, n):
+    return list(jax.random.split(key, n))
+
+
+def tree_size(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))

@@ -1,0 +1,140 @@
+"""Analytic parameter counting per config — used for roofline MODEL_FLOPS
+(6·N·D dense / 6·N_active·D MoE) and for sanity checks against the actual
+initialised pytree."""
+from __future__ import annotations
+
+from repro.configs.base import (ATTN, ATTN_LOCAL, ATTN_MLA, MAMBA2, MLSTM,
+                                SHARED_ATTN, SLSTM)
+
+
+def _attn_params(cfg, kind):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    if kind == ATTN_MLA:
+        m = cfg.mla
+        qd = m.nope_head_dim + m.rope_head_dim
+        return (d * m.q_lora_rank + m.q_lora_rank * cfg.n_heads * qd
+                + d * (m.kv_lora_rank + m.rope_head_dim)
+                + m.kv_lora_rank * cfg.n_heads * (m.nope_head_dim + m.v_head_dim)
+                + cfg.n_heads * m.v_head_dim * d)
+    return d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd + cfg.n_heads * hd * d
+
+
+def _ffn_params(cfg, dense_ffn, active_only):
+    d = cfg.d_model
+    m = cfg.moe
+    if m.n_experts and not dense_ffn:
+        routed = (m.n_experts_pad or m.n_experts) * 3 * d * m.d_expert
+        if active_only:
+            routed = m.top_k * 3 * d * m.d_expert
+        shared = 3 * d * m.d_expert * m.n_shared_experts
+        return d * m.n_experts + routed + shared
+    mult = 3 if cfg.act in ("swiglu", "geglu") else 2
+    return mult * d * cfg.d_ff if cfg.d_ff else 0
+
+
+def _recurrent_params(cfg, kind):
+    d = cfg.d_model
+    sc = cfg.ssm
+    if kind == MAMBA2:
+        d_in = sc.expand * d
+        nh = d_in // sc.head_dim
+        return (d * (2 * d_in + 2 * sc.d_state + nh)
+                + sc.d_conv * (d_in + 2 * sc.d_state) + 3 * nh + d_in + d_in * d)
+    if kind == MLSTM:
+        d_in = 2 * d
+        nh = cfg.n_heads
+        return d * 2 * d_in + 4 * d_in + 3 * d_in * d_in + d_in * 2 * nh + d_in + d_in * d
+    if kind == SLSTM:
+        nh = cfg.n_heads
+        hd = d // nh
+        return d * 4 * d + nh * hd * 4 * hd + d * d + d
+    raise ValueError(kind)
+
+
+def _block_params(cfg, kind, dense_ffn, active_only):
+    d = cfg.d_model
+    n = d  # norm1
+    if kind in (ATTN, ATTN_LOCAL, ATTN_MLA, SHARED_ATTN):
+        k = ATTN if kind == SHARED_ATTN else kind
+        n += _attn_params(cfg, k)
+        if cfg.d_ff or cfg.moe.n_experts:
+            n += d + _ffn_params(cfg, dense_ffn, active_only)
+    else:
+        n += _recurrent_params(cfg, kind)
+    return n
+
+
+def _layer_attn_flops(cfg, kind, b, sq, skv):
+    """Score+value einsum FLOPs for one layer (4·b·sq·skv_eff·heads·dim)."""
+    hd = cfg.resolved_head_dim
+    if kind in (ATTN, SHARED_ATTN):
+        return 4 * b * sq * skv * cfg.n_heads * hd
+    if kind == ATTN_LOCAL:
+        return 4 * b * sq * min(skv, cfg.sliding_window) * cfg.n_heads * hd
+    if kind == ATTN_MLA:
+        r = cfg.mla.kv_lora_rank + cfg.mla.rope_head_dim
+        return 4 * b * sq * skv * cfg.n_heads * r
+    if kind == MAMBA2:
+        sc = cfg.ssm
+        d_in = sc.expand * cfg.d_model
+        nh = d_in // sc.head_dim
+        q = min(sc.chunk, sq)
+        return 4 * b * sq * q * nh * (sc.d_state + sc.head_dim)
+    if kind == MLSTM:
+        d_in = 2 * cfg.d_model
+        hd_m = d_in // cfg.n_heads
+        q = min(cfg.ssm.chunk, sq)
+        return 4 * b * sq * q * cfg.n_heads * hd_m
+    if kind == SLSTM:
+        hd_s = cfg.d_model // cfg.n_heads
+        return 2 * b * sq * cfg.n_heads * hd_s * 4 * hd_s
+    return 0
+
+
+def attn_flops(cfg, b, sq, skv, causal=True):
+    """Total attention/state-mixing FLOPs for one forward pass."""
+    eff = 0
+    for seg in cfg.segments:
+        for kind in seg.pattern:
+            f = _layer_attn_flops(cfg, kind, b, sq, skv)
+            if causal and kind in (ATTN, ATTN_MLA, SHARED_ATTN) and sq == skv:
+                f //= 2
+            eff += seg.repeats * f
+    return eff
+
+
+def model_flops(cfg, shape, variant="uniform", presample_ratio=3):
+    """Useful FLOPs per step: 6·N_active·D for train (+2·N·D·ratio for the
+    IS scoring forward), 2·N_active·D + attention for serving."""
+    Na = count_params(cfg, active_only=True)
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        D = b * s
+        f = 6 * Na * D + 3 * attn_flops(cfg, b, s, s)    # fwd+bwd attention
+        if variant.startswith("is"):
+            B = b * presample_ratio
+            f += 2 * Na * B * s + attn_flops(cfg, B, s, s)
+        return f
+    if shape.kind == "prefill":
+        return 2 * Na * b * s + attn_flops(cfg, b, s, s)
+    # decode: one token against a seq_len cache
+    return 2 * Na * b + attn_flops(cfg, b, 1, s, causal=False)
+
+
+def count_params(cfg, active_only=False):
+    total = 0
+    if cfg.input_mode in ("tokens", "tokens+image"):
+        total += cfg.vocab_size * cfg.d_model
+    for seg in cfg.segments:
+        shared_counted = False
+        for kind in seg.pattern:
+            if kind == SHARED_ATTN:
+                if not shared_counted:
+                    total += _block_params(cfg, kind, seg.dense_ffn, active_only)
+                    shared_counted = True
+                continue
+            total += seg.repeats * _block_params(cfg, kind, seg.dense_ffn, active_only)
+    total += cfg.d_model  # final norm
+    if not cfg.tie_embeddings:
+        total += cfg.d_model * cfg.vocab_size
+    return total

@@ -1,0 +1,204 @@
+"""LMModel facade: init / train-forward / per-sample loss+score / serve.
+
+The per-sample score is the paper's upper bound Ĝᵢ (eq. 20). For softmax
+cross-entropy the last-layer pre-activation gradient is softmax(z) − 1_y, so
+
+    Ĝᵢ² ∝ Σ_tokens ‖softmax(z_t) − 1_{y_t}‖₂²
+        = Σ_t [ exp(lse2_t − 2·lse_t) − 2·exp(z_{t,y} − lse_t) + 1 ]
+
+with lse = logsumexp(z) and lse2 = logsumexp(2z). All three statistics are
+streaming reductions over the vocab axis — the "chunked" implementation
+never materialises the softmax gradient (the paper-faithful "naive" path
+does, and is kept as the reference / baseline for §Perf).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+from repro.models.common import dtype_of
+
+
+def _valid_mask(labels):
+    return (labels >= 0).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# per-token CE statistics (three implementations)
+# ---------------------------------------------------------------------------
+def token_stats_naive(logits, labels):
+    """Paper-faithful reference: materialises the softmax gradient.
+
+    Returns (ce, gnorm2) per token, f32.
+    """
+    z = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(z, axis=-1)
+    onehot = jax.nn.one_hot(labels, z.shape[-1], dtype=jnp.float32)
+    ce = -(logp * onehot).sum(-1)
+    g = jnp.exp(logp) - onehot               # the last-layer gradient itself
+    gnorm2 = jnp.square(g).sum(-1)
+    return ce, gnorm2
+
+
+def token_stats_chunked(logits, labels, chunk=8192):
+    """Streaming reductions over vocab chunks: lse, lse2, z_y only."""
+    z = logits.astype(jnp.float32)
+    V = z.shape[-1]
+    chunk = min(chunk, V)
+    pad = (-V) % chunk
+    if pad:
+        z = jnp.pad(z, ((0, 0),) * (z.ndim - 1) + ((0, pad),),
+                    constant_values=-1e30)
+    n = z.shape[-1] // chunk
+    zc = z.reshape(z.shape[:-1] + (n, chunk))
+
+    def step(carry, zi):
+        m1, s1, m2, s2 = carry
+        mi = zi.max(-1)
+        m1n = jnp.maximum(m1, mi)
+        s1 = s1 * jnp.exp(m1 - m1n) + jnp.exp(zi - m1n[..., None]).sum(-1)
+        z2 = 2.0 * zi
+        mi2 = z2.max(-1)
+        m2n = jnp.maximum(m2, mi2)
+        s2 = s2 * jnp.exp(m2 - m2n) + jnp.exp(z2 - m2n[..., None]).sum(-1)
+        return (m1n, s1, m2n, s2), None
+
+    shape = z.shape[:-1]
+    init = (jnp.full(shape, -jnp.inf), jnp.zeros(shape),
+            jnp.full(shape, -jnp.inf), jnp.zeros(shape))
+    (m1, s1, m2, s2), _ = jax.lax.scan(
+        step, init, jnp.moveaxis(zc, -2, 0))
+    lse = m1 + jnp.log(s1)
+    lse2 = m2 + jnp.log(s2)
+    zy = jnp.take_along_axis(logits.astype(jnp.float32), labels[..., None],
+                             axis=-1)[..., 0]
+    ce = lse - zy
+    gnorm2 = jnp.exp(lse2 - 2 * lse) - 2 * jnp.exp(zy - lse) + 1.0
+    return ce, jnp.maximum(gnorm2, 0.0)
+
+
+def token_stats_fused(logits, labels):
+    """Direct reductions over the vocab axis — the production path under
+    pjit. The vocab dim stays sharded: GSPMD lowers max/sum to local
+    reductions + a tiny (b, s) all-reduce, and XLA fuses the exp into the
+    reduction epilogue (no (b, s, V) f32 materialisation on TPU). The
+    explicit chunk-scan variant reshapes across the sharded vocab dim and
+    triggers a full logits all-to-all — measured in §Perf."""
+    z = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(z, axis=-1, keepdims=True))
+    e = jnp.exp(z - m)
+    s1 = e.sum(-1)
+    s2 = jnp.square(e).sum(-1)
+    lse = m[..., 0] + jnp.log(s1)
+    lse2 = 2.0 * m[..., 0] + jnp.log(jnp.maximum(s2, 1e-30))
+    zy = jnp.take_along_axis(z, labels[..., None], axis=-1)[..., 0]
+    ce = lse - zy
+    gnorm2 = jnp.exp(lse2 - 2 * lse) - 2 * jnp.exp(zy - lse) + 1.0
+    return ce, jnp.maximum(gnorm2, 0.0)
+
+
+def token_stats(logits, labels, impl="fused"):
+    if impl == "naive":
+        return token_stats_naive(logits, labels)
+    if impl == "pallas":
+        from repro.kernels.ce_score import ops as ce_ops
+        return ce_ops.ce_score(logits, labels)
+    if impl == "chunked":
+        return token_stats_chunked(logits, labels)
+    return token_stats_fused(logits, labels)
+
+
+# ---------------------------------------------------------------------------
+# model facade
+# ---------------------------------------------------------------------------
+class LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- init ---------------------------------------------------------------
+    def init(self, key):
+        return tfm.init_params(key, self.cfg)
+
+    def init_shapes(self, key):
+        return jax.eval_shape(self.init, key)
+
+    # -- forward ------------------------------------------------------------
+    def hidden(self, params, batch, *, remat=False, impl="auto"):
+        cfg = self.cfg
+        x = tfm.embed_inputs(params, cfg, batch)
+        b, s = x.shape[:2]
+        positions = batch.get("positions")
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        h, _, aux = tfm.apply_stack(params, cfg, x, positions, remat=remat, impl=impl)
+        return h, aux
+
+    def logits(self, params, batch, *, remat=False, impl="auto"):
+        h, aux = self.hidden(params, batch, remat=remat, impl=impl)
+        return tfm.logits_fn(params, self.cfg, h), aux
+
+    # -- training loss ------------------------------------------------------
+    def loss(self, params, batch, *, remat=True, impl="auto", score_impl="fused"):
+        """Mean (optionally per-sample-weighted) CE + router aux.
+
+        ``batch["weights"]`` (b,) — the paper's unbiasedness weights wᵢ.
+        Returns (loss, metrics).
+        """
+        cfg = self.cfg
+        logits, aux = self.logits(params, batch, remat=remat, impl=impl)
+        labels = batch["labels"]
+        if cfg.input_mode == "tokens+image":
+            pad = logits.shape[1] - labels.shape[1]
+            if pad:  # image prefix positions carry no loss
+                labels = jnp.pad(labels, ((0, 0), (pad, 0)), constant_values=-1)
+        mask = _valid_mask(labels)
+        ce, _ = token_stats(logits, jnp.maximum(labels, 0), impl=score_impl)
+        per_tok = ce * mask
+        per_sample = per_tok.sum(-1) / jnp.maximum(mask.sum(-1), 1.0)
+        w = batch.get("weights")
+        if w is None:
+            loss = per_sample.mean()
+        else:
+            loss = (per_sample * w).mean()
+        total = loss + aux
+        return total, {"ce": per_sample.mean(), "aux": aux,
+                       "tokens": mask.sum()}
+
+    # -- per-sample loss + importance score (forward only) -------------------
+    def sample_stats(self, params, batch, *, score_impl="fused", impl="auto"):
+        """Returns (per_sample_loss, per_sample_score) — one forward pass,
+        no gradients. The paper's scoring phase (Algorithm 1, line 7)."""
+        cfg = self.cfg
+        logits, _ = self.logits(jax.lax.stop_gradient(params), batch, impl=impl)
+        labels = batch["labels"]
+        if cfg.input_mode == "tokens+image":
+            pad = logits.shape[1] - labels.shape[1]
+            if pad:
+                labels = jnp.pad(labels, ((0, 0), (pad, 0)), constant_values=-1)
+        mask = _valid_mask(labels)
+        ce, g2 = token_stats(logits, jnp.maximum(labels, 0), impl=score_impl)
+        denom = jnp.maximum(mask.sum(-1), 1.0)
+        loss_ps = (ce * mask).sum(-1) / denom
+        score = jnp.sqrt(jnp.maximum((g2 * mask).sum(-1), 1e-20))
+        return loss_ps, score
+
+    # -- serving ------------------------------------------------------------
+    def caches(self, batch_size, max_len, dtype=None):
+        dt = dtype or dtype_of(self.cfg)
+        return tfm.caches_init(self.cfg, batch_size, max_len, dt)
+
+    def serve_step(self, params, caches, batch, *, impl="auto"):
+        """One serve step: ``batch["tokens"]`` (b, s) new tokens at
+        ``batch["positions"]`` (b, s). Prefill = long s into empty caches;
+        decode = s == 1 into filled caches. Returns (logits, new_caches)."""
+        cfg = self.cfg
+        x = tfm.embed_inputs(params, cfg, batch)
+        positions = batch["positions"]
+        h, new_caches, _ = tfm.apply_stack(params, cfg, x, positions,
+                                           caches=caches, impl=impl)
+        return tfm.logits_fn(params, cfg, h[:, -1:]), new_caches

@@ -1,0 +1,33 @@
+"""Dense feed-forward blocks (SwiGLU / GELU)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.common import act_fn, dense_init, dtype_of, split_key
+
+
+def init_mlp(key, cfg, d_ff=None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = dtype_of(cfg)
+    if cfg.act in ("swiglu", "geglu"):
+        k1, k2, k3 = split_key(key, 3)
+        return {
+            "w_gate": dense_init(k1, (d, f), dt),
+            "w_up": dense_init(k2, (d, f), dt),
+            "w_down": dense_init(k3, (f, d), dt),
+        }
+    k1, k2 = split_key(key, 2)
+    return {
+        "w_up": dense_init(k1, (d, f), dt),
+        "w_down": dense_init(k2, (f, d), dt),
+    }
+
+
+def apply_mlp(params, x, cfg):
+    a = act_fn(cfg.act)
+    if "w_gate" in params:
+        h = a(x @ params["w_gate"]) * (x @ params["w_up"])
+    else:
+        h = a(x @ params["w_up"])
+    return h @ params["w_down"]

@@ -1,0 +1,148 @@
+"""Mixture-of-Experts FFN: top-k routing with GShard-style capacity dispatch.
+
+Dispatch/combine are expressed as dense einsums over an (experts, capacity)
+layout so expert parallelism is a *sharding* decision: sharding the expert
+axis over the ``model`` mesh axis turns the dispatch einsum into an
+all-to-all under GSPMD. For expert counts not divisible by the TP degree
+(granite: 40e) we fall back to TP-sharding each expert's hidden dim.
+
+The router aux (load-balance) loss follows Switch Transformer:
+``aux = E * sum_e f_e * p_e`` with f the fraction of tokens dispatched to e
+and p the mean router probability of e.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import act_fn, dense_init, dtype_of, split_key
+
+
+def init_moe(key, cfg):
+    d = cfg.d_model
+    m = cfg.moe
+    ep = m.n_experts_pad or m.n_experts   # padded experts are never routed to
+    dt = dtype_of(cfg)
+    k1, k2, k3, k4, k5 = split_key(key, 5)
+    p = {
+        "router": dense_init(k1, (d, m.n_experts), jnp.float32),
+        "experts": {
+            "w_gate": dense_init(k2, (ep, d, m.d_expert), dt),
+            "w_up": dense_init(k3, (ep, d, m.d_expert), dt),
+            "w_down": dense_init(k4, (ep, m.d_expert, d), dt),
+        },
+    }
+    if m.n_shared_experts:
+        f = m.d_expert * m.n_shared_experts
+        ks = split_key(k5, 3)
+        p["shared"] = {
+            "w_gate": dense_init(ks[0], (d, f), dt),
+            "w_up": dense_init(ks[1], (d, f), dt),
+            "w_down": dense_init(ks[2], (f, d), dt),
+        }
+    return p
+
+
+def _capacity(n_tokens, m):
+    cap = int(m.capacity_factor * m.top_k * n_tokens / m.n_experts)
+    return max(cap, m.top_k)
+
+
+GROUP_TOKENS = 512   # max tokens per dispatch group (GShard grouping keeps
+                     # the (tokens, E, C) one-hots linear in tokens —
+                     # capacity C is per-group, and the dispatch einsum cost
+                     # t*C*d is QUADRATIC in group size; 512 makes it
+                     # negligible next to expert compute). Perf: ungrouped
+                     # dispatch made granite-moe train compute-bound at
+                     # 268 s; 4096-token groups still wasted 16 s/step.
+
+
+def apply_moe(params, x, cfg):
+    """x: (b, s, d) -> (y, aux_loss). Group-batched GShard dispatch.
+
+    Groups are ALIGNED WITH DATA SHARDS (g is a multiple of the dp degree)
+    so the group axis shards over dp and the dispatch einsums stay local
+    per shard; with the expert axis model-sharded, dispatch/combine lower
+    to an all-to-all rather than an all-reduce of full expert buffers
+    (misaligned groups cost granite-moe 218 s of collectives — see
+    EXPERIMENTS.md §Perf hillclimb B).
+    """
+    from repro.distributed.collectives import _mesh_axes, constrain
+    m = cfg.moe
+    ep = m.n_experts_pad or m.n_experts
+    b, s, d = x.shape
+    t = b * s
+    axes = _mesh_axes() or {}
+    dpn = int(np.prod([axes.get(a, 1) for a in ("pod", "data")]))
+    g = max(t // GROUP_TOKENS, dpn if dpn and t % dpn == 0 else 1, 1)
+    while t % g:
+        g -= 1
+    tg = t // g
+    cap = _capacity(tg, m)
+
+    xg = constrain(x.reshape(g, tg, d), "dp", None, None)
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, m.top_k)        # (g,t,k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, k) choice within its expert's per-group buffer
+    onehot = jax.nn.one_hot(expert_idx, m.n_experts, dtype=jnp.int32)  # (g,t,k,E)
+    flat = onehot.reshape(g, tg * m.top_k, m.n_experts)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(g, tg, m.top_k, m.n_experts)
+    pos = (pos * onehot).sum(-1)                                 # (g,t,k)
+    keep = pos < cap
+    gate_vals = gate_vals * keep
+
+    # --- gather/scatter dispatch (megablocks-lite) -----------------------
+    # The dense GShard one-hot dispatch materialises a (g, t, E, C) tensor
+    # (E*C = cf*k*t ≈ 10x tokens for top-8) and pays t*E*C*d einsum flops.
+    # Instead: compute each (expert, slot) -> source-token index and GATHER
+    # rows; combine is a scatter-add. Zero dispatch flops, no one-hot
+    # buffers (§Perf B3: all-gather+all-reduce fell ~20x).
+    tk = tg * m.top_k
+    flat_tok = jnp.broadcast_to(jnp.arange(tg)[:, None], (tg, m.top_k)) \
+        .reshape(tk)                                            # (tk,)
+    flat_e = expert_idx.reshape(g, tk)
+    flat_pos = pos.reshape(g, tk)
+    flat_keep = keep.reshape(g, tk)
+    flat_gate = gate_vals.reshape(g, tk)
+    slot = flat_e * cap + jnp.minimum(flat_pos, cap - 1)        # (g, tk)
+    slot = jnp.where(flat_keep, slot, ep * cap)                 # overflow bin
+    src = jnp.full((g, ep * cap + 1), tg, jnp.int32)            # tg = pad row
+    gidx = jnp.arange(g)[:, None]
+    src = src.at[gidx, slot].set(flat_tok[None].astype(jnp.int32))
+    src = src[:, :-1]                                           # (g, E*C)
+
+    xg_pad = jnp.concatenate(
+        [xg, jnp.zeros((g, 1, d), xg.dtype)], axis=1)           # pad row -> 0
+    xe = jnp.take_along_axis(
+        xg_pad, src[..., None], axis=1).reshape(g, ep, cap, d)
+    xe = constrain(xe, "dp", "model", None, None)
+    a = act_fn(cfg.act)
+    h = a(jnp.einsum("gecd,edf->gecf", xe, params["experts"]["w_gate"])) \
+        * jnp.einsum("gecd,edf->gecf", xe, params["experts"]["w_up"])
+    ye = jnp.einsum("gecf,efd->gecd", h, params["experts"]["w_down"])
+    # NB: no constraint on ye — in TP-mode (w_down sharded on its OUTPUT d)
+    # the gather+scatter combine runs on d-shards and only the final (t, d)
+    # output is re-gathered; constraining ye here forced an all-gather of
+    # the full (E, C, d) capacity buffer (§Perf B4).
+    # combine: scatter-add each kept (token, k) choice, weighted by its gate
+    ye_flat = ye.reshape(g, ep * cap, d)
+    picked = jnp.take_along_axis(
+        ye_flat, jnp.minimum(slot, ep * cap - 1)[..., None], axis=1)
+    picked = picked * (flat_gate * flat_keep)[..., None].astype(ye.dtype)
+    y = jnp.zeros((g, tg, d), ye.dtype).at[gidx, flat_tok[None]].add(picked)
+    y = constrain(y, "dp", None, None)
+
+    if "shared" in params:
+        sh = params["shared"]
+        y = y + (a(xg @ sh["w_gate"]) * (xg @ sh["w_up"])) @ sh["w_down"]
+
+    # Switch-style load-balance aux loss (mean over groups)
+    frac = onehot.astype(jnp.float32).sum(2).mean((0, 1))        # (E,)
+    imp = probs.mean((0, 1))
+    aux = m.n_experts * jnp.sum(frac * imp) * m.router_aux_coef
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,221 @@
+"""State-space / gated-linear-attention blocks.
+
+The workhorse is ``chunked_gla`` — a chunkwise-parallel scan for recurrences
+of the form
+
+    H_t = a_t * H_{t-1} + k_t v_t^T          (a_t scalar per head)
+    y_t = q_t^T H_t
+
+which covers both the Mamba2 SSD recurrence (q=C, k=B, v=dt*x, a=exp(-A dt))
+and the xLSTM mLSTM matrix memory (q, k, v gated, a=f_t). Within a chunk the
+computation is the quadratic "attention form" (MXU-friendly on TPU); across
+chunks only the (heads, dk, dv) boundary states are scanned. This is the
+TPU-native adaptation: chunk size is picked so the chunk working set fits
+VMEM and the intra-chunk matmuls are 128-aligned.
+
+``gla_scan_ref`` is the sequential oracle used by tests and by decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, dtype_of, rmsnorm, split_key
+
+# ---------------------------------------------------------------------------
+# generic gated linear attention
+# ---------------------------------------------------------------------------
+def gla_scan_ref(q, k, v, log_a, h0=None):
+    """Sequential oracle. q,k: (b,s,h,dk); v: (b,s,h,dv); log_a: (b,s,h).
+
+    Returns y: (b,s,h,dv) and final state (b,h,dk,dv).
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    def step(H, inp):
+        qt, kt, vt, at = inp
+        H = at[..., None, None] * H + kt[..., :, None] * vt[..., None, :]
+        yt = jnp.einsum("bhk,bhkv->bhv", qt, H)
+        return H, yt
+
+    xs = (q.astype(jnp.float32).transpose(1, 0, 2, 3),
+          k.astype(jnp.float32).transpose(1, 0, 2, 3),
+          v.astype(jnp.float32).transpose(1, 0, 2, 3),
+          jnp.exp(log_a.astype(jnp.float32)).transpose(1, 0, 2))
+    H, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(v.dtype), H
+
+
+def gla_step(q, k, v, log_a, H):
+    """Single decode step. q,k: (b,1,h,dk); v: (b,1,h,dv); H: (b,h,dk,dv)."""
+    a = jnp.exp(log_a.astype(jnp.float32))[:, 0]            # (b,h)
+    qt, kt, vt = (t.astype(jnp.float32)[:, 0] for t in (q, k, v))
+    H = a[..., None, None] * H + kt[..., :, None] * vt[..., None, :]
+    y = jnp.einsum("bhk,bhkv->bhv", qt, H)
+    return y[:, None].astype(v.dtype), H
+
+
+def chunked_gla(q, k, v, log_a, h0=None, chunk=128):
+    """Chunkwise-parallel GLA. Same contract as ``gla_scan_ref``.
+
+    One sequential ``lax.scan`` over chunks carrying the boundary state, so
+    the live working set is a single chunk's (Q, Q, heads) score tile —
+    mirroring the VMEM tiling a TPU kernel would use. (An earlier all-chunks
+    -at-once einsum formulation peaked at hundreds of GB of temporaries on
+    the production shapes; see EXPERIMENTS.md §Perf.)
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    if s % chunk != 0:
+        pad = (-s) % chunk
+        zp = lambda x: jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+        y, H = chunked_gla(zp(q), zp(k), zp(v), zp(log_a), h0, chunk)
+        return y[:, :s], H
+    from repro.distributed.collectives import constrain, constrain_bsd
+    q = constrain_bsd(q, head_dim_index=2)
+    k = constrain_bsd(k, head_dim_index=2)
+    v = constrain_bsd(v, head_dim_index=2)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    h0 = constrain(h0, "dp", "model", None, None)
+    nc = s // chunk
+    f32 = jnp.float32
+    cm = lambda x: jnp.moveaxis(x.reshape((b, nc, chunk) + x.shape[2:]), 1, 0)
+    qc, kc, vc = cm(q.astype(f32)), cm(k.astype(f32)), cm(v.astype(f32))
+    la = cm(log_a.astype(f32))                               # (nc,b,Q,h)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))[None, :, :, None]
+
+    def body(H, inp):
+        qi, ki, vi, lai = inp                                # (b,Q,h,d*)/(b,Q,h)
+        cum = jnp.cumsum(lai, axis=1)                        # (b,Q,h) inclusive
+        tot = cum[:, -1]                                     # (b,h)
+        # intra-chunk quadratic form; mask BEFORE exp (overflow → NaN grads)
+        diff = cum[:, :, None, :] - cum[:, None, :, :]       # (b,i,j,h)
+        decay = jnp.exp(jnp.where(causal, diff, -1e30))
+        scores = jnp.einsum("bihk,bjhk->bijh", qi, ki) * decay
+        y = jnp.einsum("bijh,bjhv->bihv", scores, vi)
+        # inter-chunk from carried state
+        y += jnp.einsum("bihk,bhkv->bihv", qi * jnp.exp(cum)[..., None], H)
+        # boundary state update
+        w = jnp.exp(tot[:, None, :] - cum)                   # (b,Q,h)
+        state_c = jnp.einsum("bjh,bjhk,bjhv->bhkv", w, ki, vi)
+        H = jnp.exp(tot)[..., None, None] * H + state_c
+        return H, y
+
+    H, ys = jax.lax.scan(body, h0, (qc, kc, vc, la))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, dv)
+    return y.astype(v.dtype), H
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+def _mamba_dims(cfg):
+    d_in = cfg.ssm.expand * cfg.d_model
+    n_heads = d_in // cfg.ssm.head_dim
+    return d_in, n_heads
+
+
+def init_mamba2(key, cfg):
+    d = cfg.d_model
+    sc = cfg.ssm
+    d_in, nh = _mamba_dims(cfg)
+    dt = dtype_of(cfg)
+    k1, k2, k3, k4, k5 = split_key(key, 5)
+    # Projections are SEPARATE matrices (not one fused in_proj) so each
+    # output is independently TP-shardable: a fused projection splits at
+    # shard-misaligned boundaries and GSPMD reshards the whole activation
+    # (measured as ~100 GB of collective-permute per step — §Perf).
+    return {
+        "w_zx": dense_init(k1, (d, 2 * d_in), dt),            # [z, x]
+        "w_bcdt": dense_init(k2, (d, 2 * sc.d_state + nh), dt),  # replicated
+        "conv_x": dense_init(k3, (sc.d_conv, d_in), dt),
+        "conv_bc": dense_init(k5, (sc.d_conv, 2 * sc.d_state), dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "out_norm": {"scale": jnp.ones((d_in,), dt)},
+        "w_out": dense_init(k4, (d_in, d), dt),
+    }
+
+
+def _mamba_conv(u, conv_w, conv_state=None):
+    """Depthwise causal conv over seq. u: (b,s,c); conv_w: (k,c).
+
+    With ``conv_state`` (b,k-1,c) uses it as left context (decode) and
+    returns the updated state.
+    """
+    kw = conv_w.shape[0]
+    if conv_state is None:
+        up = jnp.pad(u, ((0, 0), (kw - 1, 0), (0, 0)))
+    else:
+        up = jnp.concatenate([conv_state, u], axis=1)
+    out = sum(up[:, i:i + u.shape[1]] * conv_w[i] for i in range(kw))
+    new_state = up[:, -(kw - 1):] if kw > 1 else None
+    return jax.nn.silu(out), new_state
+
+
+def mamba2_cache_init(cfg, batch, dtype):
+    sc = cfg.ssm
+    d_in, nh = _mamba_dims(cfg)
+    return {
+        "conv_x": jnp.zeros((batch, sc.d_conv - 1, d_in), dtype),
+        "conv_bc": jnp.zeros((batch, sc.d_conv - 1, 2 * sc.d_state), dtype),
+        "ssm": jnp.zeros((batch, nh, sc.d_state, sc.head_dim), jnp.float32),
+    }
+
+
+def _mamba_proj(params, x, cfg):
+    """Returns z, x_conv, B_conv, C_conv, dt_raw (+ new conv states)."""
+    sc = cfg.ssm
+    d_in, _ = _mamba_dims(cfg)
+    ds = sc.d_state
+    zx = x @ params["w_zx"]
+    z, xs = jnp.split(zx, 2, axis=-1)
+    bcdt = x @ params["w_bcdt"]
+    bc, dt_raw = bcdt[..., : 2 * ds], bcdt[..., 2 * ds:]
+    return z, xs, bc, dt_raw
+
+
+def apply_mamba2(params, x, *, cfg, cache=None):
+    """x: (b,s,d) -> (y, new_cache). Mamba2/SSD with scalar-per-head decay."""
+    sc = cfg.ssm
+    b, s, _ = x.shape
+    d_in, nh = _mamba_dims(cfg)
+    hd, ds = sc.head_dim, sc.d_state
+
+    z, xs, bc, dt_raw = _mamba_proj(params, x, cfg)
+    xs, new_conv_x = _mamba_conv(xs, params["conv_x"],
+                                 None if cache is None else cache["conv_x"])
+    bc, new_conv_bc = _mamba_conv(bc, params["conv_bc"],
+                                  None if cache is None else cache["conv_bc"])
+    Bm, Cm = jnp.split(bc, 2, axis=-1)
+
+    dt_v = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (b,s,nh)
+    a = -jnp.exp(params["a_log"])                                           # (nh,)
+    log_decay = a * dt_v                                                    # (b,s,nh)
+
+    xh = xs.reshape(b, s, nh, hd)
+    q = jnp.broadcast_to(Cm[:, :, None, :], (b, s, nh, ds))
+    k = jnp.broadcast_to(Bm[:, :, None, :], (b, s, nh, ds))
+    v = xh * dt_v[..., None].astype(xh.dtype)
+
+    if cache is None:
+        y, _ = chunked_gla(q, k, v, log_decay, chunk=min(sc.chunk, s))
+        new_ssm = None
+    elif s == 1:
+        y, new_ssm = gla_step(q, k, v, log_decay, cache["ssm"])
+    else:  # prefill into an existing state
+        y, new_ssm = chunked_gla(q, k, v, log_decay, h0=cache["ssm"],
+                                 chunk=min(sc.chunk, s))
+
+    y = y + xh.astype(jnp.float32) * params["d_skip"][:, None]
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+    y = rmsnorm(params["out_norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    out = y @ params["w_out"]
+    new_cache = None if cache is None else {
+        "conv_x": new_conv_x, "conv_bc": new_conv_bc, "ssm": new_ssm}
+    return out, new_cache

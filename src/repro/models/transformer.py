@@ -1,0 +1,227 @@
+"""The generic decoder stack.
+
+A model is a sequence of ``Segment``s; each segment is a homogeneous layer
+pattern scanned over its ``repeats`` (parameters stacked on a leading axis),
+so compile time and HLO size are O(pattern length), not O(depth). Hybrid
+architectures (zamba2's shared attention, gemma3's 5 local : 1 global,
+xLSTM's mLSTM/sLSTM mix) are just patterns.
+
+Serve-time caches mirror the parameter structure (stacked per pattern
+position); prefill and decode share one code path — prefill is "decode with
+an empty cache and a long token block".
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ATTENTION_KINDS, ATTN, ATTN_LOCAL, ATTN_MLA,
+                                MAMBA2, MLSTM, SHARED_ATTN, SLSTM, ModelConfig)
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import mlp as mlp_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.common import dense_init, dtype_of, embed_init, rmsnorm, split_key
+
+
+# ---------------------------------------------------------------------------
+# single block
+# ---------------------------------------------------------------------------
+def _has_ffn(cfg: ModelConfig, kind: str) -> bool:
+    return kind in ATTENTION_KINDS and (cfg.d_ff > 0 or cfg.moe.n_experts > 0)
+
+
+def _is_moe(cfg: ModelConfig, kind: str, dense_ffn: bool) -> bool:
+    return _has_ffn(cfg, kind) and cfg.moe.n_experts > 0 and not dense_ffn
+
+
+def init_block(key, cfg: ModelConfig, kind: str, dense_ffn: bool = False):
+    dt = dtype_of(cfg)
+    k1, k2 = split_key(key, 2)
+    p = {"norm1": {"scale": jnp.ones((cfg.d_model,), dt)}}
+    akind = ATTN if kind == SHARED_ATTN else kind
+    if akind in (ATTN, ATTN_LOCAL, ATTN_MLA):
+        p["inner"] = attn_mod.init_attn(k1, cfg, akind)
+    elif kind == MAMBA2:
+        p["inner"] = ssm_mod.init_mamba2(k1, cfg)
+    elif kind == MLSTM:
+        p["inner"] = xlstm_mod.init_mlstm(k1, cfg)
+    elif kind == SLSTM:
+        p["inner"] = xlstm_mod.init_slstm(k1, cfg)
+    else:
+        raise ValueError(kind)
+    if _has_ffn(cfg, kind):
+        p["norm2"] = {"scale": jnp.ones((cfg.d_model,), dt)}
+        if _is_moe(cfg, kind, dense_ffn):
+            p["ffn"] = moe_mod.init_moe(k2, cfg)
+        else:
+            p["ffn"] = mlp_mod.init_mlp(k2, cfg)
+    return p
+
+
+def block_cache_init(cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype):
+    akind = ATTN if kind == SHARED_ATTN else kind
+    if akind in (ATTN, ATTN_LOCAL, ATTN_MLA):
+        return attn_mod.cache_init(cfg, akind, batch, max_len, dtype)
+    if kind == MAMBA2:
+        return ssm_mod.mamba2_cache_init(cfg, batch, dtype)
+    if kind == MLSTM:
+        return xlstm_mod.mlstm_cache_init(cfg, batch, dtype)
+    if kind == SLSTM:
+        return xlstm_mod.slstm_cache_init(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def apply_block(params, cfg: ModelConfig, kind: str, x, positions,
+                cache=None, dense_ffn=False, impl="auto"):
+    """Pre-norm block with residual. Returns (x, new_cache, aux_loss)."""
+    from repro.distributed.collectives import constrain_bsd
+    x = constrain_bsd(x)   # keep batch (or long-ctx seq) sharded through scans
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    akind = ATTN if kind == SHARED_ATTN else kind
+    if akind in (ATTN, ATTN_LOCAL, ATTN_MLA):
+        y, new_cache = attn_mod.apply_attn(params["inner"], h, cfg=cfg, kind=akind,
+                                           positions=positions, cache=cache, impl=impl)
+    elif kind == MAMBA2:
+        y, new_cache = ssm_mod.apply_mamba2(params["inner"], h, cfg=cfg, cache=cache)
+    elif kind == MLSTM:
+        y, new_cache = xlstm_mod.apply_mlstm(params["inner"], h, cfg=cfg, cache=cache)
+    elif kind == SLSTM:
+        y, new_cache = xlstm_mod.apply_slstm(params["inner"], h, cfg=cfg, cache=cache)
+    else:
+        raise ValueError(kind)
+    x = x + y
+    aux = jnp.zeros((), jnp.float32)
+    if _has_ffn(cfg, kind):
+        h2 = rmsnorm(params["norm2"], x, cfg.norm_eps)
+        if _is_moe(cfg, kind, dense_ffn):
+            y2, aux = moe_mod.apply_moe(params["ffn"], h2, cfg)
+        else:
+            y2 = mlp_mod.apply_mlp(params["ffn"], h2, cfg)
+        x = x + y2
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# segments
+# ---------------------------------------------------------------------------
+def init_segment(key, cfg: ModelConfig, seg):
+    keys = split_key(key, len(seg.pattern) + 1)
+    out = {"stacked": {}}
+    if SHARED_ATTN in seg.pattern:
+        out["shared"] = init_block(keys[-1], cfg, SHARED_ATTN, seg.dense_ffn)
+    for pi, kind in enumerate(seg.pattern):
+        if kind == SHARED_ATTN:
+            out["stacked"][f"p{pi}"] = {}
+            continue
+        ks = jnp.stack(split_key(keys[pi], seg.repeats))
+        out["stacked"][f"p{pi}"] = jax.vmap(
+            lambda k: init_block(k, cfg, kind, seg.dense_ffn))(ks)
+    return out
+
+
+def segment_cache_init(cfg: ModelConfig, seg, batch: int, max_len: int, dtype):
+    caches = {}
+    for pi, kind in enumerate(seg.pattern):
+        one = block_cache_init(cfg, kind, batch, max_len, dtype)
+        caches[f"p{pi}"] = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (seg.repeats,) + a.shape), one)
+    return caches
+
+
+def apply_segment(params, cfg: ModelConfig, seg, x, positions,
+                  caches=None, remat=False, impl="auto"):
+    """Scan the segment pattern over its repeats.
+
+    Returns (x, new_caches, aux_sum).
+    """
+    shared = params.get("shared")
+
+    def body(carry, xs):
+        x, aux_acc = carry
+        stacked_p = xs[0]
+        stacked_c = xs[1] if caches is not None else None
+        new_c = {}
+        for pi, kind in enumerate(seg.pattern):
+            p = shared if kind == SHARED_ATTN else stacked_p[f"p{pi}"]
+            c = None if stacked_c is None else stacked_c[f"p{pi}"]
+            x, nc, aux = apply_block(p, cfg, kind, x, positions, cache=c,
+                                     dense_ffn=seg.dense_ffn, impl=impl)
+            aux_acc = aux_acc + aux
+            if caches is not None:
+                new_c[f"p{pi}"] = nc
+        return (x, aux_acc), (new_c if caches is not None else 0)
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    xs = (params["stacked"],) if caches is None else (params["stacked"], caches)
+    (x, aux), ys = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+    new_caches = ys if caches is not None else None
+    return x, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# full stack
+# ---------------------------------------------------------------------------
+def init_params(key, cfg: ModelConfig):
+    dt = dtype_of(cfg)
+    keys = split_key(key, len(cfg.segments) + 3)
+    p = {}
+    if cfg.input_mode in ("tokens", "tokens+image"):
+        p["embed"] = embed_init(keys[0], (cfg.vocab_size, cfg.d_model), dt)
+    p["segments"] = {
+        f"seg{i}": init_segment(keys[i + 1], cfg, seg)
+        for i, seg in enumerate(cfg.segments)
+    }
+    p["final_norm"] = {"scale": jnp.ones((cfg.d_model,), dt)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(keys[-1], (cfg.d_model, cfg.vocab_size), dt)
+    return p
+
+
+def caches_init(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    return {
+        f"seg{i}": segment_cache_init(cfg, seg, batch, max_len, dtype)
+        for i, seg in enumerate(cfg.segments)
+    }
+
+
+def embed_inputs(params, cfg: ModelConfig, batch):
+    """``batch`` is the input dict from the data pipeline / input_specs."""
+    if cfg.input_mode == "tokens":
+        x = params["embed"][batch["tokens"]]
+    elif cfg.input_mode == "embeddings":
+        x = batch["embeds"].astype(dtype_of(cfg))
+    elif cfg.input_mode == "tokens+image":
+        tok = params["embed"][batch["tokens"]]
+        if "image_embeds" in batch:          # decode steps are text-only
+            img = batch["image_embeds"].astype(dtype_of(cfg))
+            tok = jnp.concatenate([img, tok], axis=1)
+        x = tok
+    else:
+        raise ValueError(cfg.input_mode)
+    return x
+
+
+def apply_stack(params, cfg: ModelConfig, x, positions, caches=None,
+                remat=False, impl="auto"):
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = {} if caches is not None else None
+    for i, seg in enumerate(cfg.segments):
+        c = None if caches is None else caches[f"seg{i}"]
+        x, nc, aux = apply_segment(params["segments"][f"seg{i}"], cfg, seg, x,
+                                   positions, caches=c, remat=remat, impl=impl)
+        aux_total = aux_total + aux
+        if caches is not None:
+            new_caches[f"seg{i}"] = nc
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, new_caches, aux_total
+
+
+def logits_fn(params, cfg: ModelConfig, hidden):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return hidden @ w

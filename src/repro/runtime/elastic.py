@@ -1,0 +1,51 @@
+"""Elastic scaling: rebuild the mesh after a device-count change and
+re-shard state from a checkpoint.
+
+Recovery story for a node failure on a real cluster:
+1. the run dies (collectives can't complete without the lost host);
+2. the scheduler restarts the job with the surviving hosts;
+3. ``remesh()`` builds the largest (data, model) mesh the new device count
+   supports (model degree preserved if possible, data degree shrinks);
+4. state is restored from the latest COMMITted checkpoint with the new
+   shardings (Checkpointer.restore re-lays-out host-side);
+5. the data pipeline re-slices itself from (host_id, n_hosts), and the
+   global batch is kept constant by raising grad-accumulation microbatches.
+
+All pieces are testable on CPU: remesh() math + restore-with-resharding are
+covered in tests/test_runtime.py.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def remesh_shape(n_devices: int, model_degree: int):
+    """Largest (data, model) split for ``n_devices`` keeping TP if possible."""
+    model = model_degree
+    while model > 1 and n_devices % model != 0:
+        model //= 2
+    return n_devices // model, model
+
+
+def remesh(n_devices: int, model_degree: int):
+    data, model = remesh_shape(n_devices, model_degree)
+    return jax.make_mesh((data, model), ("data", "model")), data, model
+
+
+def rebalance_microbatches(global_batch: int, old_dp: int, old_micro: int,
+                           new_dp: int) -> int:
+    """Keep the global batch and per-device memory constant when dp shrinks:
+    micro-batches scale by old_dp/new_dp (rounded up to a divisor)."""
+    target = max(1, (old_micro * old_dp + new_dp - 1) // new_dp)
+    local = max(1, global_batch // new_dp)
+    while local % target != 0 and target < local:
+        target += 1
+    return min(target, local)
+
+
+def recover(ckpt, template_state, mesh, state_specs):
+    """Restore the latest committed checkpoint onto ``mesh``."""
+    from repro.distributed.sharding import to_named
+    shardings = to_named(state_specs, mesh)
+    state, step = ckpt.restore(template_state, shardings=shardings)
+    return state, step

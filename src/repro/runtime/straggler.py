@@ -1,0 +1,60 @@
+"""Straggler mitigation.
+
+On a large pod, a slow host shows up as a growing per-step wall time. The
+monitor keeps an EMA of step time and a deadline (factor × EMA). Two
+mitigations, in escalation order:
+
+1. shrink the importance-sampling pre-sample B toward b (the scoring phase
+   is the elastic part of the step — the paper's τ-gate already makes IS
+   optional, so degrading B trades variance reduction for wall time,
+   never correctness);
+2. signal the caller to skip the straggling step's global sync and re-issue
+   the batch (bounded by ``max_skips``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+@dataclasses.dataclass
+class StragglerState:
+    ema: float = 0.0
+    count: int = 0
+    skips: int = 0
+    b_scale: float = 1.0   # multiplier on presample ratio (1.0 = full B)
+
+
+class StragglerMonitor:
+    def __init__(self, deadline_factor=2.0, alpha=0.9, max_skips=3,
+                 min_b_scale=1 / 3):
+        self.f = deadline_factor
+        self.alpha = alpha
+        self.max_skips = max_skips
+        self.min_b_scale = min_b_scale
+        self.state = StragglerState()
+
+    def deadline(self):
+        if self.state.count < 5:
+            return float("inf")
+        return self.f * self.state.ema
+
+    def observe(self, dt: float):
+        """Record a step time; returns an action dict."""
+        st = self.state
+        over = st.count >= 5 and dt > self.f * st.ema
+        st.ema = dt if st.count == 0 else self.alpha * st.ema + (1 - self.alpha) * dt
+        st.count += 1
+        action = {"over_deadline": over, "b_scale": st.b_scale, "skip": False}
+        if over:
+            if st.b_scale > self.min_b_scale:
+                st.b_scale = max(self.min_b_scale, st.b_scale * 0.5)
+                action["b_scale"] = st.b_scale
+            elif st.skips < self.max_skips:
+                st.skips += 1
+                action["skip"] = True
+        else:
+            st.skips = 0
+            st.b_scale = min(1.0, st.b_scale * 1.1)
+            action["b_scale"] = st.b_scale
+        return action

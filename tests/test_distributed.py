@@ -1,0 +1,34 @@
+"""Multi-device distribution tests.
+
+Each test runs tests/mp_checks.py in a subprocess with an 8-device forced
+host platform (the main pytest process keeps 1 device so smoke tests and
+benches see the normal environment).
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _run(check):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    r = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "mp_checks.py"), check],
+        env=env, capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, f"{check} failed:\n{r.stdout}\n{r.stderr[-3000:]}"
+    assert f"OK {check.split('_')[0]}" in r.stdout or "OK" in r.stdout
+
+
+@pytest.mark.parametrize("check", [
+    "pipeline_parallel",
+    "sharded_is_step_matches_single_device",
+    "compressed_psum",
+    "serve_sharded_equals_single",
+])
+def test_multidevice(check):
+    _run(check)

@@ -1,0 +1,154 @@
+"""Unit + property tests for the paper's core quantities."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import importance as imp
+
+
+def _rand_scores(n, seed=0):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.rand(n).astype(np.float32) + 1e-3)
+
+
+# ---------------------------------------------------------------------------
+# eq. 26: tau
+# ---------------------------------------------------------------------------
+def test_tau_uniform_distribution_is_one():
+    g = jnp.full((64,), 1.0 / 64)
+    assert float(imp.tau(g)) == pytest.approx(1.0, abs=1e-5)
+
+
+def test_tau_concentrated_distribution_is_large():
+    g = jnp.zeros((64,)).at[0].set(1.0)
+    assert float(imp.tau(g)) > 5.0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 200), st.integers(0, 2 ** 31 - 1))
+def test_tau_inverse_in_unit_interval(n, seed):
+    g = imp.normalize_scores(_rand_scores(n, seed))
+    ti = float(imp.tau_inverse(g))
+    assert 0.0 <= ti <= 1.0 + 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(4, 100), st.integers(0, 2 ** 31 - 1))
+def test_variance_reduction_identity_eq23(n, seed):
+    """eq. 23 equals the direct Tr V_u - Tr V_g computation."""
+    gnorms = np.asarray(_rand_scores(n, seed))
+    g = gnorms / gnorms.sum()
+    w = 1.0 / (n * g)
+    # direct: E_u[||G||^2] - E_g[w^2 ||G||^2]  (per supplement eq. 27-28)
+    direct = np.mean(gnorms ** 2) - np.sum(g * (w * gnorms) ** 2)
+    eq23 = float(imp.variance_reduction(jnp.asarray(gnorms)))
+    assert eq23 == pytest.approx(direct, rel=1e-4, abs=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(4, 100), st.integers(0, 2 ** 31 - 1))
+def test_variance_reduction_nonnegative(n, seed):
+    """IS with the optimal distribution never increases variance."""
+    assert float(imp.variance_reduction(_rand_scores(n, seed))) >= -1e-6
+
+
+# ---------------------------------------------------------------------------
+# unbiasedness of the weighted estimator
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(st.integers(8, 40), st.integers(0, 2 ** 31 - 1))
+def test_weighted_estimator_unbiased(n, seed):
+    """E_{i~g}[w_i x_i] == mean(x) for w_i = 1/(n g_i) — exactly, by
+    expectation over the categorical (not Monte Carlo)."""
+    rng = np.random.RandomState(seed)
+    x = rng.randn(n).astype(np.float32)
+    g = np.asarray(imp.normalize_scores(_rand_scores(n, seed + 1)))
+    w = 1.0 / (n * g)
+    expectation = np.sum(g * (w * x))
+    assert expectation == pytest.approx(x.mean(), rel=1e-4, abs=1e-5)
+
+
+def test_sample_with_replacement_distribution():
+    g = imp.normalize_scores(jnp.asarray([1.0, 2.0, 4.0, 8.0]))
+    idx = imp.sample_with_replacement(jax.random.PRNGKey(0), g, 20000)
+    freq = np.bincount(np.asarray(idx), minlength=4) / 20000
+    np.testing.assert_allclose(freq, np.asarray(g), atol=0.02)
+
+
+# ---------------------------------------------------------------------------
+# controller
+# ---------------------------------------------------------------------------
+def test_controller_ema_and_gating():
+    st_ = imp.controller_init()
+    g_flat = jnp.full((64,), 1.0 / 64)
+    g_peak = imp.normalize_scores(jnp.arange(1.0, 65.0) ** 4)
+    for _ in range(50):
+        st_ = imp.controller_update(st_, g_flat, 0.9, jnp.zeros((), bool))
+    tau_flat = float(st_.tau_ema)
+    for _ in range(50):
+        st_ = imp.controller_update(st_, g_peak, 0.9, jnp.ones((), bool))
+    tau_peak = float(st_.tau_ema)
+    assert tau_flat < 1.1
+    assert tau_peak > 1.5
+    assert int(st_.steps_is) == 50 and int(st_.steps_total) == 100
+
+
+def test_speedup_bounds():
+    # paper §3.3: B=3b ⇒ max speedup (B+3b)/(3B) = 2/3 of step time
+    assert imp.max_speedup(384, 128) == pytest.approx(2 / 3)
+    assert imp.speedup_guaranteed(3.0, 384, 128)       # B+3b=768 < 3*3*128=1152
+    assert not imp.speedup_guaranteed(1.5, 384, 128)   # 768 > 576
+
+
+# ---------------------------------------------------------------------------
+# score == true last-layer gradient norm (the bound's key identity)
+# ---------------------------------------------------------------------------
+def test_chunked_score_matches_naive_and_autodiff():
+    from repro.models.lm import token_stats_chunked, token_stats_naive
+    rng = np.random.RandomState(0)
+    logits = jnp.asarray(rng.randn(4, 8, 97).astype(np.float32) * 3)
+    labels = jnp.asarray(rng.randint(0, 97, (4, 8)))
+    ce_n, g2_n = token_stats_naive(logits, labels)
+    ce_c, g2_c = token_stats_chunked(logits, labels, chunk=32)
+    np.testing.assert_allclose(np.asarray(ce_c), np.asarray(ce_n), rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(g2_c), np.asarray(g2_n), rtol=2e-4, atol=2e-5)
+
+    # and against autodiff: d CE / d logits == softmax - onehot
+    def ce_fn(z):
+        return -(jax.nn.log_softmax(z) * jax.nn.one_hot(labels, 97)).sum()
+
+    g = jax.grad(ce_fn)(logits)
+    g2_auto = jnp.square(g).sum(-1)
+    np.testing.assert_allclose(np.asarray(g2_c), np.asarray(g2_auto),
+                               rtol=2e-4, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# beyond-paper: τ-scaled learning rate (the paper's §5 future work)
+# ---------------------------------------------------------------------------
+def test_lr_tau_boost_trains_stably_and_activates():
+    from repro.configs import get_config
+    from repro.configs.base import ISConfig, OptimConfig, RunConfig, ShapeConfig
+    from repro.data.pipeline import SyntheticCLS
+    from repro.runtime.trainer import Trainer
+
+    cfg = get_config("lm-tiny")
+    shape = ShapeConfig("t", seq_len=16, global_batch=16, kind="train")
+    losses = {}
+    for cap in (0.0, 2.0):
+        run = RunConfig(model=cfg, shape=shape,
+                        optim=OptimConfig(name="adamw", lr=1e-3,
+                                          weight_decay=0.0),
+                        imp=ISConfig(enabled=True, presample_ratio=3,
+                                     tau_th=1.2, lr_tau_boost_cap=cap),
+                        remat=False)
+        src = SyntheticCLS(cfg.vocab_size, 16, seed=4, host_id=0, n_hosts=1)
+        tr = Trainer(run, source=src)
+        state, hist = tr.fit(steps=60)
+        assert all(np.isfinite(h["loss"]) for h in hist)
+        assert any(h["is_active"] for h in hist)
+        losses[cap] = float(np.mean([h["loss"] for h in hist[-5:]]))
+    # boosted run must stay finite and in the same convergence regime
+    assert losses[2.0] < losses[0.0] * 3

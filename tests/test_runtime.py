@@ -1,0 +1,251 @@
+"""Substrate tests: checkpointing, data pipeline, optimizer, straggler,
+elastic re-meshing, gradient compression, end-to-end trainer resume."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import Checkpointer
+from repro.configs import get_config
+from repro.configs.base import ISConfig, OptimConfig, RunConfig, ShapeConfig
+from repro.data.pipeline import PipelineState, SyntheticLM
+from repro.optim.api import get_optimizer, sgd, step_drop_schedule
+from repro.runtime.elastic import rebalance_microbatches, remesh_shape
+from repro.runtime.straggler import StragglerMonitor
+from repro.runtime.trainer import Trainer
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip_atomic(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2)
+    state = {"a": jnp.arange(6.0).reshape(2, 3), "b": {"c": jnp.ones((4,))},
+             "step": jnp.asarray(7)}
+    ck.save(10, state, meta={"pipeline": {"epoch": 1, "cursor": 99}})
+    ck.save(20, state)
+    ck.save(30, state)
+    assert ck.steps() == [20, 30]            # keep=2 GC'd step 10
+    restored, step = ck.restore(state)
+    assert step == 30
+    np.testing.assert_array_equal(restored["a"], state["a"])
+    np.testing.assert_array_equal(restored["b"]["c"], state["b"]["c"])
+
+
+def test_checkpoint_uncommitted_ignored(tmp_path):
+    ck = Checkpointer(tmp_path)
+    state = {"a": jnp.zeros((2,))}
+    ck.save(1, state)
+    # simulate a crash mid-save: directory without COMMIT
+    bad = tmp_path / "step_5"
+    bad.mkdir()
+    (bad / "manifest.json").write_text("{}")
+    assert ck.latest_step() == 1
+
+
+def test_checkpoint_async(tmp_path):
+    ck = Checkpointer(tmp_path)
+    state = {"w": jnp.full((8, 8), 3.0)}
+    ck.save_async(42, state)
+    ck.wait()
+    restored, step = ck.restore(state)
+    assert step == 42 and float(restored["w"][0, 0]) == 3.0
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+def test_pipeline_deterministic_and_resumable():
+    src = SyntheticLM(vocab_size=128, seq_len=16, n_examples=64, seed=3,
+                      host_id=0, n_hosts=1)
+    st = PipelineState()
+    b1, st1 = src.batch(st, 8)
+    b1again, _ = src.batch(PipelineState(), 8)
+    np.testing.assert_array_equal(b1["tokens"], b1again["tokens"])
+    b2, st2 = src.batch(st1, 8)
+    assert not np.array_equal(b1["tokens"], b2["tokens"])
+    # resume mid-epoch from serialised state
+    st1b = PipelineState.from_dict(st1.as_dict())
+    b2b, _ = src.batch(st1b, 8)
+    np.testing.assert_array_equal(b2["tokens"], b2b["tokens"])
+
+
+def test_pipeline_host_sharding_partitions_batch():
+    full, _ = SyntheticLM(128, 16, seed=1, host_id=0, n_hosts=1).batch(
+        PipelineState(), 8)
+    h0, _ = SyntheticLM(128, 16, seed=1, host_id=0, n_hosts=2).batch(
+        PipelineState(), 8)
+    h1, _ = SyntheticLM(128, 16, seed=1, host_id=1, n_hosts=2).batch(
+        PipelineState(), 8)
+    np.testing.assert_array_equal(np.concatenate([h0["tokens"], h1["tokens"]]),
+                                  full["tokens"])
+
+
+def test_pipeline_labels_shifted():
+    src = SyntheticLM(128, 16, seed=0, host_id=0, n_hosts=1)
+    b, _ = src.batch(PipelineState(), 4)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+def test_sgd_momentum_matches_reference():
+    cfg = OptimConfig(name="sgd", lr=0.1, momentum=0.9, weight_decay=0.0,
+                      grad_clip=0.0)
+    opt = get_optimizer(cfg)
+    p = {"w": jnp.asarray([1.0, 2.0])}
+    s = opt.init(p)
+    g = {"w": jnp.asarray([0.5, -1.0])}
+    p1, s1, _ = opt.update(g, s, p, jnp.asarray(0))
+    np.testing.assert_allclose(np.asarray(p1["w"]), [1 - 0.05, 2 + 0.1], rtol=1e-6)
+    p2, s2, _ = opt.update(g, s1, p1, jnp.asarray(1))
+    # mu = 0.9*g + g = 1.9g
+    np.testing.assert_allclose(np.asarray(p2["w"]),
+                               [0.95 - 0.1 * 0.95, 2.1 + 0.1 * 1.9], rtol=1e-6)
+
+
+def test_adamw_decreases_loss():
+    cfg = OptimConfig(name="adamw", lr=0.05, grad_clip=0.0, weight_decay=0.0)
+    opt = get_optimizer(cfg)
+    p = {"w": jnp.asarray([3.0])}
+    s = opt.init(p)
+    for i in range(200):
+        g = {"w": 2 * p["w"]}
+        p, s, _ = opt.update(g, s, p, jnp.asarray(i))
+    assert abs(float(p["w"][0])) < 0.1
+
+
+def test_step_drop_schedule():
+    f = step_drop_schedule(0.1, [10, 20], factor=0.5)
+    assert float(f(jnp.asarray(0))) == pytest.approx(0.1)
+    assert float(f(jnp.asarray(15))) == pytest.approx(0.05)
+    assert float(f(jnp.asarray(25))) == pytest.approx(0.025)
+
+
+def test_grad_clip_caps_global_norm():
+    cfg = OptimConfig(name="sgd", lr=1.0, momentum=0.0, weight_decay=0.0,
+                      grad_clip=1.0)
+    opt = get_optimizer(cfg)
+    p = {"w": jnp.zeros((2,))}
+    s = opt.init(p)
+    g = {"w": jnp.asarray([30.0, 40.0])}   # norm 50 -> scaled to 1
+    p1, _, m = opt.update(g, s, p, jnp.asarray(0))
+    np.testing.assert_allclose(np.asarray(p1["w"]), [-0.6, -0.8], rtol=1e-5)
+    assert float(m["grad_norm"]) == pytest.approx(50.0, rel=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# straggler monitor
+# ---------------------------------------------------------------------------
+def test_straggler_shrinks_presample_then_skips():
+    mon = StragglerMonitor(deadline_factor=1.5, max_skips=1)
+    for _ in range(10):
+        mon.observe(1.0)
+    a = mon.observe(10.0)                  # first breach: shrink B
+    assert a["over_deadline"] and a["b_scale"] < 1.0 and not a["skip"]
+    a = mon.observe(10.0)                  # second breach: B at min
+    assert a["b_scale"] == pytest.approx(1 / 3, rel=0.4)
+    a = mon.observe(10.0)                  # third breach: escalate to skip
+    assert a["skip"]
+    a = mon.observe(10.0)                  # skips exhausted: forced sync
+    assert not a["skip"]
+
+
+def test_straggler_recovers():
+    mon = StragglerMonitor(deadline_factor=2.0)
+    for _ in range(10):
+        mon.observe(1.0)
+    mon.observe(5.0)
+    assert mon.state.b_scale < 1.0
+    for _ in range(30):
+        mon.observe(1.0)
+    assert mon.state.b_scale == 1.0
+
+
+# ---------------------------------------------------------------------------
+# elastic
+# ---------------------------------------------------------------------------
+def test_remesh_keeps_model_degree_when_divisible():
+    assert remesh_shape(8, 2) == (4, 2)
+    assert remesh_shape(6, 4) == (3, 2)    # 4 -> 2 (6 % 4 != 0)
+    assert remesh_shape(512, 16) == (32, 16)
+    assert remesh_shape(504, 16) == (63, 8)  # lost a host: TP degrades
+
+
+def test_rebalance_microbatches():
+    assert rebalance_microbatches(256, old_dp=16, old_micro=4, new_dp=8) == 8
+    assert rebalance_microbatches(256, old_dp=16, old_micro=1, new_dp=16) == 1
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+def test_int8_ef_reduces_error_over_steps():
+    from repro.optim.grad_compress import ef_compress_int8, ef_init, dequantize_int8
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(256).astype(np.float32))
+    ef = ef_init(x)
+    key = jax.random.PRNGKey(0)
+    # with EF, the *accumulated* transmitted signal converges to the true sum
+    sent = jnp.zeros_like(x)
+    for i in range(20):
+        (q, scale), ef = ef_compress_int8(x, ef, jax.random.fold_in(key, i))
+        sent = sent + dequantize_int8(q, scale)
+    np.testing.assert_allclose(np.asarray(sent / 20), np.asarray(x),
+                               atol=0.05)
+
+
+def test_topk_ef_preserves_signal():
+    from repro.optim.grad_compress import ef_compress_topk, ef_init, topk_decompress
+    x = jnp.asarray(np.linspace(-1, 1, 64).astype(np.float32))
+    ef = ef_init(x)
+    sent = jnp.zeros_like(x)
+    n = 200   # EF residual is O(1/frac) rounds deep; average over many rounds
+    for _ in range(n):
+        (vals, idx), ef = ef_compress_topk(x, ef, 0.1)
+        sent = sent + topk_decompress(vals, idx, x.shape)
+    np.testing.assert_allclose(np.asarray(sent / n), np.asarray(x), atol=0.1)
+
+
+# ---------------------------------------------------------------------------
+# trainer end-to-end: loss drops, checkpoint resume is exact
+# ---------------------------------------------------------------------------
+def _tiny_run(tmp_path=None, steps=8, enabled=True):
+    cfg = get_config("lm-tiny")
+    shape = ShapeConfig("tiny", seq_len=16, global_batch=8, kind="train")
+    return RunConfig(
+        model=cfg, shape=shape,
+        optim=OptimConfig(name="adamw", lr=1e-3, grad_clip=1.0, weight_decay=0.0),
+        imp=ISConfig(enabled=enabled, presample_ratio=3, tau_th=1.2),
+        steps=steps, remat=False,
+        ckpt_dir=str(tmp_path) if tmp_path else None, ckpt_every=4)
+
+
+def test_trainer_loss_decreases():
+    run = _tiny_run(steps=30)
+    tr = Trainer(run)
+    _, hist = tr.fit(steps=30)
+    first = np.mean([h["loss"] for h in hist[:5]])
+    last = np.mean([h["loss"] for h in hist[-5:]])
+    assert last < first, (first, last)
+
+
+def test_trainer_checkpoint_restart_is_exact(tmp_path):
+    run = _tiny_run(tmp_path, steps=8)
+    t1 = Trainer(run)
+    state_a, hist_a = t1.fit(steps=8)
+
+    # same run, interrupted at step 4 (ckpt_every=4) then restarted
+    run2 = _tiny_run(tmp_path / "b", steps=8)
+    t2 = Trainer(run2)
+    t2.fit(steps=4)
+    t3 = Trainer(run2)
+    state_b, hist_b = t3.fit(steps=8)
+    assert int(jax.device_get(state_b["step"])) == int(jax.device_get(state_a["step"]))
+    la = jax.tree_util.tree_leaves(state_a["params"])
+    lb = jax.tree_util.tree_leaves(state_b["params"])
+    for a, b in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
