@@ -165,7 +165,8 @@ def fig4_finetune(steps=80):
             batch, pstate = tr.source.batch(pstate, tr.B)
             batch = {k: jnp.asarray(v) for k, v in batch.items()}
             state, m = tr.step_fn(state, batch)
-            hist.append({k: float(v) for k, v in m.items()})
+            hist.append({k: float(v) for k, v in m.items()
+                         if getattr(v, "ndim", 0) == 0})
         te = _test_error(lm, state["params"], tr.source)
         out[method] = {
             "train_loss": float(np.mean([h["loss"] for h in hist[-10:]])),

@@ -1,0 +1,108 @@
+"""Scheme comparison: uniform vs presample vs history vs selective.
+
+Trains the same tiny model on SyntheticLM and SyntheticCLS under each
+``repro.sampler`` scheme and records loss-vs-wall-clock, so successive PRs
+can track whether the cheap persistent-memory schemes (history/selective)
+hold their convergence advantage over per-batch presampling. Artifact:
+``benchmarks/artifacts/BENCH_sampler.json``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, save_json
+
+SCHEMES = ("uniform", "presample", "history", "selective")
+
+
+def _run_one(scheme, dataset, steps):
+    from repro.configs import get_config
+    from repro.configs.base import (ISConfig, OptimConfig, RunConfig,
+                                    SamplerConfig, ShapeConfig)
+    from repro.data.pipeline import SyntheticCLS, SyntheticLM
+    from repro.runtime.trainer import Trainer
+
+    cfg = get_config("lm-tiny")
+    run = RunConfig(
+        model=cfg,
+        shape=ShapeConfig("bench", seq_len=32, global_batch=16, kind="train"),
+        optim=OptimConfig(name="adamw", lr=1e-3, weight_decay=0.0),
+        imp=ISConfig(enabled=True, presample_ratio=3, tau_th=1.1),
+        sampler=SamplerConfig(scheme=scheme, min_coverage=0.25,
+                              tau_th=1.005, temperature=0.5),
+        remat=False)
+    src_cls = {"SyntheticLM": SyntheticLM, "SyntheticCLS": SyntheticCLS}[dataset]
+    src = src_cls(cfg.vocab_size, 32, n_examples=1024, seed=13,
+                  host_id=0, n_hosts=1)
+    tr = Trainer(run, source=src)
+
+    # convergence is judged on a FIXED mixed-difficulty probe set, not the
+    # running train loss: SyntheticLM difficulty comes in 1000-id blocks,
+    # so the train loss of a sequential scheme swings with batch content
+    import jax
+    import jax.numpy as jnp
+    probe = {k: jnp.asarray(v) for k, v in
+             src.gather(np.arange(0, src.n, max(src.n // 64, 1))[:64],
+                        epoch=0).items()}
+    probe_fn = jax.jit(lambda p: tr.lm.sample_stats(p, probe)[0].mean())
+
+    t0 = time.perf_counter()
+    curve = []
+
+    def cb(i, m):
+        rec = {"step": i, "t": time.perf_counter() - t0, "loss": m["loss"],
+               "active": m.get("sampler_active", m.get("is_active", 0))}
+        if i % 5 == 0 or i == steps - 1:
+            rec["probe_loss"] = float(probe_fn(tr._last_state["params"]))
+        curve.append(rec)
+
+    # keep a handle on the evolving state for the probe
+    orig_step = tr.step_fn
+
+    def step_keep(state, *a):
+        out = orig_step(state, *a)
+        tr._last_state = out[0]
+        return out
+
+    tr.step_fn = step_keep
+    tr.fit(steps=steps, callback=cb)
+    wall = time.perf_counter() - t0
+    probes = [c["probe_loss"] for c in curve if "probe_loss" in c]
+    return {
+        "scheme": scheme, "dataset": dataset, "steps": steps,
+        "wall_clock_s": wall,
+        # drop compile time from the per-step figure (first step pays the jit)
+        "us_per_step": (wall - curve[0]["t"]) / max(steps - 1, 1) * 1e6,
+        "final_loss": float(np.mean(probes[-2:])),
+        "active_frac": float(np.mean([c["active"] for c in curve])),
+        "store_coverage": tr.sampler.store.coverage(),
+        "curve": curve,
+    }
+
+
+def sampler_compare(steps=60):
+    out = {}
+    for dataset in ("SyntheticLM", "SyntheticCLS"):
+        for scheme in SCHEMES:
+            r = _run_one(scheme, dataset, steps)
+            out[f"{dataset}.{scheme}"] = r
+            emit(f"sampler.{dataset}.{scheme}", r["us_per_step"],
+                 f"final_loss={r['final_loss']:.4f};"
+                 f"active={r['active_frac']:.2f};"
+                 f"coverage={r['store_coverage']:.2f}")
+    # headline: loss reached per second of wall clock, relative to uniform
+    for dataset in ("SyntheticLM", "SyntheticCLS"):
+        u = out[f"{dataset}.uniform"]
+        for scheme in SCHEMES[1:]:
+            r = out[f"{dataset}.{scheme}"]
+            emit(f"sampler.{dataset}.{scheme}.vs_uniform", None,
+                 f"loss_ratio={r['final_loss'] / max(u['final_loss'], 1e-9):.3f};"
+                 f"time_ratio={r['wall_clock_s'] / u['wall_clock_s']:.3f}")
+    save_json("BENCH_sampler", out)
+    return out
+
+
+if __name__ == "__main__":
+    sampler_compare()

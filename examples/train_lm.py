@@ -15,9 +15,11 @@ IS controller's τ EMA).
 import argparse
 
 from repro.configs import get_config
-from repro.configs.base import ISConfig, OptimConfig, RunConfig, ShapeConfig
+from repro.configs.base import (ISConfig, OptimConfig, RunConfig,
+                                SamplerConfig, ShapeConfig)
 from repro.data.pipeline import SyntheticLM
 from repro.runtime.trainer import Trainer
+from repro.sampler import SCHEMES
 
 
 def main():
@@ -29,6 +31,8 @@ def main():
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
     ap.add_argument("--no-is", action="store_true")
+    ap.add_argument("--scheme", default="presample", choices=sorted(SCHEMES),
+                    help="example-selection scheme (repro.sampler)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -38,6 +42,7 @@ def main():
                           kind="train"),
         optim=OptimConfig(name="adamw", lr=args.lr, weight_decay=0.01),
         imp=ISConfig(enabled=not args.no_is, presample_ratio=3),
+        sampler=SamplerConfig(scheme=args.scheme),
         steps=args.steps, remat=True,
         ckpt_dir=args.ckpt, ckpt_every=50,
     )
@@ -48,12 +53,17 @@ def main():
         if i % 10 == 0:
             print(f"step {i:4d} loss {m['loss']:.4f} gnorm "
                   f"{m['grad_norm']:.3f} tau {m.get('tau', 0):.2f} "
+                  f"cov {m.get('store_coverage', 0):.2f} "
                   f"dt {m['dt']:.2f}s", flush=True)
 
     state, hist = trainer.fit(callback=log)
-    print(f"final loss {hist[-1]['loss']:.4f} "
-          f"(params {cfg.param_count() / 1e6:.1f}M, "
-          f"ckpts in {args.ckpt})")
+    if hist:
+        print(f"final loss {hist[-1]['loss']:.4f} "
+              f"(params {cfg.param_count() / 1e6:.1f}M, "
+              f"ckpts in {args.ckpt})")
+    else:
+        print(f"nothing to do: checkpoint in {args.ckpt} is already at "
+              f"step {args.steps} (raise --steps to continue)")
 
 
 if __name__ == "__main__":

@@ -113,9 +113,14 @@ class Checkpointer:
         s = self.steps()
         return s[-1] if s else None
 
-    def restore(self, template_state, step=None, shardings=None):
+    def restore(self, template_state, step=None, shardings=None, strict=True):
         """Restore into the structure of ``template_state``; place on the
-        current mesh per ``shardings`` (same pytree) if given."""
+        current mesh per ``shardings`` (same pytree) if given.
+
+        ``strict=False`` keeps the template's value for keys absent from
+        the checkpoint (e.g. restoring a sampler whose scheme — and thus
+        state-dict shape — changed since the save) instead of raising.
+        """
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
@@ -129,12 +134,19 @@ class Checkpointer:
         shard_items = _flatten(shardings)[0] if shardings is not None else None
         for key, tmpl in items.items():
             if key not in data:
+                if not strict:
+                    leaves.append(tmpl)
+                    continue
                 raise KeyError(f"checkpoint missing {key}")
             arr = data[key]
             if tuple(arr.shape) != tuple(tmpl.shape):
                 raise ValueError(f"{key}: ckpt {arr.shape} != state {tmpl.shape}")
             if shard_items is not None:
                 leaves.append(jax.device_put(arr, shard_items[key]))
+            elif isinstance(tmpl, np.ndarray):
+                # host-side state (e.g. the sampler's score memory) stays
+                # numpy — jnp would silently truncate 64-bit dtypes
+                leaves.append(np.asarray(arr, dtype=tmpl.dtype))
             else:
                 leaves.append(jax.numpy.asarray(arr, dtype=tmpl.dtype))
         return jax.tree_util.tree_unflatten(treedef, leaves), step

@@ -208,6 +208,35 @@ class ISConfig:
 
 
 @dataclass(frozen=True)
+class SamplerConfig:
+    """Persistent score-memory sampling (``repro.sampler``).
+
+    ``presample`` is the paper's Algorithm 1 (per-batch scoring pass);
+    ``history`` does dataset-level IS from the persistent ``ScoreStore``
+    (scores are free — reused from training batches); ``selective`` is
+    Biggest-Losers-style top-k selective backprop; ``uniform`` is the
+    baseline. All schemes feed per-sample scores back into the store.
+    """
+    scheme: str = "presample"     # uniform | presample | history | selective
+    ema: float = 0.9              # score-memory EMA merge rate
+    staleness: float = 0.9        # per-epoch decay of score deviations
+                                  # toward the mean (stale scores flatten)
+    smoothing: float = 0.1        # λ: p = (1-λ)·p_score + λ·uniform
+    temperature: float = 1.0      # p_score ∝ score^(1/T)
+    tau_th: float = 0.0           # history gate threshold; 0 → 1.05 (scores
+                                  # are free, so any τ>1 is variance won)
+    min_coverage: float = 0.5     # history: store coverage before IS engages
+    selective_window: int = 0     # selective candidate window W
+                                  # (0 → presample_ratio × b)
+    gate_every: int = 8           # refresh the store-τ gate every N steps
+                                  # (computing τ is O(n/hosts) host work;
+                                  # the store's own EMA smooths the signal)
+
+    def resolved_tau_th(self) -> float:
+        return self.tau_th if self.tau_th > 0 else 1.05
+
+
+@dataclass(frozen=True)
 class OptimConfig:
     name: str = "sgd"              # sgd | adamw
     lr: float = 0.1
@@ -230,6 +259,7 @@ class RunConfig:
     shape: ShapeConfig = TRAIN_4K
     optim: OptimConfig = field(default_factory=OptimConfig)
     imp: ISConfig = field(default_factory=ISConfig)
+    sampler: SamplerConfig = field(default_factory=SamplerConfig)
     steps: int = 100
     microbatches: int = 1          # gradient accumulation
     remat: bool = True

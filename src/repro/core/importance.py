@@ -81,7 +81,13 @@ def controller_init():
 def controller_update(state: ISControllerState, g, a_tau: float,
                       was_is: jnp.ndarray) -> ISControllerState:
     t = tau(g)
-    ema = a_tau * state.tau_ema + (1.0 - a_tau) * t
+    # first observation seeds the EMA (a zero-init EMA is biased low for
+    # ~1/(1-a) steps and delays the IS switch-on far past the paper's).
+    # keyed on tau_ema==0 (τ of a real update is ≥ 1), NOT steps_total:
+    # build_score_step counts IS-drawn steps while deferring the EMA, so
+    # the first uniform-drawn batch must still seed
+    ema = jnp.where(state.tau_ema == 0.0, t,
+                    a_tau * state.tau_ema + (1.0 - a_tau) * t)
     return ISControllerState(ema,
                              state.steps_is + was_is.astype(jnp.int32),
                              state.steps_total + 1)

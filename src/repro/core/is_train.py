@@ -90,6 +90,18 @@ def _loss_scores_grads(lm, params, batch, *, remat, score_impl, microbatches=1):
     return loss_sum / microbatches, ps.reshape(b), sc.reshape(b), grads
 
 
+def _apply_update(optimizer, state, loss, grads, extra):
+    """Optimizer apply + metric assembly shared by all step builders."""
+    params, opt_state, m = optimizer.update(
+        grads, state["opt"], state["params"], state["step"])
+    metrics = dict(m)
+    metrics.update(extra)
+    metrics["loss"] = loss
+    new_state = dict(state)
+    new_state.update(params=params, opt=opt_state, step=state["step"] + 1)
+    return new_state, metrics
+
+
 def build_train_step(lm: LM, run_cfg, optimizer, *, gate=None):
     """Returns step(state, big_batch) -> (state, metrics).
 
@@ -102,16 +114,6 @@ def build_train_step(lm: LM, run_cfg, optimizer, *, gate=None):
     gate = gate or ("cond" if icfg.enabled else "never")
     remat = run_cfg.remat
     micro = run_cfg.microbatches
-
-    def opt_apply(state, loss, grads, extra):
-        params, opt_state, m = optimizer.update(
-            grads, state["opt"], state["params"], state["step"])
-        metrics = dict(m)
-        metrics.update(extra)
-        metrics["loss"] = loss
-        new_state = dict(state)
-        new_state.update(params=params, opt=opt_state, step=state["step"] + 1)
-        return new_state, metrics
 
     def is_branch(state, big_batch, key):
         # Algorithm 1 lines 6-10 (scoring pass is forward-only)
@@ -129,7 +131,8 @@ def build_train_step(lm: LM, run_cfg, optimizer, *, gate=None):
             score_impl=icfg.score_impl, microbatches=micro)
         ctrl = imp.controller_update(state["ctrl"], g, icfg.ema,
                                      jnp.ones((), jnp.bool_))
-        return loss, grads, ctrl, jnp.float32(1.0)
+        return loss, grads, ctrl, jnp.float32(1.0), \
+            jax.lax.stop_gradient(scores.astype(jnp.float32))
 
     def uniform_branch(state, big_batch, key):
         # Algorithm 1 lines 12-15: τ refreshed from the b-sample forward
@@ -139,20 +142,26 @@ def build_train_step(lm: LM, run_cfg, optimizer, *, gate=None):
             score_impl=icfg.score_impl, microbatches=micro)
         if icfg.score_by == "loss":
             scores = per_sample
-        g = imp.normalize_scores(jax.lax.stop_gradient(scores))
+        scores = jax.lax.stop_gradient(scores.astype(jnp.float32))
+        g = imp.normalize_scores(scores)
         ctrl = imp.controller_update(state["ctrl"], g, icfg.ema,
                                      jnp.zeros((), jnp.bool_))
-        return loss, grads, ctrl, jnp.float32(0.0)
+        # only the first b of B candidates were scored; pad with the -1
+        # sentinel so the score memory ignores the rest
+        scores_B = jnp.concatenate(
+            [scores, jnp.full((B - b,), -1.0, jnp.float32)])
+        return loss, grads, ctrl, jnp.float32(0.0), scores_B
 
     def step(state, big_batch):
         key = jax.random.fold_in(state["rng"], state["step"])
         if gate == "always":
-            loss, grads, ctrl, was_is = is_branch(state, big_batch, key)
+            loss, grads, ctrl, was_is, scores = is_branch(state, big_batch, key)
         elif gate == "never":
-            loss, grads, ctrl, was_is = uniform_branch(state, big_batch, key)
+            loss, grads, ctrl, was_is, scores = uniform_branch(
+                state, big_batch, key)
         else:
             use_is = state["ctrl"].tau_ema > tau_th
-            loss, grads, ctrl, was_is = jax.lax.cond(
+            loss, grads, ctrl, was_is, scores = jax.lax.cond(
                 use_is, is_branch, uniform_branch, state, big_batch, key)
         if icfg.lr_tau_boost_cap > 0:
             # paper §5 future work: variance reduction ≙ a τ×-larger batch,
@@ -164,10 +173,61 @@ def build_train_step(lm: LM, run_cfg, optimizer, *, gate=None):
                          1.0, icfg.lr_tau_boost_cap),
                 1.0)
             grads = jax.tree_util.tree_map(lambda g: g * boost, grads)
-        new_state, metrics = opt_apply(
-            dict(state, ctrl=ctrl), loss, grads,
-            {"tau": ctrl.tau_ema, "is_active": was_is})
+        new_state, metrics = _apply_update(
+            optimizer, dict(state, ctrl=ctrl), loss, grads,
+            {"tau": ctrl.tau_ema, "is_active": was_is,
+             # per-candidate Ĝ for the persistent score memory (B-vector,
+             # -1 where this step produced no score)
+             "sample_scores": scores})
         return new_state, metrics
+
+    return step
+
+
+def build_score_step(lm: LM, run_cfg, optimizer):
+    """Train step for the host-side sampler schemes (history/selective/
+    uniform): exactly b samples the HOST already chose, an optional
+    ``batch["weights"]`` column (1/(n·pᵢ) for unbiased dataset-level IS),
+    and per-sample scores in the metrics so the trainer closes the
+    feedback loop into the ``ScoreStore``.
+
+    ``is_flag`` (scalar): 0 for a uniform-drawn batch, else the sampler's
+    current dataset-level τ estimate (≥ 1). The τ EMA is refreshed only
+    from uniform-drawn batches — scores of an importance-drawn batch are
+    not a uniform sample, so their τ would be biased — and the optional
+    lr τ-boost uses the live host-side τ carried in the flag.
+    """
+    icfg = run_cfg.imp
+    remat = run_cfg.remat
+    micro = run_cfg.microbatches
+
+    def step(state, batch, is_flag):
+        loss, per_sample, scores, grads = _loss_scores_grads(
+            lm, state["params"], batch, remat=remat,
+            score_impl=icfg.score_impl, microbatches=micro)
+        if icfg.score_by == "loss":
+            scores = jax.lax.stop_gradient(per_sample)
+        scores = jax.lax.stop_gradient(scores.astype(jnp.float32))
+        g = imp.normalize_scores(scores)
+        drawn_is = is_flag > 0.5
+        ctrl2 = imp.controller_update(state["ctrl"], g, icfg.ema, drawn_is)
+        ctrl = ctrl2._replace(tau_ema=jnp.where(drawn_is,
+                                                state["ctrl"].tau_ema,
+                                                ctrl2.tau_ema))
+        if icfg.lr_tau_boost_cap > 0:
+            # same §5-future-work boost as build_train_step: IS-drawn
+            # batches behave like a τ×-larger batch (live τ via is_flag)
+            boost = jnp.where(
+                drawn_is,
+                jnp.clip(jnp.sqrt(jnp.maximum(is_flag, 1.0)),
+                         1.0, icfg.lr_tau_boost_cap),
+                1.0)
+            grads = jax.tree_util.tree_map(lambda gr: gr * boost, grads)
+        return _apply_update(
+            optimizer, dict(state, ctrl=ctrl), loss, grads,
+            {"tau": ctrl.tau_ema,
+             "is_active": drawn_is.astype(jnp.float32),
+             "sample_scores": scores})
 
     return step
 
@@ -181,12 +241,6 @@ def build_uniform_step(lm: LM, run_cfg, optimizer):
         loss, _, _, grads = _loss_scores_grads(
             lm, state["params"], batch, remat=remat,
             score_impl=run_cfg.imp.score_impl, microbatches=micro)
-        params, opt_state, m = optimizer.update(
-            grads, state["opt"], state["params"], state["step"])
-        new_state = dict(state)
-        new_state.update(params=params, opt=opt_state, step=state["step"] + 1)
-        m = dict(m)
-        m["loss"] = loss
-        return new_state, m
+        return _apply_update(optimizer, state, loss, grads, {})
 
     return step

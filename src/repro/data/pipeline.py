@@ -13,9 +13,14 @@ Two sources:
 The iterator state (epoch, cursor) is a tiny dict that goes into the
 checkpoint, giving bitwise-identical resume.
 
-The ``presample`` method serves the paper's Algorithm 1: it yields batches
-of B = ratio × b candidate samples; the IS train step scores and resamples
-on device.
+Every source exposes two batch APIs:
+* ``batch(state, size)`` — the next sequential global batch (the
+  presample scheme feeds B = ratio × b of these to Algorithm 1, which
+  scores and resamples on device);
+* ``gather(indices, epoch)`` + ``global_indices``/``local_indices`` — an
+  index-based API so ``repro.sampler`` schemes choose WHICH examples to
+  materialise (ids are stable across epochs — for MemmapLM they are
+  unpermuted corpus slots — so a persistent score memory can key on them).
 """
 from __future__ import annotations
 
@@ -36,6 +41,15 @@ class PipelineState:
     @classmethod
     def from_dict(cls, d):
         return cls(int(d["epoch"]), int(d["cursor"]))
+
+    def advance(self, consumed: int, n_examples: int) -> "PipelineState":
+        """Consume ``consumed`` global examples; roll the epoch at the end
+        (the single definition of epoch/cursor semantics — sources and
+        samplers all advance through here)."""
+        cursor = self.cursor + consumed
+        if cursor >= n_examples:
+            return PipelineState(self.epoch + 1, 0)
+        return PipelineState(self.epoch, cursor)
 
 
 class SyntheticLM:
@@ -79,24 +93,37 @@ class SyntheticLM:
             toks = rng.integers(0, self.vocab, size=(self.seq,))
         return toks.astype(np.int32)
 
+    def global_indices(self, state: PipelineState, batch_size: int):
+        """Global example ids of ALL rows of the next global batch (row r of
+        the assembled global batch holds example ``global_indices[r]``)."""
+        return (state.cursor + np.arange(batch_size, dtype=np.int64)) % self.n
+
+    def local_indices(self, state: PipelineState, batch_size: int):
+        """The slice of ``global_indices`` this host materialises."""
+        assert batch_size % self.n_hosts == 0
+        local = batch_size // self.n_hosts
+        gids = self.global_indices(state, batch_size)
+        return gids[self.host_id * local:(self.host_id + 1) * local]
+
+    def gather(self, indices, epoch: int = 0):
+        """Materialise arbitrary examples by global id (the sampler's
+        index-based batch API)."""
+        indices = np.asarray(indices, np.int64)
+        toks = np.empty((len(indices), self.seq + 1), np.int32)
+        for j, idx in enumerate(indices):
+            idx = int(idx) % self.n
+            rng = np.random.default_rng(
+                np.random.SeedSequence([self.seed, epoch, idx]))
+            ex = self._example(rng, idx)
+            toks[j] = np.concatenate([ex, ex[:1]])
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
     def batch(self, state: PipelineState, batch_size: int):
         """The next GLOBAL batch; this host materialises only its slice but
         index bookkeeping is global so every host stays in lockstep."""
-        assert batch_size % self.n_hosts == 0
-        local = batch_size // self.n_hosts
-        start = state.cursor + self.host_id * local
-        toks = np.empty((local, self.seq + 1), np.int32)
-        for j in range(local):
-            idx = (start + j) % self.n
-            rng = np.random.default_rng(
-                np.random.SeedSequence([self.seed, state.epoch, idx]))
-            ex = self._example(rng, idx)
-            full = np.concatenate([ex, ex[:1]])
-            toks[j] = full
-        cursor = state.cursor + batch_size
-        epoch, cursor = (state.epoch + 1, 0) if cursor >= self.n else (state.epoch, cursor)
-        batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
-        return batch, PipelineState(epoch, cursor)
+        batch = self.gather(self.local_indices(state, batch_size),
+                            epoch=state.epoch)
+        return batch, state.advance(batch_size, self.n)
 
 
 class SyntheticCLS:
@@ -132,20 +159,24 @@ class SyntheticCLS:
         labels[-1] = c                          # single-output CE (paper)
         return toks.astype(np.int32), labels.astype(np.int32)
 
-    def batch(self, state: PipelineState, batch_size: int):
-        assert batch_size % self.n_hosts == 0
-        local = batch_size // self.n_hosts
-        start = state.cursor + self.host_id * local
-        toks = np.empty((local, self.seq), np.int32)
-        labels = np.empty((local, self.seq), np.int32)
-        for j in range(local):
-            idx = (start + j) % self.n
+    global_indices = SyntheticLM.global_indices
+    local_indices = SyntheticLM.local_indices
+
+    def gather(self, indices, epoch: int = 0):
+        indices = np.asarray(indices, np.int64)
+        toks = np.empty((len(indices), self.seq), np.int32)
+        labels = np.empty((len(indices), self.seq), np.int32)
+        for j, idx in enumerate(indices):
+            idx = int(idx) % self.n
             rng = np.random.default_rng(
-                np.random.SeedSequence([self.seed, state.epoch, idx]))
+                np.random.SeedSequence([self.seed, epoch, idx]))
             toks[j], labels[j] = self._example(rng, idx)
-        cursor = state.cursor + batch_size
-        epoch, cursor = (state.epoch + 1, 0) if cursor >= self.n else (state.epoch, cursor)
-        return {"tokens": toks, "labels": labels}, PipelineState(epoch, cursor)
+        return {"tokens": toks, "labels": labels}
+
+    def batch(self, state: PipelineState, batch_size: int):
+        batch = self.gather(self.local_indices(state, batch_size),
+                            epoch=state.epoch)
+        return batch, state.advance(batch_size, self.n)
 
 
 class MemmapLM:
@@ -160,45 +191,81 @@ class MemmapLM:
         self.n_hosts = n_hosts if n_hosts is not None else jax.process_count()
 
     def _perm(self, epoch):
-        rng = np.random.default_rng(np.random.SeedSequence([self.seed, epoch]))
-        return rng.permutation(self.n)
+        # size-1 memo: the sampler derives indices 2-3x per step and a full
+        # O(n) reshuffle per call would dominate the host critical path
+        cached = getattr(self, "_perm_cache", None)
+        if cached is None or cached[0] != epoch:
+            rng = np.random.default_rng(
+                np.random.SeedSequence([self.seed, epoch]))
+            self._perm_cache = (epoch, rng.permutation(self.n))
+        return self._perm_cache[1]
 
-    def batch(self, state: PipelineState, batch_size: int):
+    def global_indices(self, state: PipelineState, batch_size: int):
+        """Global example ids (UNpermuted corpus slots, stable across
+        epochs — what a persistent score memory keys on) of the next
+        global batch's rows."""
+        perm = self._perm(state.epoch)
+        pos = (state.cursor + np.arange(batch_size, dtype=np.int64)) % self.n
+        return perm[pos].astype(np.int64)
+
+    def local_indices(self, state: PipelineState, batch_size: int):
         assert batch_size % self.n_hosts == 0
         local = batch_size // self.n_hosts
-        perm = self._perm(state.epoch)
-        start = state.cursor + self.host_id * local
-        toks = np.empty((local, self.seq + 1), np.int32)
-        for j in range(local):
-            idx = perm[(start + j) % self.n]
-            o = idx * self.seq
+        gids = self.global_indices(state, batch_size)
+        return gids[self.host_id * local:(self.host_id + 1) * local]
+
+    def gather(self, indices, epoch: int = 0):
+        indices = np.asarray(indices, np.int64)
+        toks = np.empty((len(indices), self.seq + 1), np.int32)
+        for j, idx in enumerate(indices):
+            o = (int(idx) % self.n) * self.seq
             toks[j] = self.data[o: o + self.seq + 1]
-        cursor = state.cursor + batch_size
-        epoch, cursor = (state.epoch + 1, 0) if cursor >= self.n else (state.epoch, cursor)
-        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}, \
-            PipelineState(epoch, cursor)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def batch(self, state: PipelineState, batch_size: int):
+        batch = self.gather(self.local_indices(state, batch_size))
+        return batch, state.advance(batch_size, self.n)
 
 
 class Prefetcher:
-    """One-deep async prefetch off the training critical path."""
+    """One-deep async prefetch off the training critical path.
+
+    ``next()`` hands out the batch produced in the background and
+    immediately kicks off production of the following one; the worker is
+    only joined lazily on the NEXT call, so host-side batch assembly
+    genuinely overlaps the device step in between.
+    """
 
     def __init__(self, source, state: PipelineState, batch_size: int):
         import threading
+        self._threading = threading
         self.source = source
         self.batch_size = batch_size
-        self._lock = threading.Lock()
+        self._thread = None
+        self._box = {}
         self._next = source.batch(state, batch_size)
 
-    def next(self):
-        import threading
-        batch, state = self._next
-        t = {}
-
+    def _launch(self, state: PipelineState) -> None:
         def work():
-            t["v"] = self.source.batch(state, self.batch_size)
+            try:
+                self._box["v"] = self.source.batch(state, self.batch_size)
+            except BaseException as e:   # surfaced on the next next() call
+                self._box["e"] = e
 
-        th = threading.Thread(target=work)
-        th.start()
-        th.join()  # single-core container: no real overlap, structure kept
-        self._next = t["v"]
+        self._thread = self._threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def next(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+            err = self._box.pop("e", None)
+            if err is not None:
+                # retry in the background from the same state, then surface
+                # the worker's real error (instead of wedging on KeyError)
+                self._launch(self._next[1])
+                raise err
+            self._next = self._box.pop("v")
+        batch, state = self._next
+        self._launch(state)
         return batch, state

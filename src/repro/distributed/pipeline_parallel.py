@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.collectives import axis_size
+
 
 def pipeline_forward(stage_params, microbatches, apply_stage, axis_name="pod"):
     """Run inside shard_map over ``axis_name``.
@@ -30,7 +32,7 @@ def pipeline_forward(stage_params, microbatches, apply_stage, axis_name="pod"):
         them in, the last stage's outputs are returned (M, mb, ...).
     apply_stage: (params, x) -> y, same x/y shape for all stages.
     """
-    n_stage = jax.lax.axis_size(axis_name)
+    n_stage = axis_size(axis_name)
     stage = jax.lax.axis_index(axis_name)
     M = microbatches.shape[0]
     ticks = n_stage + M - 1

@@ -1,7 +1,9 @@
 """The fault-tolerant training loop.
 
-Composes: data pipeline → IS train step (Algorithm 1) → optimizer →
-checkpointing (async, atomic) → straggler monitor → restart logic.
+Composes: data pipeline → sampler scheme (repro.sampler: uniform /
+presample / history / selective) → train step → optimizer → score-memory
+feedback → checkpointing (async, atomic, including the ScoreStore) →
+straggler monitor → restart logic.
 
 Works identically on 1 CPU device (examples/tests) and on a pod mesh (the
 launcher passes mesh + shardings).
@@ -15,11 +17,13 @@ import jax
 import numpy as np
 
 from repro.checkpoint.ckpt import Checkpointer
-from repro.core.is_train import build_train_step, train_state_init
+from repro.core.is_train import (build_score_step, build_train_step,
+                                 train_state_init)
 from repro.data.pipeline import PipelineState, SyntheticLM
 from repro.models.lm import LM
 from repro.optim.api import get_optimizer, step_drop_schedule
 from repro.runtime.straggler import StragglerMonitor
+from repro.sampler import make_sampler
 
 
 class Trainer:
@@ -31,6 +35,7 @@ class Trainer:
         self.gate = gate
         self.source = source or SyntheticLM(
             run_cfg.model.vocab_size, run_cfg.shape.seq_len, seed=run_cfg.seed)
+        self.sampler = make_sampler(run_cfg, self.source)
         self.B = run_cfg.shape.global_batch * run_cfg.imp.presample_ratio
         self.monitor = StragglerMonitor(run_cfg.step_deadline_factor)
         self.ckpt = (Checkpointer(run_cfg.ckpt_dir, keep=run_cfg.keep_ckpts)
@@ -38,7 +43,15 @@ class Trainer:
         self._build()
 
     def _build(self):
-        step = build_train_step(self.lm, self.run, self.opt, gate=self.gate)
+        # presample runs the paper's on-device Algorithm 1; the score-memory
+        # schemes use the host-chosen-batch step with a sampled/weighted flag
+        if self.sampler.uses_score_step:
+            step = build_score_step(self.lm, self.run, self.opt)
+            extra_in = (None,)          # is_flag scalar
+        else:
+            step = build_train_step(self.lm, self.run, self.opt, gate=self.gate)
+            extra_in = ()
+        self._flagged = bool(extra_in)
         if self.mesh is not None:
             from repro.distributed import sharding as shd
             key = jax.random.PRNGKey(self.run.seed)
@@ -47,7 +60,7 @@ class Trainer:
             sspecs = shd.state_specs(self.run.model, state_sds, self.mesh)
             named = lambda t: shd.to_named(t, self.mesh)
             self.step_fn = jax.jit(step,
-                                   in_shardings=(named(sspecs), None),
+                                   in_shardings=(named(sspecs), None) + extra_in,
                                    out_shardings=(named(sspecs), None))
         else:
             # no donation here: identical scalar leaves (step/ctrl counters)
@@ -59,11 +72,29 @@ class Trainer:
         key = jax.random.PRNGKey(self.run.seed)
         return train_state_init(self.lm, self.opt, key), PipelineState()
 
+    def _payload(self, state):
+        """Checkpoint payload: train state + the sampler's score memory."""
+        return {"train": state, "sampler": self.sampler.state_dict()}
+
     def resume_or_init(self):
         """Restart-from-checkpoint: the node-failure recovery entry point."""
         if self.ckpt and self.ckpt.latest_step() is not None:
             template, pstate = self.init_state()
-            state, step = self.ckpt.restore(template)
+            try:
+                payload, step = self.ckpt.restore({"train": template})
+                state = payload["train"]
+            except KeyError:
+                # legacy layout: train state at the payload root
+                state, step = self.ckpt.restore(template)
+            try:
+                # lenient: a checkpoint from another scheme still warms the
+                # shared score store; scheme-specific extras keep their init
+                samp, _ = self.ckpt.restore(
+                    {"sampler": self.sampler.state_dict()}, step=step,
+                    strict=False)
+                self.sampler.load_state_dict(samp["sampler"])
+            except (KeyError, ValueError):
+                pass  # different dataset/topology: sampler starts cold
             meta = self.ckpt.meta()
             pstate = PipelineState.from_dict(meta.get("pipeline", pstate.as_dict()))
             return state, pstate, step
@@ -77,24 +108,37 @@ class Trainer:
         history = []
         for i in range(start, steps):
             t0 = time.time()
-            batch, pstate_next = self.source.batch(pstate, self.B)
+            batch, meta, pstate_next = self.sampler.next_batch(pstate, i)
             batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
-            state, metrics = self.step_fn(state, batch)
+            prev_state = state
+            if self._flagged:
+                state, metrics = self.step_fn(
+                    state, batch,
+                    jax.numpy.asarray(meta["is_flag"], jax.numpy.float32))
+            else:
+                state, metrics = self.step_fn(state, batch)
+            scores = metrics.pop("sample_scores", None)
             metrics = {k: float(v) for k, v in metrics.items()}
             dt = time.time() - t0
             action = self.monitor.observe(dt)
             if action["skip"]:
-                # straggler escalation: drop this step's result, reuse batch
+                # straggler escalation: drop this step's result (params AND
+                # score feedback), reuse the batch next iteration
+                state = prev_state
                 continue
+            if scores is not None:
+                # close the loop: per-sample scores → persistent score memory
+                self.sampler.observe(meta, np.asarray(jax.device_get(scores)))
             pstate = pstate_next
-            metrics.update(step=i, dt=dt)
+            metrics.update(step=i, dt=dt, **self.sampler.stats())
             history.append(metrics)
             if callback:
                 callback(i, metrics)
             if self.ckpt and (i + 1) % self.run.ckpt_every == 0:
-                self.ckpt.save_async(i + 1, state,
+                self.ckpt.save_async(i + 1, self._payload(state),
                                      meta={"pipeline": pstate.as_dict()})
         if self.ckpt:
-            self.ckpt.save_async(steps, state, meta={"pipeline": pstate.as_dict()})
+            self.ckpt.save_async(steps, self._payload(state),
+                                 meta={"pipeline": pstate.as_dict()})
             self.ckpt.wait()
         return state, history

@@ -1,0 +1,14 @@
+"""Persistent score-memory sampling subsystem.
+
+``ScoreStore`` remembers per-example importance scores across steps and
+epochs; ``Sampler`` schemes (uniform / presample / history / selective)
+decide which examples each training step materialises. See
+``repro.sampler.schemes`` for the scheme contract.
+"""
+from repro.sampler.schemes import (SCHEMES, HistorySampler, PresampleSampler,
+                                   Sampler, SelectiveSampler, UniformSampler,
+                                   make_sampler)
+from repro.sampler.store import ScoreStore
+
+__all__ = ["ScoreStore", "Sampler", "UniformSampler", "PresampleSampler",
+           "HistorySampler", "SelectiveSampler", "SCHEMES", "make_sampler"]

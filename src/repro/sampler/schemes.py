@@ -1,0 +1,237 @@
+"""Pluggable example-selection schemes behind one ``Sampler`` API.
+
+The trainer's loop is scheme-agnostic:
+
+    batch, meta, pstate' = sampler.next_batch(pstate, step)   # host side
+    state, metrics = step_fn(state, batch[, meta.is_flag])    # device side
+    sampler.observe(meta, metrics["sample_scores"])           # feedback
+
+Schemes:
+
+* ``uniform`` — sequential batches of b, plain SGD. Still feeds scores
+  into the store (free), so switching schemes mid-run starts warm.
+* ``presample`` — the paper's Algorithm 1: batches of B = ratio·b, the
+  device scores candidates and resamples; the τ controller lives on
+  device (``repro.core.is_train.build_train_step``).
+* ``history`` — dataset-level importance sampling from the persistent
+  score memory: draw b ids ∝ smoothed/temperature-sharpened stored
+  scores, attach unbiased weights 1/(n·pᵢ), zero scoring overhead. The
+  τ-of-the-store gate switches it on only once the memory is warm
+  (coverage) and concentrated enough to pay (τ > τ_th), mirroring the
+  presample scheme's τ gate.
+* ``selective`` — Biggest-Losers-style selective backprop: rank a
+  sequential candidate window by stored score, train on the top-k
+  (unseen ids rank highest, so everything is visited). Deliberately
+  biased — no weights.
+
+``meta["gids"]`` are GLOBAL example ids aligned with ``meta["rows"]`` (the
+slice of the step's global score vector they correspond to); the store
+drops ids this host doesn't own. NOTE: the observe() contract assumes the
+step's ``sample_scores`` metric is the GLOBAL (replicated) score vector —
+true single-host; a true multi-process launch additionally needs the
+trainer to assemble global batches and all-gather scores (ROADMAP open
+item) before these schemes are multi-host-safe.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.pipeline import PipelineState
+from repro.sampler.store import ScoreStore
+
+
+class Sampler:
+    """Base: sequential fetching + score-memory bookkeeping."""
+
+    scheme = "base"
+    uses_score_step = True   # False → the paper's on-device presample step
+
+    def __init__(self, run_cfg, source):
+        self.cfg = run_cfg.sampler
+        self.icfg = run_cfg.imp
+        self.b = run_cfg.shape.global_batch
+        self.seed = run_cfg.seed
+        self.source = source
+        self.host_id = getattr(source, "host_id", 0)
+        self.n_hosts = getattr(source, "n_hosts", 1)
+        self.store = ScoreStore(source.n, host_id=self.host_id,
+                                n_hosts=self.n_hosts, ema=self.cfg.ema,
+                                staleness=self.cfg.staleness)
+        self._epoch = np.zeros((), np.int64)
+
+    # global rows the device step sees per call
+    @property
+    def fetch_size(self) -> int:
+        return self.b
+
+    def _tick_epoch(self, pstate: PipelineState) -> None:
+        if int(self._epoch) != pstate.epoch:
+            self.store.decay()
+            self._epoch = np.asarray(pstate.epoch, np.int64)
+
+    def _sequential(self, pstate: PipelineState, size: int):
+        """Next sequential batch + the global ids of ALL its global rows."""
+        gids = self.source.global_indices(pstate, size)
+        batch, nxt = self.source.batch(pstate, size)
+        return batch, gids, nxt
+
+    def next_batch(self, pstate: PipelineState, step: int):
+        self._tick_epoch(pstate)
+        batch, gids, nxt = self._sequential(pstate, self.fetch_size)
+        meta = {"gids": gids, "rows": (0, self.fetch_size), "is_flag": 0.0}
+        return batch, meta, nxt
+
+    def observe(self, meta, scores) -> None:
+        lo, hi = meta["rows"]
+        self.store.update(meta["gids"], np.asarray(scores)[lo:hi])
+
+    def stats(self) -> dict:
+        return {"store_coverage": self.store.coverage()}
+
+    # -- checkpoint -----------------------------------------------------------
+    def state_dict(self) -> dict:
+        return {"store": self.store.state_dict(), "epoch": self._epoch}
+
+    def load_state_dict(self, d) -> None:
+        self.store.load_state_dict(d["store"])
+        self._epoch = np.asarray(d["epoch"], np.int64).reshape(())
+
+
+class UniformSampler(Sampler):
+    scheme = "uniform"
+
+
+class PresampleSampler(Sampler):
+    """Algorithm 1's data side: deliver B = ratio·b candidates; scoring,
+    τ gating, and resampling happen inside the jitted train step."""
+
+    scheme = "presample"
+    uses_score_step = False
+
+    @property
+    def fetch_size(self) -> int:
+        return self.b * self.icfg.presample_ratio
+
+
+class HistorySampler(Sampler):
+    """Dataset-level IS from the persistent score memory."""
+
+    scheme = "history"
+
+    def __init__(self, run_cfg, source):
+        super().__init__(run_cfg, source)
+        self.tau_gate = np.zeros((), np.float64)   # EMA of store-τ
+        self._obs = np.zeros((), np.int64)         # observe() count
+        self.k_local = self.b // self.n_hosts
+
+    @property
+    def active(self) -> bool:
+        return (self.store.coverage() >= self.cfg.min_coverage
+                and float(self.tau_gate) > self.cfg.resolved_tau_th())
+
+    def next_batch(self, pstate: PipelineState, step: int):
+        self._tick_epoch(pstate)
+        if not self.active:
+            # warm-up: uniform batches, unit weights; scores fill the store
+            batch, gids, nxt = self._sequential(pstate, self.b)
+            batch = dict(batch)
+            batch["weights"] = np.ones((self.k_local,), np.float32)
+            return batch, {"gids": gids, "rows": (0, self.b),
+                           "is_flag": 0.0}, nxt
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, 9173, int(step)]))
+        gids, p = self.store.sample(rng, self.k_local, self.cfg.smoothing,
+                                    self.cfg.temperature)
+        batch = dict(self.source.gather(gids, epoch=pstate.epoch))
+        # unbiased for this host's shard mean: wᵢ = 1/(n·pᵢ), E_p[w·x] = x̄
+        batch["weights"] = (1.0 / (self.store.n_local * p)).astype(np.float32)
+        rows = (self.host_id * self.k_local, (self.host_id + 1) * self.k_local)
+        # is_flag carries the live store-τ (≥1) for the optional lr boost
+        return batch, {"gids": gids, "rows": rows,
+                       "is_flag": max(float(self.tau_gate), 1.0)}, \
+            pstate.advance(self.b, self.source.n)
+
+    def observe(self, meta, scores) -> None:
+        super().observe(meta, scores)
+        self._obs = self._obs + 1
+        # τ over the store is O(n_local) host work — refresh the gate
+        # periodically, not every step
+        n_obs = int(self._obs)
+        if n_obs != 1 and n_obs % max(self.cfg.gate_every, 1) != 0:
+            return
+        # no extra smoothing: the store's per-example EMA already damps
+        # minibatch noise, the gate just reads the current dataset-level τ
+        self.tau_gate = np.asarray(
+            self.store.tau(self.cfg.smoothing, self.cfg.temperature),
+            np.float64)
+
+    def stats(self) -> dict:
+        return {"store_coverage": self.store.coverage(),
+                "store_tau": float(self.tau_gate),
+                "sampler_active": float(self.active)}
+
+    def state_dict(self) -> dict:
+        d = super().state_dict()
+        d["tau_gate"] = self.tau_gate
+        d["obs"] = self._obs
+        return d
+
+    def load_state_dict(self, d) -> None:
+        super().load_state_dict(d)
+        self.tau_gate = np.asarray(d["tau_gate"], np.float64).reshape(())
+        self._obs = np.asarray(d.get("obs", 0), np.int64).reshape(())
+
+
+class SelectiveSampler(Sampler):
+    """Top-k selective backprop over a sliding candidate window, ranked by
+    the score memory instead of a fresh scoring pass (the memory is what
+    makes this cheaper than the original Biggest-Losers forward)."""
+
+    scheme = "selective"
+
+    def __init__(self, run_cfg, source):
+        super().__init__(run_cfg, source)
+        self.k_local = self.b // self.n_hosts
+        self.window = (self.cfg.selective_window
+                       or self.b * self.icfg.presample_ratio)
+        # clamp to the dataset: a window past n would wrap duplicate ids
+        # into one pool and roll multiple epochs (= staleness decays) per
+        # step on tiny datasets
+        self.window = min(self.window, source.n)
+        if self.window < self.b:
+            raise ValueError(f"selective window {self.window} < batch {self.b}")
+
+    def next_batch(self, pstate: PipelineState, step: int):
+        self._tick_epoch(pstate)
+        pool = self.source.global_indices(pstate, self.window)
+        mine = pool[self.store.owned(pool)]
+        if len(mine) == 0:
+            # permuted multi-host windows can miss this host entirely
+            mine = self.store.global_ids(np.arange(
+                min(self.k_local, self.store.n_local)))
+        gids = self.store.topk(mine, min(self.k_local, len(mine)))
+        if len(gids) < self.k_local:
+            # short owned pool (strided ownership over a permuted window):
+            # cycle the top picks so every host steps with k_local rows
+            gids = np.resize(gids, self.k_local)
+        batch = self.source.gather(gids, epoch=pstate.epoch)
+        rows = (self.host_id * self.k_local, (self.host_id + 1) * self.k_local)
+        return batch, {"gids": gids, "rows": rows, "is_flag": 1.0}, \
+            pstate.advance(self.window, self.source.n)
+
+
+SCHEMES = {c.scheme: c for c in
+           (UniformSampler, PresampleSampler, HistorySampler, SelectiveSampler)}
+
+
+def make_sampler(run_cfg, source) -> Sampler:
+    scheme = run_cfg.sampler.scheme
+    if scheme not in SCHEMES:
+        raise ValueError(f"unknown sampler scheme {scheme!r}; "
+                         f"have {sorted(SCHEMES)}")
+    if not run_cfg.imp.enabled and scheme in ("history", "selective"):
+        # imp.enabled=False is the global IS kill-switch; score-memory
+        # selection IS importance sampling, so fall back to uniform
+        # (presample handles the switch itself via its τ gate="never")
+        scheme = "uniform"
+    return SCHEMES[scheme](run_cfg, source)

@@ -1,0 +1,162 @@
+"""Persistent per-example score memory.
+
+A ``ScoreStore`` remembers the importance score (the paper's Ĝᵢ upper
+bound, eq. 20) of every training example it has seen, so selection schemes
+can reuse scores across epochs instead of paying a fresh scoring forward
+pass per batch (Algorithm 1's presample cost).
+
+Sharding: global example ids are strided over hosts — host ``h`` of ``H``
+owns ids ``{i : i % H == h}`` — so each host keeps an N/H-slot slice that is
+consistent with the data pipeline's global indexing regardless of where the
+sequential cursor happens to be. Updates with unowned or sentinel
+(negative) scores are dropped; in the single-host runs used by tests and
+benchmarks every id is owned.
+
+Score dynamics:
+* EMA merge on revisit: ``s ← a·s_old + (1-a)·s_new`` (first visit writes
+  through), absorbing minibatch noise.
+* Staleness decay between epochs: deviations shrink toward the running
+  mean (``s ← m + c·(s-m)``), so an example scored long ago drifts back to
+  "average" rather than staying pinned to a stale extreme.
+
+The whole state is a flat dict of numpy arrays (``state_dict``), which the
+trainer nests into the checkpoint payload — restore is bitwise.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class ScoreStore:
+    def __init__(self, n_examples: int, *, host_id: int = 0, n_hosts: int = 1,
+                 ema: float = 0.9, staleness: float = 0.9):
+        if not 0 <= host_id < n_hosts:
+            raise ValueError(f"host_id {host_id} not in [0, {n_hosts})")
+        self.n = int(n_examples)
+        self.host_id = int(host_id)
+        self.n_hosts = int(n_hosts)
+        self.ema = float(ema)
+        self.staleness = float(staleness)
+        # owned ids: host_id, host_id + H, host_id + 2H, ...
+        self.n_local = (self.n - self.host_id + self.n_hosts - 1) // self.n_hosts
+        self.scores = np.zeros((self.n_local,), np.float32)
+        self.seen = np.zeros((self.n_local,), np.uint8)
+        self.updates = np.zeros((), np.int64)
+        self._n_seen = 0   # incremental Σseen: coverage() stays O(1)
+
+    # -- id mapping -----------------------------------------------------------
+    def owned(self, gids: np.ndarray) -> np.ndarray:
+        """Boolean mask of which global ids live on this host."""
+        gids = np.asarray(gids)
+        return (gids % self.n_hosts) == self.host_id
+
+    def slot(self, gids: np.ndarray) -> np.ndarray:
+        """Local slot of (owned) global ids."""
+        return np.asarray(gids) // self.n_hosts
+
+    def global_ids(self, slots: np.ndarray) -> np.ndarray:
+        return np.asarray(slots) * self.n_hosts + self.host_id
+
+    # -- writes ---------------------------------------------------------------
+    def update(self, gids, scores) -> int:
+        """EMA-merge fresh scores; ids this host doesn't own and sentinel
+        entries (score < 0, e.g. the presample uniform-phase padding) are
+        ignored. Returns how many slots were written."""
+        gids = np.asarray(gids, np.int64).reshape(-1)
+        scores = np.asarray(scores, np.float32).reshape(-1)
+        if gids.shape != scores.shape:
+            raise ValueError(f"ids {gids.shape} vs scores {scores.shape}")
+        keep = self.owned(gids) & (scores >= 0) & np.isfinite(scores)
+        gids, scores = gids[keep], scores[keep]
+        if gids.size == 0:
+            return 0
+        # a batch may repeat an id (sampling with replacement): keep the last
+        slots = self.slot(gids)
+        self._n_seen += int((self.seen[np.unique(slots)] == 0).sum())
+        old_seen = self.seen[slots].astype(bool)
+        merged = np.where(old_seen,
+                          self.ema * self.scores[slots] + (1 - self.ema) * scores,
+                          scores)
+        self.scores[slots] = merged
+        self.seen[slots] = 1
+        self.updates += gids.size
+        return int(gids.size)
+
+    def decay(self) -> None:
+        """Staleness decay: pull seen scores toward their mean (epoch tick)."""
+        m = self.seen.astype(bool)
+        if not m.any():
+            return
+        mean = float(self.scores[m].mean())
+        self.scores[m] = mean + self.staleness * (self.scores[m] - mean)
+
+    # -- reads ----------------------------------------------------------------
+    def coverage(self) -> float:
+        return self._n_seen / self.n_local if self.n_local else 0.0
+
+    def distribution(self, smoothing: float = 0.1,
+                     temperature: float = 1.0) -> np.ndarray:
+        """Sampling distribution p over this host's slots.
+
+        Unseen slots get the mean seen score (optimistic-neutral), the
+        scores are sharpened by ``score^(1/T)``, and the result is mixed
+        with uniform: ``p = (1-λ)·p_score + λ·u``. λ>0 bounds the weights
+        1/(N·pᵢ) and keeps the estimator's variance finite.
+        """
+        m = self.seen.astype(bool)
+        s = self.scores.astype(np.float64).copy()
+        fill = float(s[m].mean()) if m.any() else 1.0
+        s[~m] = fill
+        s = np.maximum(s, 1e-12)
+        if temperature != 1.0:
+            s = s ** (1.0 / temperature)
+        p = s / s.sum()
+        u = 1.0 / self.n_local
+        return ((1.0 - smoothing) * p + smoothing * u).astype(np.float64)
+
+    def tau(self, smoothing: float = 0.1, temperature: float = 1.0) -> float:
+        """eq. 26's τ of the store distribution (τ² = n·Σpᵢ², the same
+        identity ``repro.core.importance.tau`` computes on-device)."""
+        p = self.distribution(smoothing, temperature)
+        return float(np.sqrt(self.n_local * np.square(p).sum()))
+
+    def sample(self, rng: np.random.Generator, k: int,
+               smoothing: float = 0.1, temperature: float = 1.0):
+        """Draw k owned global ids ~ p (with replacement). Returns
+        (global_ids, p_of_chosen) — the caller turns p into unbiased
+        weights 1/(n_local·pᵢ)."""
+        p = self.distribution(smoothing, temperature)
+        slots = rng.choice(self.n_local, size=k, replace=True, p=p)
+        return self.global_ids(slots), p[slots]
+
+    def topk(self, gids_pool, k: int) -> np.ndarray:
+        """The k highest-scoring ids of an owned candidate pool; never-seen
+        ids rank highest (optimistic init: visit everything once)."""
+        gids_pool = np.asarray(gids_pool, np.int64)
+        if not self.owned(gids_pool).all():
+            raise ValueError("topk pool contains unowned ids")
+        slots = self.slot(gids_pool)
+        pri = np.where(self.seen[slots].astype(bool),
+                       self.scores[slots].astype(np.float64), np.inf)
+        # stable partial sort: ties (e.g. all-unseen cold start) keep pool order
+        order = np.argsort(-pri, kind="stable")[:k]
+        return gids_pool[order]
+
+    # -- checkpoint -----------------------------------------------------------
+    def state_dict(self) -> dict:
+        # copies: the async checkpointer writes on a background thread
+        # while training keeps mutating these arrays in place
+        return {"scores": self.scores.copy(), "seen": self.seen.copy(),
+                "updates": self.updates.copy()}
+
+    def load_state_dict(self, d) -> None:
+        scores = np.asarray(d["scores"], np.float32)
+        seen = np.asarray(d["seen"], np.uint8)
+        if scores.shape != (self.n_local,):
+            raise ValueError(
+                f"store shape {scores.shape} != ({self.n_local},) — "
+                "checkpoint from a different dataset or host topology")
+        self.scores = scores.copy()
+        self.seen = seen.copy()
+        self._n_seen = int(self.seen.astype(bool).sum())
+        self.updates = np.asarray(d["updates"], np.int64).reshape(())

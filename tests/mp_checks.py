@@ -13,6 +13,13 @@ import numpy as np  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 
+def _mesh_ctx(mesh):
+    """jax.set_mesh on new jax; the Mesh context manager on 0.4.x."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
 def check_pipeline_parallel():
     """GPipe over 4 stages == sequential application."""
     from repro.distributed.pipeline_parallel import pipeline_forward
@@ -76,7 +83,7 @@ def check_sharded_is_step_matches_single_device():
     sspecs = shd.state_specs(cfg, state_sds, mesh)
     named = lambda t: shd.to_named(t, mesh)
     state2 = train_state_init(lm, opt, key)
-    with jax.set_mesh(mesh):
+    with _mesh_ctx(mesh):
         fn = jax.jit(step, in_shardings=(named(sspecs), named(
             shd.batch_specs(cfg, jax.eval_shape(lambda: batch), mesh))),
             out_shardings=(named(sspecs), None))
@@ -137,7 +144,7 @@ def check_serve_sharded_equals_single():
     pspecs = shd.param_specs(cfg, jax.eval_shape(lambda: params), mesh)
     cspecs = shd.cache_specs(cfg, jax.eval_shape(lambda: caches), mesh)
     named = lambda t: shd.to_named(t, mesh)
-    with jax.set_mesh(mesh):
+    with _mesh_ctx(mesh):
         fn = jax.jit(lm.serve_step,
                      in_shardings=(named(pspecs), named(cspecs), None),
                      out_shardings=(None, named(cspecs)))

@@ -1,0 +1,357 @@
+"""Tests for the persistent score-memory sampler subsystem
+(``repro.sampler``): ScoreStore semantics + sharding, checkpoint
+round-trips, Monte-Carlo unbiasedness of the weighted estimators, the
+index-based data API, and all four schemes end-to-end through Trainer.fit.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import Checkpointer
+from repro.configs import get_config
+from repro.configs.base import (ISConfig, OptimConfig, RunConfig,
+                                SamplerConfig, ShapeConfig)
+from repro.core import importance as imp
+from repro.data.pipeline import (MemmapLM, PipelineState, Prefetcher,
+                                 SyntheticCLS, SyntheticLM)
+from repro.runtime.trainer import Trainer
+from repro.sampler import ScoreStore, make_sampler
+
+
+# ---------------------------------------------------------------------------
+# ScoreStore
+# ---------------------------------------------------------------------------
+def test_store_first_write_then_ema():
+    st = ScoreStore(8, ema=0.9)
+    st.update([2], [4.0])
+    assert st.scores[2] == pytest.approx(4.0)       # write-through on 1st
+    st.update([2], [2.0])
+    assert st.scores[2] == pytest.approx(0.9 * 4.0 + 0.1 * 2.0)
+    assert st.coverage() == pytest.approx(1 / 8)
+
+
+def test_store_ignores_sentinel_and_unowned():
+    st = ScoreStore(10, host_id=1, n_hosts=2)       # owns ids 1,3,5,7,9
+    n = st.update(np.arange(10), np.full(10, 3.0))
+    assert n == 5 and st.coverage() == 1.0
+    n = st.update([1, 3], [-1.0, np.nan])           # sentinel + nonfinite
+    assert n == 0
+    np.testing.assert_allclose(st.scores, 3.0)
+
+
+def test_store_sharding_partitions_ids():
+    """Every global id is owned by exactly one host slice."""
+    n, H = 23, 3
+    stores = [ScoreStore(n, host_id=h, n_hosts=H) for h in range(H)]
+    owners = np.stack([s.owned(np.arange(n)) for s in stores])
+    assert (owners.sum(0) == 1).all()
+    assert sum(s.n_local for s in stores) == n
+    for s in stores:
+        got = s.global_ids(np.arange(s.n_local))
+        assert s.owned(got).all() and (got < n).all()
+
+
+def test_store_staleness_decay_flattens():
+    st = ScoreStore(4, staleness=0.5)
+    st.update(np.arange(4), [1.0, 2.0, 3.0, 6.0])
+    tau0 = st.tau(smoothing=0.0)
+    st.decay()
+    assert st.scores.mean() == pytest.approx(3.0)   # mean preserved
+    assert st.tau(smoothing=0.0) < tau0             # deviations shrink
+    np.testing.assert_allclose(st.scores, [2.0, 2.5, 3.0, 4.5])
+
+
+def test_store_topk_prefers_unseen_then_scores():
+    st = ScoreStore(6)
+    st.update([0, 1, 2], [5.0, 1.0, 3.0])
+    top = st.topk(np.arange(6), 4)
+    assert set(top[:3]) == {3, 4, 5}                # unseen first, pool order
+    assert top[3] == 0                              # then best score
+
+
+def test_store_tau_matches_core_importance():
+    rng = np.random.default_rng(0)
+    st = ScoreStore(64)
+    st.update(np.arange(64), rng.uniform(0.1, 4.0, 64))
+    p = st.distribution(smoothing=0.2, temperature=0.7)
+    assert st.tau(0.2, 0.7) == pytest.approx(
+        float(imp.tau(jnp.asarray(p, jnp.float32))), rel=1e-4)
+
+
+def test_store_checkpointer_roundtrip(tmp_path):
+    rng = np.random.default_rng(1)
+    st = ScoreStore(40, ema=0.8)
+    st.update(rng.integers(0, 40, 100), rng.uniform(0.0, 5.0, 100))
+    ck = Checkpointer(tmp_path)
+    ck.save(7, st.state_dict())
+    st2 = ScoreStore(40, ema=0.8)
+    restored, step = ck.restore(st2.state_dict())
+    st2.load_state_dict(restored)
+    assert step == 7
+    np.testing.assert_array_equal(st2.scores, st.scores)
+    np.testing.assert_array_equal(st2.seen, st.seen)
+    assert int(st2.updates) == int(st.updates)
+
+
+# ---------------------------------------------------------------------------
+# estimator unbiasedness (Monte Carlo)
+# ---------------------------------------------------------------------------
+def test_presample_weighted_estimator_unbiased_mc():
+    """sample_with_replacement + unbiased_weights recover the uniform mean."""
+    rng = np.random.RandomState(0)
+    N, b, draws = 128, 32, 1500
+    x = jnp.asarray(rng.randn(N).astype(np.float32))
+    g = imp.normalize_scores(jnp.asarray(rng.rand(N).astype(np.float32) + 0.2))
+    key = jax.random.PRNGKey(0)
+
+    def one(key):
+        idx = imp.sample_with_replacement(key, g, b)
+        return (imp.unbiased_weights(g, idx) * x[idx]).mean()
+
+    ests = jax.vmap(one)(jax.random.split(key, draws))
+    se = float(jnp.std(ests)) / np.sqrt(draws)
+    assert float(jnp.mean(ests)) == pytest.approx(float(x.mean()),
+                                                  abs=max(4 * se, 1e-3))
+
+
+def test_history_weighted_estimator_unbiased():
+    """History-scheme weights 1/(n·pᵢ): exact expectation identity AND the
+    actual store.sample() Monte-Carlo path recover the uniform mean."""
+    rng = np.random.default_rng(3)
+    N = 96
+    x = rng.standard_normal(N)
+    st = ScoreStore(N)
+    st.update(np.arange(N), rng.uniform(0.05, 6.0, N))
+    for smoothing, temp in [(0.1, 1.0), (0.3, 0.5), (0.0, 2.0)]:
+        p = st.distribution(smoothing, temp)
+        w = 1.0 / (N * p)
+        # exact: E_{i~p}[w_i x_i] = Σ p_i w_i x_i = mean(x)
+        assert np.sum(p * w * x) == pytest.approx(x.mean(), rel=1e-9)
+    # Monte Carlo through the sampling path itself
+    draws, k = 400, 48
+    ests = []
+    for d in range(draws):
+        gids, pg = st.sample(np.random.default_rng(d), k, 0.1, 0.7)
+        ests.append((x[gids] / (N * pg)).mean())
+    se = np.std(ests) / np.sqrt(draws)
+    assert np.mean(ests) == pytest.approx(x.mean(), abs=max(4 * se, 1e-3))
+
+
+# ---------------------------------------------------------------------------
+# index-based data API
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("src_cls", [SyntheticLM, SyntheticCLS])
+def test_gather_matches_sequential_batch(src_cls):
+    src = src_cls(128, 16, n_examples=64, seed=5, host_id=0, n_hosts=1)
+    st = PipelineState(epoch=2, cursor=24)
+    direct, _ = src.batch(st, 8)
+    gathered = src.gather(src.local_indices(st, 8), epoch=st.epoch)
+    for k in direct:
+        np.testing.assert_array_equal(direct[k], gathered[k])
+
+
+def test_gather_matches_sequential_batch_memmap(tmp_path):
+    data = np.arange(1024, dtype=np.int32) % 97
+    path = tmp_path / "corpus.npy"
+    np.save(path, data)
+    src = MemmapLM(path, seq_len=16, seed=2, host_id=0, n_hosts=1)
+    st = PipelineState(epoch=1, cursor=8)
+    direct, _ = src.batch(st, 8)
+    gids = src.local_indices(st, 8)
+    gathered = src.gather(gids)
+    for k in direct:
+        np.testing.assert_array_equal(direct[k], gathered[k])
+    # ids are stable corpus slots: same content independent of epoch perm
+    again = src.gather(gids)
+    np.testing.assert_array_equal(gathered["tokens"], again["tokens"])
+
+
+def test_global_indices_concat_of_host_slices():
+    full = SyntheticLM(128, 16, n_examples=64, seed=1, host_id=0, n_hosts=1)
+    st = PipelineState(cursor=16)
+    gids = full.global_indices(st, 8)
+    parts = [SyntheticLM(128, 16, n_examples=64, seed=1, host_id=h,
+                         n_hosts=2).local_indices(st, 8) for h in range(2)]
+    np.testing.assert_array_equal(np.concatenate(parts), gids)
+
+
+def test_selective_pads_short_owned_pool(tmp_path):
+    """Multi-host + permuted ids: the host-owned subset of a window can be
+    smaller than k_local; batches must still have exactly k_local rows."""
+    np.save(tmp_path / "c.npy", np.arange(2048, dtype=np.int32) % 97)
+    run = _run_cfg("selective")
+    run = dataclasses.replace(
+        run, sampler=dataclasses.replace(run.sampler, selective_window=8))
+    src = MemmapLM(tmp_path / "c.npy", seq_len=16, seed=0,
+                   host_id=0, n_hosts=2)
+    sampler = make_sampler(run, src)
+    st = PipelineState()
+    short_seen = False
+    for step in range(30):
+        pool = src.global_indices(st, 8)
+        short_seen |= sampler.store.owned(pool).sum() < sampler.k_local
+        batch, meta, st = sampler.next_batch(st, step)
+        assert batch["tokens"].shape[0] == sampler.k_local
+        assert len(meta["gids"]) == sampler.k_local
+        assert sampler.store.owned(meta["gids"]).all()
+    assert short_seen          # the padding path actually ran
+
+
+def test_prefetcher_surfaces_worker_error_then_recovers():
+    class Flaky:
+        def __init__(self):
+            self.inner = SyntheticLM(128, 16, n_examples=64, seed=7,
+                                     host_id=0, n_hosts=1)
+            self.n = self.inner.n
+            self.fail_next = False
+
+        def batch(self, state, bs):
+            if self.fail_next:
+                self.fail_next = False
+                raise OSError("transient read error")
+            return self.inner.batch(state, bs)
+
+    src = Flaky()
+    pf = Prefetcher(src, PipelineState(), 8)
+    b1, _ = pf.next()                       # launches batch 2
+    src.fail_next = True
+    b2, _ = pf.next()                       # launches batch 3 — which fails
+    with pytest.raises(OSError, match="transient"):
+        pf.next()                           # real error, not KeyError('v')
+    b3, s3 = pf.next()                      # background retry succeeded
+    want, _ = src.inner.batch(PipelineState(cursor=16), 8)
+    np.testing.assert_array_equal(b3["tokens"], want["tokens"])
+
+
+def test_prefetcher_matches_direct_iteration():
+    src = SyntheticLM(128, 16, n_examples=64, seed=7, host_id=0, n_hosts=1)
+    direct, st = [], PipelineState()
+    for _ in range(5):
+        b, st = src.batch(st, 8)
+        direct.append(b)
+    pf = Prefetcher(src, PipelineState(), 8)
+    for want in direct:
+        got, _ = pf.next()
+        np.testing.assert_array_equal(got["tokens"], want["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# schemes end-to-end through Trainer.fit
+# ---------------------------------------------------------------------------
+def _run_cfg(scheme, tmp_path=None, **skw):
+    cfg = get_config("lm-tiny")
+    return RunConfig(
+        model=cfg,
+        shape=ShapeConfig("t", seq_len=16, global_batch=8, kind="train"),
+        optim=OptimConfig(name="adamw", lr=1e-3, weight_decay=0.0),
+        imp=ISConfig(enabled=True, presample_ratio=3, tau_th=1.2),
+        sampler=SamplerConfig(scheme=scheme, **skw),
+        remat=False, ckpt_dir=str(tmp_path) if tmp_path else None,
+        ckpt_every=4)
+
+
+def _source(run, n=128, seed=9):
+    return SyntheticLM(run.model.vocab_size, 16, n_examples=n, seed=seed,
+                       host_id=0, n_hosts=1)
+
+
+@pytest.mark.parametrize("scheme", ["uniform", "presample", "history",
+                                    "selective"])
+def test_scheme_end_to_end(scheme):
+    run = _run_cfg(scheme, min_coverage=0.25, tau_th=1.001, temperature=0.5)
+    tr = Trainer(run, source=_source(run))
+    state, hist = tr.fit(steps=24)
+    assert len(hist) == 24
+    assert all(np.isfinite(h["loss"]) for h in hist)
+    assert np.mean([h["loss"] for h in hist[-4:]]) < hist[0]["loss"]
+    assert tr.sampler.store.coverage() > 0.2        # feedback loop closed
+    if scheme == "history":
+        assert any(h["sampler_active"] for h in hist)
+
+
+def test_selective_prioritises_high_score_examples():
+    run = _run_cfg("selective")
+    src = _source(run, n=48)
+    sampler = make_sampler(run, src)
+    assert sampler.window == 24                     # b × presample_ratio
+    # fake memory: examples 12..23 of the first window score 10x the rest
+    sc = np.ones(48, np.float32)
+    sc[12:24] = 10.0
+    sampler.store.update(np.arange(48), sc)
+    batch, meta, _ = sampler.next_batch(PipelineState(), 0)
+    assert set(meta["gids"]) <= set(range(12, 24))
+    assert batch["tokens"].shape[0] == 8
+
+
+def test_history_trainer_checkpoint_restart_is_exact(tmp_path):
+    """Bitwise resume INCLUDING the score memory (history scheme active)."""
+    run = _run_cfg("history", tmp_path, min_coverage=0.25, tau_th=1.001,
+                   temperature=0.5)
+    t1 = Trainer(run, source=_source(run))
+    state_a, hist_a = t1.fit(steps=8)
+    store_a = t1.sampler.store
+
+    run2 = dataclasses.replace(run, ckpt_dir=str(tmp_path / "b"))
+    t2 = Trainer(run2, source=_source(run2))
+    t2.fit(steps=4)
+    t3 = Trainer(run2, source=_source(run2))
+    state_b, hist_b = t3.fit(steps=8)
+    store_b = t3.sampler.store
+
+    np.testing.assert_array_equal(store_a.scores, store_b.scores)
+    np.testing.assert_array_equal(store_a.seen, store_b.seen)
+    la = jax.tree_util.tree_leaves(state_a["params"])
+    lb = jax.tree_util.tree_leaves(state_b["params"])
+    for a, b in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_presample_feeds_store_with_sentinel_filtering():
+    """Uniform-phase presample steps only score b of B: the store must see
+    b updates per step, never the -1 padding."""
+    run = _run_cfg("presample")
+    tr = Trainer(run, source=_source(run))
+    state, hist = tr.fit(steps=3)
+    b = run.shape.global_batch
+    assert int(tr.sampler.store.updates) == 3 * b   # τ gate off → b per step
+    assert (tr.sampler.store.scores >= 0).all()
+
+
+def test_unknown_scheme_rejected():
+    run = _run_cfg("presample")
+    bad = dataclasses.replace(run, sampler=SamplerConfig(scheme="nope"))
+    with pytest.raises(ValueError, match="nope"):
+        make_sampler(bad, _source(run))
+
+
+def test_is_disabled_forces_uniform_for_memory_schemes():
+    """imp.enabled=False is the global IS kill-switch: history/selective
+    must not keep doing importance-based selection behind it."""
+    run = _run_cfg("history")
+    off = dataclasses.replace(run, imp=dataclasses.replace(run.imp,
+                                                           enabled=False))
+    assert make_sampler(off, _source(off)).scheme == "uniform"
+    assert make_sampler(run, _source(run)).scheme == "history"
+
+
+def test_scheme_switch_resumes_with_warm_store(tmp_path):
+    """A checkpoint written under one scheme warms another scheme's store
+    (lenient restore: shared keys load, scheme-specific extras keep init)."""
+    run_u = _run_cfg("uniform", tmp_path)
+    t1 = Trainer(run_u, source=_source(run_u))
+    t1.fit(steps=4)
+    cov = t1.sampler.store.coverage()
+    assert cov > 0
+
+    run_h = dataclasses.replace(
+        run_u, sampler=SamplerConfig(scheme="history"))
+    t2 = Trainer(run_h, source=_source(run_h))
+    state, pstate, step = t2.resume_or_init()
+    assert step == 4
+    assert t2.sampler.store.coverage() == cov       # warm store carried over
+    np.testing.assert_array_equal(t2.sampler.store.scores,
+                                  t1.sampler.store.scores)
+    assert float(t2.sampler.tau_gate) == 0.0        # extra kept its init
