@@ -28,6 +28,7 @@ def main() -> None:
         "fig7": pf.fig7_ablation_B,
         "tau": pf.tau_gate_behaviour,
         "scoring": scoring_overhead.scoring_overhead,
+        "scoring_overlap": scoring_overhead.bench_scoring_overlap,
         "svrg": svrg_compare.svrg_compare,
         "roofline": lambda: roofline.render(emit=print),
     }

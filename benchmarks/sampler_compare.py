@@ -106,3 +106,6 @@ def sampler_compare(steps=60):
 
 if __name__ == "__main__":
     sampler_compare()
+    # the tentpole's perf trajectory: sync vs overlapped engine scoring
+    from benchmarks.scoring_overhead import bench_scoring_overlap
+    bench_scoring_overlap()

@@ -4,14 +4,21 @@ relative to the forward pass).
 Times the three scoring implementations per call (CPU numbers — relative
 cost is what matters here; the TPU story is in §Roofline/§Perf via the
 dry-run bytes) and the forward pass itself for scale.
+
+``bench_scoring_overlap`` is the tentpole tracker: end-to-end step
+wall-clock of the decoupled scoring engine, synchronous vs overlapped
+(score batch k+1 behind update k) vs the serial on-device Algorithm 1, at
+``presample_ratio`` ∈ {2, 3, 5} → ``BENCH_scoring.json``.
 """
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import bench_model, emit, timeit
+from benchmarks.common import bench_model, emit, save_json, timeit
 from repro.models.lm import LM, token_stats_chunked, token_stats_fused, token_stats_naive
 
 
@@ -51,4 +58,68 @@ def scoring_overhead():
     emit("score.forward_only.us_per_call", round(us_fwd, 1), "logits only")
     emit("score.forward_plus_score.us_per_call", round(us_stats, 1),
          f"overhead={(us_stats / us_fwd - 1) * 100:.1f}%")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# sync vs overlapped engine scoring (the tentpole's perf trajectory)
+# ---------------------------------------------------------------------------
+def _run_scoring_mode(mode: str, ratio: int, steps: int):
+    """One tiny-LM training run; returns mean per-step wall-clock (ms,
+    measured callback-to-callback, first 5 steps dropped to shed compile)."""
+    from repro.configs import get_config
+    from repro.configs.base import (ISConfig, OptimConfig, RunConfig,
+                                    SamplerConfig, ShapeConfig)
+    from repro.data.pipeline import SyntheticLM
+    from repro.runtime.trainer import Trainer
+
+    cfg = get_config("lm-tiny")
+    host = mode in ("sync", "overlap")
+    run = RunConfig(
+        model=cfg,
+        shape=ShapeConfig("bench", seq_len=64, global_batch=16, kind="train"),
+        optim=OptimConfig(name="adamw", lr=1e-3, weight_decay=0.0),
+        # tau_th ~1 keeps the IS branch hot so every step pays scoring
+        imp=ISConfig(enabled=True, presample_ratio=ratio, tau_th=1.0001,
+                     overlap_scoring=(mode == "overlap")),
+        sampler=SamplerConfig(scheme="presample", host_score=host),
+        remat=False)
+    src = SyntheticLM(cfg.vocab_size, 64, n_examples=2048, seed=3,
+                      host_id=0, n_hosts=1)
+    tr = Trainer(run, source=src, gate="always" if not host else None)
+    stamps, losses = [], []
+
+    def cb(i, m):
+        stamps.append(time.perf_counter())
+        losses.append(m["loss"])
+
+    tr.fit(steps=steps, callback=cb)
+    dts = np.sort(np.diff(np.asarray(stamps))[5:])
+    # interquartile mean: sheds GC / CI-neighbour interference spikes that
+    # otherwise dominate CPU step timing at this scale
+    lo, hi = len(dts) // 4, max(3 * len(dts) // 4, len(dts) // 4 + 1)
+    return {"mode": mode, "ratio": ratio, "steps": steps,
+            "ms_per_step": float(np.mean(dts[lo:hi]) * 1e3),
+            "ms_per_step_p50": float(np.median(dts) * 1e3),
+            "final_loss": float(np.mean(losses[-5:]))}
+
+
+def bench_scoring_overlap(ratios=(2, 3, 5), steps=60):
+    """Step wall-clock of the decoupled scoring engine: serial on-device
+    Algorithm 1 ("ondevice"), engine scoring on the critical path ("sync"),
+    and engine scoring double-buffered behind the update ("overlap").
+    Artifact: benchmarks/artifacts/BENCH_scoring.json.
+    """
+    out = {}
+    for ratio in ratios:
+        for mode in ("ondevice", "sync", "overlap"):
+            r = _run_scoring_mode(mode, ratio, steps)
+            out[f"ratio{ratio}.{mode}"] = r
+            emit(f"scoring.ratio{ratio}.{mode}.ms_per_step",
+                 round(r["ms_per_step"], 2),
+                 f"final_loss={r['final_loss']:.4f}")
+        sync, ovl = out[f"ratio{ratio}.sync"], out[f"ratio{ratio}.overlap"]
+        emit(f"scoring.ratio{ratio}.overlap_speedup", None,
+             f"sync/overlap={sync['ms_per_step'] / ovl['ms_per_step']:.3f}")
+    save_json("BENCH_scoring", out)
     return out

@@ -4,8 +4,8 @@ from __future__ import annotations
 import importlib
 
 from repro.configs.base import (ISConfig, ModelConfig, OptimConfig, RunConfig,
-                                SHAPES, Segment, ShapeConfig, applicable_shapes,
-                                reduced)
+                                SHAPES, SamplerConfig, Segment, ShapeConfig,
+                                applicable_shapes, reduced)
 
 ARCHS = (
     "zamba2-1.2b",

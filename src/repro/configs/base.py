@@ -199,6 +199,11 @@ class ISConfig:
     # gradient variance drops as if the batch were τ× larger, so the lr can
     # scale like a √τ batch-size-scaling rule (capped). 0 disables.
     lr_tau_boost_cap: float = 0.0
+    # decoupled scoring engine (repro.scoring): overlap the engine's
+    # forward-only score pass for batch k+1 with batch k's update (scores
+    # go one step stale — selection tolerates that). Only applies to
+    # engine-backed host-side schemes (sampler.host_score).
+    overlap_scoring: bool = True
 
     def resolved_tau_th(self, b: int) -> float:
         if self.tau_th > 0:
@@ -231,6 +236,11 @@ class SamplerConfig:
     gate_every: int = 8           # refresh the store-τ gate every N steps
                                   # (computing τ is O(n/hosts) host work;
                                   # the store's own EMA smooths the signal)
+    host_score: bool = False      # presample only: score the B candidates
+                                  # on the host path via the decoupled
+                                  # ScoreEngine (enables overlapped scoring
+                                  # + out-of-band ScoreStore refresh)
+                                  # instead of inside the jitted train step
 
     def resolved_tau_th(self) -> float:
         return self.tau_th if self.tau_th > 0 else 1.05
@@ -269,6 +279,9 @@ class RunConfig:
     ckpt_every: int = 50
     keep_ckpts: int = 3
     step_deadline_factor: float = 2.0   # straggler guard
+    max_step_retries: int = 3           # per-batch retries after a
+                                        # straggler skip (the batch is
+                                        # RETRIED, never silently dropped)
 
 
 def reduced(cfg: ModelConfig, *, d_model=64, n_heads=4, n_kv_heads=2,

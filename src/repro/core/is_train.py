@@ -17,12 +17,28 @@ Per step (gate="cond", faithful):
 the technique's cost is what gets lowered); ``gate="never"`` is the uniform
 baseline.
 
-Distribution: the batch axis is sharded over ("pod","data"); scores are B
-scalars — replicating them (tiny all-gather) lets every device draw the same
-categorical sample, and the row gather lowers to an all-to-all.
+All step variants are ONE implementation (``build_step``) parameterized by
+a ``StepSpec``:
+
+* ``presample`` — Algorithm 1 above: B candidates in, on-device scoring +
+  τ-gated resampling (the historical ``build_train_step``);
+* ``host``      — exactly b samples the HOST already chose (score-memory
+  schemes and the engine-backed host presample path), optional
+  ``batch["weights"]``, an ``is_flag`` scalar carrying the live host-side τ
+  (the historical ``build_score_step``);
+* ``plain``     — uniform-SGD baseline, no controller, no score metrics
+  (the historical ``build_uniform_step``).
+
+The τ controller (``_controller``), the §5-future-work lr τ-boost
+(``_tau_boost``), and the unbiasedness weighting (``_attach_weights`` +
+the ``weights`` column consumed by ``_loss_scores_grads``) each exist
+exactly once here; the three named builders below are thin wrappers kept
+for call-site compatibility. The decoupled forward-only scoring path
+(no remat / no grads / ``score_dtype``) lives in ``repro.scoring``.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, Dict
 
@@ -102,18 +118,115 @@ def _apply_update(optimizer, state, loss, grads, extra):
     return new_state, metrics
 
 
-def build_train_step(lm: LM, run_cfg, optimizer, *, gate=None):
-    """Returns step(state, big_batch) -> (state, metrics).
+# ---------------------------------------------------------------------------
+# the three shared blocks (each exists exactly once)
+# ---------------------------------------------------------------------------
+def _controller(ctrl, g, ema, drawn_is, *, freeze_when_is=False):
+    """τ-EMA update (Algorithm 1 line 17). ``freeze_when_is`` holds the EMA
+    on importance-drawn batches — their scores are not a uniform sample, so
+    their τ would be biased (the host-chosen-batch step's rule)."""
+    ctrl2 = imp.controller_update(ctrl, g, ema, drawn_is)
+    if freeze_when_is:
+        ctrl2 = ctrl2._replace(tau_ema=jnp.where(drawn_is, ctrl.tau_ema,
+                                                 ctrl2.tau_ema))
+    return ctrl2
 
-    ``big_batch`` holds B = presample_ratio × b samples (leading axis B).
+
+def _tau_boost(grads, cap, active, tau_val):
+    """BEYOND-PAPER (§5 future work): variance reduction ≙ a τ×-larger
+    batch, so scale the step like sqrt-batch-size scaling (capped), only
+    while IS is actually active."""
+    boost = jnp.where(active,
+                      jnp.clip(jnp.sqrt(jnp.maximum(tau_val, 1.0)),
+                               1.0, cap),
+                      1.0)
+    return jax.tree_util.tree_map(lambda g: g * boost, grads)
+
+
+def _attach_weights(batch, g, idx):
+    """Unbiasedness weighting (eq. 2-5): gather the resampled rows and
+    attach wᵢ = 1/(B·gᵢ)."""
+    small = _batch_rows(batch, idx)
+    small["weights"] = imp.unbiased_weights(g, idx)
+    return small
+
+
+# ---------------------------------------------------------------------------
+# the one step implementation
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class StepSpec:
+    """What flavour of step ``build_step`` emits.
+
+    kind: "presample" (B candidates in, Algorithm 1 on device),
+          "host" (b host-chosen samples + is_flag scalar),
+          "plain" (uniform-SGD baseline).
+    gate: presample only — "cond" (τ-gated), "always", "never".
+    """
+
+    kind: str
+    gate: str = "cond"
+
+    def __post_init__(self):
+        if self.kind not in ("presample", "host", "plain"):
+            raise ValueError(f"unknown StepSpec kind {self.kind!r}")
+        if self.gate not in ("cond", "always", "never"):
+            raise ValueError(f"unknown StepSpec gate {self.gate!r}")
+
+    @property
+    def flagged(self) -> bool:
+        """Does the emitted step take the extra ``is_flag`` operand?"""
+        return self.kind == "host"
+
+
+def build_step(lm: LM, run_cfg, optimizer, spec: StepSpec):
+    """The unified step. Signatures by kind:
+
+    presample: step(state, big_batch)          (B = ratio·b leading rows)
+    host:      step(state, batch, is_flag)     (exactly b rows)
+    plain:     step(state, batch)              (exactly b rows)
     """
     icfg = run_cfg.imp
+    remat = run_cfg.remat
+    micro = run_cfg.microbatches
+
+    update_core = functools.partial(
+        _loss_scores_grads, lm, remat=remat, score_impl=icfg.score_impl,
+        microbatches=micro)
+
+    if spec.kind == "plain":
+        def plain_step(state, batch):
+            loss, _, _, grads = update_core(state["params"], batch)
+            return _apply_update(optimizer, state, loss, grads, {})
+        return plain_step
+
+    if spec.kind == "host":
+        def host_step(state, batch, is_flag):
+            loss, per_sample, scores, grads = update_core(
+                state["params"], batch)
+            if icfg.score_by == "loss":
+                scores = jax.lax.stop_gradient(per_sample)
+            scores = jax.lax.stop_gradient(scores.astype(jnp.float32))
+            g = imp.normalize_scores(scores)
+            drawn_is = is_flag > 0.5
+            ctrl = _controller(state["ctrl"], g, icfg.ema, drawn_is,
+                               freeze_when_is=True)
+            if icfg.lr_tau_boost_cap > 0:
+                # IS-drawn batches carry the live host-side τ in is_flag
+                grads = _tau_boost(grads, icfg.lr_tau_boost_cap,
+                                   drawn_is, is_flag)
+            return _apply_update(
+                optimizer, dict(state, ctrl=ctrl), loss, grads,
+                {"tau": ctrl.tau_ema,
+                 "is_active": drawn_is.astype(jnp.float32),
+                 "sample_scores": scores})
+        return host_step
+
+    # presample: Algorithm 1 with the τ gate
     b = run_cfg.shape.global_batch
     B = b * icfg.presample_ratio
     tau_th = icfg.resolved_tau_th(b)
-    gate = gate or ("cond" if icfg.enabled else "never")
-    remat = run_cfg.remat
-    micro = run_cfg.microbatches
+    gate = spec.gate
 
     def is_branch(state, big_batch, key):
         # Algorithm 1 lines 6-10 (scoring pass is forward-only)
@@ -123,36 +236,30 @@ def build_train_step(lm: LM, run_cfg, optimizer, *, gate=None):
             scores = loss_ps            # baseline scheme (paper §4: "loss")
         g = imp.normalize_scores(scores)
         idx = imp.sample_with_replacement(key, g, b)
-        w = imp.unbiased_weights(g, idx)
-        small = _batch_rows(big_batch, idx)
-        small["weights"] = w
-        loss, _, _, grads = _loss_scores_grads(
-            lm, state["params"], small, remat=remat,
-            score_impl=icfg.score_impl, microbatches=micro)
-        ctrl = imp.controller_update(state["ctrl"], g, icfg.ema,
-                                     jnp.ones((), jnp.bool_))
+        small = _attach_weights(big_batch, g, idx)
+        loss, _, _, grads = update_core(state["params"], small)
+        ctrl = _controller(state["ctrl"], g, icfg.ema,
+                           jnp.ones((), jnp.bool_))
         return loss, grads, ctrl, jnp.float32(1.0), \
             jax.lax.stop_gradient(scores.astype(jnp.float32))
 
     def uniform_branch(state, big_batch, key):
         # Algorithm 1 lines 12-15: τ refreshed from the b-sample forward
         small = {k: v[:b] for k, v in big_batch.items()}
-        loss, per_sample, scores, grads = _loss_scores_grads(
-            lm, state["params"], small, remat=remat,
-            score_impl=icfg.score_impl, microbatches=micro)
+        loss, per_sample, scores, grads = update_core(state["params"], small)
         if icfg.score_by == "loss":
             scores = per_sample
         scores = jax.lax.stop_gradient(scores.astype(jnp.float32))
         g = imp.normalize_scores(scores)
-        ctrl = imp.controller_update(state["ctrl"], g, icfg.ema,
-                                     jnp.zeros((), jnp.bool_))
+        ctrl = _controller(state["ctrl"], g, icfg.ema,
+                           jnp.zeros((), jnp.bool_))
         # only the first b of B candidates were scored; pad with the -1
         # sentinel so the score memory ignores the rest
         scores_B = jnp.concatenate(
             [scores, jnp.full((B - b,), -1.0, jnp.float32)])
         return loss, grads, ctrl, jnp.float32(0.0), scores_B
 
-    def step(state, big_batch):
+    def presample_step(state, big_batch):
         key = jax.random.fold_in(state["rng"], state["step"])
         if gate == "always":
             loss, grads, ctrl, was_is, scores = is_branch(state, big_batch, key)
@@ -164,15 +271,8 @@ def build_train_step(lm: LM, run_cfg, optimizer, *, gate=None):
             loss, grads, ctrl, was_is, scores = jax.lax.cond(
                 use_is, is_branch, uniform_branch, state, big_batch, key)
         if icfg.lr_tau_boost_cap > 0:
-            # paper §5 future work: variance reduction ≙ a τ×-larger batch,
-            # so scale the step like sqrt-batch-size scaling (capped), only
-            # while IS is actually active.
-            boost = jnp.where(
-                was_is > 0,
-                jnp.clip(jnp.sqrt(jnp.maximum(ctrl.tau_ema, 1.0)),
-                         1.0, icfg.lr_tau_boost_cap),
-                1.0)
-            grads = jax.tree_util.tree_map(lambda g: g * boost, grads)
+            grads = _tau_boost(grads, icfg.lr_tau_boost_cap,
+                               was_is > 0, ctrl.tau_ema)
         new_state, metrics = _apply_update(
             optimizer, dict(state, ctrl=ctrl), loss, grads,
             {"tau": ctrl.tau_ema, "is_active": was_is,
@@ -181,66 +281,37 @@ def build_train_step(lm: LM, run_cfg, optimizer, *, gate=None):
              "sample_scores": scores})
         return new_state, metrics
 
-    return step
+    return presample_step
+
+
+# ---------------------------------------------------------------------------
+# thin named wrappers (call-site compatibility)
+# ---------------------------------------------------------------------------
+def build_train_step(lm: LM, run_cfg, optimizer, *, gate=None):
+    """Returns step(state, big_batch) -> (state, metrics).
+
+    ``big_batch`` holds B = presample_ratio × b samples (leading axis B).
+    """
+    gate = gate or ("cond" if run_cfg.imp.enabled else "never")
+    return build_step(lm, run_cfg, optimizer, StepSpec("presample", gate=gate))
 
 
 def build_score_step(lm: LM, run_cfg, optimizer):
     """Train step for the host-side sampler schemes (history/selective/
-    uniform): exactly b samples the HOST already chose, an optional
-    ``batch["weights"]`` column (1/(n·pᵢ) for unbiased dataset-level IS),
-    and per-sample scores in the metrics so the trainer closes the
-    feedback loop into the ``ScoreStore``.
+    uniform/host-presample): exactly b samples the HOST already chose, an
+    optional ``batch["weights"]`` column (1/(n·pᵢ) for unbiased
+    dataset-level IS), and per-sample scores in the metrics so the trainer
+    closes the feedback loop into the ``ScoreStore``.
 
     ``is_flag`` (scalar): 0 for a uniform-drawn batch, else the sampler's
-    current dataset-level τ estimate (≥ 1). The τ EMA is refreshed only
-    from uniform-drawn batches — scores of an importance-drawn batch are
-    not a uniform sample, so their τ would be biased — and the optional
-    lr τ-boost uses the live host-side τ carried in the flag.
+    current host-side τ estimate (≥ 1). The τ EMA is refreshed only from
+    uniform-drawn batches — scores of an importance-drawn batch are not a
+    uniform sample, so their τ would be biased — and the optional lr
+    τ-boost uses the live host-side τ carried in the flag.
     """
-    icfg = run_cfg.imp
-    remat = run_cfg.remat
-    micro = run_cfg.microbatches
-
-    def step(state, batch, is_flag):
-        loss, per_sample, scores, grads = _loss_scores_grads(
-            lm, state["params"], batch, remat=remat,
-            score_impl=icfg.score_impl, microbatches=micro)
-        if icfg.score_by == "loss":
-            scores = jax.lax.stop_gradient(per_sample)
-        scores = jax.lax.stop_gradient(scores.astype(jnp.float32))
-        g = imp.normalize_scores(scores)
-        drawn_is = is_flag > 0.5
-        ctrl2 = imp.controller_update(state["ctrl"], g, icfg.ema, drawn_is)
-        ctrl = ctrl2._replace(tau_ema=jnp.where(drawn_is,
-                                                state["ctrl"].tau_ema,
-                                                ctrl2.tau_ema))
-        if icfg.lr_tau_boost_cap > 0:
-            # same §5-future-work boost as build_train_step: IS-drawn
-            # batches behave like a τ×-larger batch (live τ via is_flag)
-            boost = jnp.where(
-                drawn_is,
-                jnp.clip(jnp.sqrt(jnp.maximum(is_flag, 1.0)),
-                         1.0, icfg.lr_tau_boost_cap),
-                1.0)
-            grads = jax.tree_util.tree_map(lambda gr: gr * boost, grads)
-        return _apply_update(
-            optimizer, dict(state, ctrl=ctrl), loss, grads,
-            {"tau": ctrl.tau_ema,
-             "is_active": drawn_is.astype(jnp.float32),
-             "sample_scores": scores})
-
-    return step
+    return build_step(lm, run_cfg, optimizer, StepSpec("host"))
 
 
 def build_uniform_step(lm: LM, run_cfg, optimizer):
     """Plain-SGD baseline step on a batch of exactly b samples."""
-    remat = run_cfg.remat
-    micro = run_cfg.microbatches
-
-    def step(state, batch):
-        loss, _, _, grads = _loss_scores_grads(
-            lm, state["params"], batch, remat=remat,
-            score_impl=run_cfg.imp.score_impl, microbatches=micro)
-        return _apply_update(optimizer, state, loss, grads, {})
-
-    return step
+    return build_step(lm, run_cfg, optimizer, StepSpec("plain"))

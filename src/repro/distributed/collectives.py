@@ -82,6 +82,43 @@ def constrain_bsd(x, head_dim_index=None):
 
 
 # ---------------------------------------------------------------------------
+# multi-host score gather (the repro.scoring engine's host-side hook)
+# ---------------------------------------------------------------------------
+def gather_host_scores(local_scores, *, host_id=None, n_hosts=None,
+                       n_global=None):
+    """Assemble the GLOBAL score vector from host-local shards.
+
+    The ``ScoreStore`` strides example ids over hosts (host ``h`` owns
+    ``{i : i % H == h}``), so the global vector interleaves the per-host
+    shards: ``out[h::H] = shard_h``. Single-process (tests, CPU examples)
+    this is the identity; with multiple processes it all-gathers the
+    host-local shards via ``multihost_utils`` before interleaving.
+    """
+    local = np.asarray(local_scores, np.float32).reshape(-1)
+    n_hosts = jax.process_count() if n_hosts is None else int(n_hosts)
+    if n_hosts == 1:
+        return local if n_global is None else local[:n_global]
+    if n_global is None:
+        # shard lengths differ across hosts when n % n_hosts != 0, and
+        # process_allgather needs one fixed shape — the caller must say
+        # how long the global vector is
+        raise ValueError("n_global is required for a multi-process gather "
+                         "(host-local shards may be uneven)")
+    host_id = jax.process_index() if host_id is None else int(host_id)
+    from jax.experimental import multihost_utils
+    # pad to a common shard length so process_allgather gets a fixed shape
+    per = (n_global + n_hosts - 1) // n_hosts
+    padded = np.full((per,), -1.0, np.float32)
+    padded[:local.size] = local
+    shards = np.asarray(multihost_utils.process_allgather(padded))
+    out = np.full((n_global,), -1.0, np.float32)
+    for h in range(n_hosts):
+        ids = np.arange(h, n_global, n_hosts)
+        out[ids] = shards[h][:ids.size]
+    return out
+
+
+# ---------------------------------------------------------------------------
 # compressed cross-pod all-reduce (used via shard_map by grad compression)
 # ---------------------------------------------------------------------------
 def ring_allreduce_compressed(x, axis_name, compress, decompress):

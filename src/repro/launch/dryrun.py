@@ -73,6 +73,13 @@ def collective_bytes(hlo_text: str):
     return per_kind, sum(per_kind.values())
 
 
+def mesh_ctx(mesh):
+    """jax.set_mesh on new jax; the Mesh context manager on 0.4.x."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
 def choose_microbatches(cfg, dp: int, global_batch: int) -> int:
     """Enough gradient accumulation that activations fit 16 GB/chip."""
     n = cfg.param_count()
@@ -90,7 +97,10 @@ def choose_microbatches(cfg, dp: int, global_batch: int) -> int:
 
 # ---------------------------------------------------------------------------
 def build_cell(arch: str, shape_name: str, mesh_kind: str, variant: str):
-    """Returns (jitted_fn, example_args tuple of ShapeDtypeStructs, meta)."""
+    """Returns (mesh, jitted_fn, example_args tuple of ShapeDtypeStructs,
+    meta, score_bundle). ``score_bundle`` is (score_fn, score_args) for
+    IS train variants — the decoupled engine's forward-only score fn,
+    lowered and costed SEPARATELY from the update fn — else None."""
     import dataclasses
 
     from repro.configs import get_config
@@ -135,7 +145,18 @@ def build_cell(arch: str, shape_name: str, mesh_kind: str, variant: str):
                      donate_argnums=(0,))
         meta = {"microbatches": micro, "presample_ratio": ratio,
                 "step": "train_step"}
-        return mesh, fn, (state_sds, batch_sds), meta
+        score_bundle = None
+        if variant.startswith("is"):
+            # the decoupled scoring engine's fn: forward-only, score_dtype,
+            # no remat, batch sharded over dp, params on their train layout
+            from repro.scoring import ScoreEngine
+            engine = ScoreEngine(lm, run)
+            pspecs = shd.param_specs(cfg, state_sds["params"], mesh)
+            score_fn = jax.jit(engine.fwd,
+                               in_shardings=(named(pspecs),
+                                             named(batch_specs)))
+            score_bundle = (score_fn, (state_sds["params"], batch_sds))
+        return mesh, fn, (state_sds, batch_sds), meta, score_bundle
 
     # serving
     batch_sds, cache_sds = serve_input_specs(cfg, shape)
@@ -152,7 +173,7 @@ def build_cell(arch: str, shape_name: str, mesh_kind: str, variant: str):
                  out_shardings=(None, named(cspecs)),
                  donate_argnums=(1,))
     meta = {"step": "serve_step", "kind": shape.kind}
-    return mesh, fn, (params_sds, cache_sds, batch_sds), meta
+    return mesh, fn, (params_sds, cache_sds, batch_sds), meta, None
 
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str, variant: str,
@@ -175,23 +196,53 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, variant: str,
            "variant": variant, "ok": False}
     t0 = time.time()
     try:
-        mesh, fn, args, meta = build_cell(arch, shape_name, mesh_kind, variant)
+        mesh, fn, args, meta, score_bundle = build_cell(
+            arch, shape_name, mesh_kind, variant)
         rec.update(meta)
         n_chips = mesh.devices.size
-        with jax.set_mesh(mesh):
+        with mesh_ctx(mesh):
             lowered = fn.lower(*args)
             t_lower = time.time()
             compiled = lowered.compile()
             t_compile = time.time()
+            score_compiled = None
+            if score_bundle is not None:
+                score_fn, score_args = score_bundle
+                score_compiled = score_fn.lower(*score_args).compile()
+            t_score = time.time()
 
         # trip-count-aware analysis (XLA's cost_analysis counts scan
-        # bodies once — see repro.launch.hlo_cost and tests/test_hlo_cost)
-        from repro.launch.hlo_cost import analyze
-        hlo = compiled.as_text()
-        hc = analyze(hlo)
+        # bodies once — see repro.launch.hlo_cost and tests/test_hlo_cost).
+        # The engine's score fn is costed SEPARATELY from the update fn —
+        # its per-chip cost is the B term of the paper's speedup criterion.
+        from repro.launch.hlo_cost import analyze_fns
+        hlos = {"update_fn": compiled.as_text()}
+        if score_compiled is not None:
+            hlos["score_fn"] = score_compiled.as_text()
+        costs = analyze_fns(hlos)
+        hc = costs["update_fn"]
         flops = hc["flops"]
         bytes_accessed = hc["bytes"]
+        if "score_fn" in costs:
+            sc = costs["score_fn"]
+            s_terms = {"compute_s": sc["flops"] / PEAK_FLOPS,
+                       "memory_s": sc["bytes"] / HBM_BW,
+                       "collective_s": sc["collective_bytes"] / ICI_BW}
+            rec["score_fn"] = {
+                "flops_per_chip": sc["flops"],
+                "bytes_per_chip": sc["bytes"],
+                "collective_bytes_per_chip": sc["collective_bytes"],
+                "collectives": sc["collectives"],
+                "terms": s_terms,
+                "dominant": max(s_terms, key=s_terms.get),
+                "compile_s": round(t_score - t_compile, 2),
+                # score cost relative to the update step (should sit near
+                # the paper's B/(B+3b) forward-equivalents fraction)
+                "flops_frac_of_update": (sc["flops"] / flops) if flops else None,
+            }
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):   # older jaxlib: entry per device
+            ca = ca[0] if ca else {}
         rec["xla_flops_uncorrected"] = float(ca.get("flops", 0.0))
         try:
             ma = compiled.memory_analysis()

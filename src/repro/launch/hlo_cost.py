@@ -261,3 +261,13 @@ def analyze(text: str):
     return {"flops": float(flops), "bytes": float(bbytes),
             "collectives": {k: float(v) for k, v in coll.items()},
             "collective_bytes": float(sum(coll.values()))}
+
+
+def analyze_fns(hlos: dict) -> dict:
+    """Cost several compiled HLO modules SEPARATELY, e.g. the scoring
+    engine's forward-only fn apart from the update step's
+    (``{"update_fn": ..., "score_fn": ...}``). Per-module accounting is
+    what makes the paper's B + 3b < 3τb criterion checkable from a
+    dry-run: the score fn's cost IS the B term.
+    """
+    return {name: analyze(text) for name, text in hlos.items()}

@@ -39,6 +39,14 @@ def main():
     ap.add_argument("--no-is", action="store_true")
     ap.add_argument("--score-impl", default="fused",
                     choices=["fused", "naive", "chunked", "pallas"])
+    ap.add_argument("--host-score", action="store_true",
+                    help="score presample candidates on the decoupled "
+                         "ScoreEngine path (enables overlapped scoring)")
+    ap.add_argument("--score-dtype", default="bfloat16",
+                    help="engine scoring compute dtype ('none' = model dtype)")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="keep engine scoring on the critical path "
+                         "(serial; for A/B timing)")
     ap.add_argument("--compression", default="none",
                     choices=["none", "int8", "topk"])
     ap.add_argument("--microbatches", type=int, default=0)
@@ -53,7 +61,7 @@ def main():
 
     from repro.configs import get_config
     from repro.configs.base import (SHAPES, ISConfig, OptimConfig, RunConfig,
-                                    ShapeConfig, reduced)
+                                    SamplerConfig, ShapeConfig, reduced)
     from repro.data.pipeline import SyntheticLM
     from repro.launch.dryrun import choose_microbatches
     from repro.launch.mesh import make_host_mesh, make_production_mesh
@@ -82,7 +90,10 @@ def main():
                           compression=args.compression),
         imp=ISConfig(enabled=not args.no_is,
                      presample_ratio=args.presample_ratio,
-                     tau_th=args.tau_th, score_impl=args.score_impl),
+                     tau_th=args.tau_th, score_impl=args.score_impl,
+                     score_dtype=args.score_dtype,
+                     overlap_scoring=not args.no_overlap),
+        sampler=SamplerConfig(host_score=args.host_score),
         steps=args.steps, microbatches=micro,
         ckpt_dir=args.ckpt, ckpt_every=args.ckpt_every, seed=args.seed)
 

@@ -170,10 +170,21 @@ class LM:
                        "tokens": mask.sum()}
 
     # -- per-sample loss + importance score (forward only) -------------------
-    def sample_stats(self, params, batch, *, score_impl="fused", impl="auto"):
+    def sample_stats(self, params, batch, *, score_impl="fused", impl="auto",
+                     score_dtype=None):
         """Returns (per_sample_loss, per_sample_score) — one forward pass,
-        no gradients. The paper's scoring phase (Algorithm 1, line 7)."""
+        no gradients. The paper's scoring phase (Algorithm 1, line 7).
+
+        ``score_dtype`` optionally casts floating params down (e.g. bf16)
+        before the forward — the decoupled ``repro.scoring.ScoreEngine``
+        path, where scores only need to rank samples, not train them.
+        """
         cfg = self.cfg
+        if score_dtype is not None:
+            dt = jnp.dtype(score_dtype)
+            params = jax.tree_util.tree_map(
+                lambda p: p.astype(dt)
+                if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
         logits, _ = self.logits(jax.lax.stop_gradient(params), batch, impl=impl)
         labels = batch["labels"]
         if cfg.input_mode == "tokens+image":
@@ -186,6 +197,12 @@ class LM:
         loss_ps = (ce * mask).sum(-1) / denom
         score = jnp.sqrt(jnp.maximum((g2 * mask).sum(-1), 1e-20))
         return loss_ps, score
+
+    def score_engine(self, run_cfg, mesh=None):
+        """The decoupled scoring path: a ``repro.scoring.ScoreEngine`` whose
+        jitted forward-only score fn wraps this model's ``sample_stats``."""
+        from repro.scoring import ScoreEngine
+        return ScoreEngine(self, run_cfg, mesh=mesh)
 
     # -- serving ------------------------------------------------------------
     def caches(self, batch_size, max_len, dtype=None):

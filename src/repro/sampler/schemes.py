@@ -1,10 +1,15 @@
 """Pluggable example-selection schemes behind one ``Sampler`` API.
 
-The trainer's loop is scheme-agnostic:
+The trainer's loop is scheme-agnostic and split in two phases so scoring
+can overlap the update step:
 
-    batch, meta, pstate' = sampler.next_batch(pstate, step)   # host side
+    handle = sampler.begin(pstate, step, params)              # may launch
+    batch, meta, pstate' = sampler.finish(handle, params)     # host side
     state, metrics = step_fn(state, batch[, meta.is_flag])    # device side
     sampler.observe(meta, metrics["sample_scores"])           # feedback
+
+``begin``/``finish`` degrade to a synchronous ``next_batch`` for schemes
+that don't score out-of-band.
 
 Schemes:
 
@@ -13,6 +18,12 @@ Schemes:
 * ``presample`` — the paper's Algorithm 1: batches of B = ratio·b, the
   device scores candidates and resamples; the τ controller lives on
   device (``repro.core.is_train.build_train_step``).
+* ``presample`` + ``host_score`` — the same Algorithm 1 but the scoring
+  pass runs on the decoupled ``repro.scoring.ScoreEngine`` path (forward
+  only, ``score_dtype``, no remat) and selection happens on host; the
+  trainer can launch step k+1's scoring while step k's update runs, and
+  the ``ScoreStore`` is refreshed out-of-band with ALL B candidate scores
+  every step (``HostPresampleSampler``).
 * ``history`` — dataset-level importance sampling from the persistent
   score memory: draw b ids ∝ smoothed/temperature-sharpened stored
   scores, attach unbiased weights 1/(n·pᵢ), zero scoring overhead. The
@@ -28,12 +39,13 @@ Schemes:
 slice of the step's global score vector they correspond to); the store
 drops ids this host doesn't own. NOTE: the observe() contract assumes the
 step's ``sample_scores`` metric is the GLOBAL (replicated) score vector —
-true single-host; a true multi-process launch additionally needs the
-trainer to assemble global batches and all-gather scores (ROADMAP open
-item) before these schemes are multi-host-safe.
+true single-host; a true multi-process launch additionally routes scores
+through the engine's host-side gather hook
+(``ScoreEngine.gather_scores``) before the store update.
 """
 from __future__ import annotations
 
+import jax
 import numpy as np
 
 from repro.data.pipeline import PipelineState
@@ -58,6 +70,7 @@ class Sampler:
                                 n_hosts=self.n_hosts, ema=self.cfg.ema,
                                 staleness=self.cfg.staleness)
         self._epoch = np.zeros((), np.int64)
+        self.engine = None       # repro.scoring.ScoreEngine (bind_engine)
 
     # global rows the device step sees per call
     @property
@@ -80,6 +93,35 @@ class Sampler:
         batch, gids, nxt = self._sequential(pstate, self.fetch_size)
         meta = {"gids": gids, "rows": (0, self.fetch_size), "is_flag": 0.0}
         return batch, meta, nxt
+
+    # -- two-phase API (overlapped scoring) -----------------------------------
+    def begin(self, pstate: PipelineState, step: int, params=None):
+        """Phase 1: start producing the batch for ``step``. Engine-backed
+        schemes launch their (async) scoring pass here so it overlaps
+        whatever device work is in flight; the base scheme just records
+        where to resume."""
+        return {"pstate": pstate, "step": step}
+
+    def finish(self, handle, params=None):
+        """Phase 2: materialise (batch, meta, pstate'). ``params`` is used
+        only if ``begin`` didn't already score (the synchronous path)."""
+        return self.next_batch(handle["pstate"], handle["step"])
+
+    # -- decoupled scoring engine ---------------------------------------------
+    def bind_engine(self, engine) -> None:
+        """Attach a ``repro.scoring.ScoreEngine`` (host-side scoring and
+        out-of-band store refresh route through it)."""
+        self.engine = engine
+
+    def refresh_scores(self, params, gids, epoch: int = 0) -> int:
+        """Out-of-band ``ScoreStore`` refresh: score arbitrary example ids
+        through the engine's forward-only path and merge — no train step
+        involved. Returns how many store slots were written."""
+        if self.engine is None:
+            raise RuntimeError("no ScoreEngine bound (call bind_engine)")
+        batch = self.source.gather(np.asarray(gids, np.int64), epoch=epoch)
+        _, scores = self.engine.score_host(params, batch)
+        return self.store.update(gids, scores)
 
     def observe(self, meta, scores) -> None:
         lo, hi = meta["rows"]
@@ -111,6 +153,108 @@ class PresampleSampler(Sampler):
     @property
     def fetch_size(self) -> int:
         return self.b * self.icfg.presample_ratio
+
+
+class HostPresampleSampler(Sampler):
+    """Algorithm 1 with the scoring pass on the decoupled engine path.
+
+    Per step: fetch B = ratio·b sequential candidates, score them with the
+    ``ScoreEngine`` (forward-only, ``score_dtype``, no remat — launched in
+    ``begin`` so it can overlap the previous update), τ-gate on a host-side
+    EMA mirroring the on-device controller, and either resample b ∝ Ĝ with
+    weights 1/(B·gᵢ) (IS phase) or take the first b with unit weights
+    (uniform phase). ALL B candidate scores refresh the ``ScoreStore``
+    out-of-band, so the memory warms ratio× faster than training alone.
+
+    Candidate scoring is always a uniform (sequential) draw, so — unlike
+    the host-chosen score-memory schemes — every step refreshes τ. NOTE:
+    single-host semantics (like history/selective): a true multi-process
+    launch routes scores through ``ScoreEngine.gather_scores`` first.
+    """
+
+    scheme = "presample_host"
+
+    def __init__(self, run_cfg, source):
+        super().__init__(run_cfg, source)
+        self.B = self.b * self.icfg.presample_ratio
+        self.tau_th = self.icfg.resolved_tau_th(self.b)
+        self.tau_ema = np.zeros((), np.float64)
+        self.overlap = bool(self.icfg.overlap_scoring)
+
+    @property
+    def active(self) -> bool:
+        return bool(self.tau_ema > self.tau_th)
+
+    def begin(self, pstate: PipelineState, step: int, params=None):
+        self._tick_epoch(pstate)
+        cands, gids, nxt = self._sequential(pstate, self.B)
+        handle = {"pstate": pstate, "step": step, "cands": cands,
+                  "gids": gids, "nxt": nxt, "fut": None}
+        if self.overlap and params is not None and self.engine is not None:
+            # async dispatch: runs behind whatever update is in flight
+            handle["fut"] = self.engine.score(params, cands)
+        return handle
+
+    def finish(self, handle, params=None):
+        fut = handle["fut"]
+        if fut is None:           # synchronous path (overlap off / no params)
+            if self.engine is None:
+                raise RuntimeError(
+                    "presample_host scores through the decoupled engine — "
+                    "call bind_engine(ScoreEngine(...)) first")
+            if params is None:
+                raise RuntimeError(
+                    "presample_host needs params to score: pass them to "
+                    "begin() (overlapped) or finish() (synchronous)")
+            fut = self.engine.score(params, handle["cands"])
+        scores = np.asarray(jax.device_get(fut[1]), np.float32)
+        gids = handle["gids"]
+        # out-of-band refresh: every candidate's fresh score enters the
+        # memory, trained on or not
+        self.store.update(gids, scores)
+        g = scores.astype(np.float64)
+        g = g / max(g.sum(), 1e-20)
+        tau = float(np.sqrt(self.B * np.square(g).sum()))
+        # same first-observation seeding rule as the device controller
+        self.tau_ema = np.asarray(
+            tau if self.tau_ema == 0.0
+            else self.icfg.ema * float(self.tau_ema)
+            + (1.0 - self.icfg.ema) * tau, np.float64)
+        cands = handle["cands"]
+        if not self.active:
+            batch = {k: np.asarray(v)[:self.b] for k, v in cands.items()}
+            batch["weights"] = np.ones((self.b,), np.float32)
+            meta = {"gids": gids[:self.b], "rows": (0, self.b),
+                    "is_flag": 0.0}
+            return batch, meta, handle["nxt"]
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, 4211, int(handle["step"])]))
+        idx = rng.choice(self.B, size=self.b, replace=True, p=g)
+        batch = {k: np.asarray(v)[idx] for k, v in cands.items()}
+        # the paper's unbiasedness weights wᵢ = 1/(B·gᵢ)
+        batch["weights"] = (1.0 / (self.B * np.maximum(g[idx], 1e-20))
+                            ).astype(np.float32)
+        meta = {"gids": gids[idx], "rows": (0, self.b),
+                "is_flag": max(float(self.tau_ema), 1.0)}
+        return batch, meta, handle["nxt"]
+
+    def next_batch(self, pstate: PipelineState, step: int, params=None):
+        return self.finish(self.begin(pstate, step, params), params)
+
+    def stats(self) -> dict:
+        return {"store_coverage": self.store.coverage(),
+                "presample_tau": float(self.tau_ema),
+                "sampler_active": float(self.active)}
+
+    def state_dict(self) -> dict:
+        d = super().state_dict()
+        d["tau_ema"] = self.tau_ema
+        return d
+
+    def load_state_dict(self, d) -> None:
+        super().load_state_dict(d)
+        self.tau_ema = np.asarray(d.get("tau_ema", 0.0),
+                                  np.float64).reshape(())
 
 
 class HistorySampler(Sampler):
@@ -221,17 +365,23 @@ class SelectiveSampler(Sampler):
 
 
 SCHEMES = {c.scheme: c for c in
-           (UniformSampler, PresampleSampler, HistorySampler, SelectiveSampler)}
+           (UniformSampler, PresampleSampler, HostPresampleSampler,
+            HistorySampler, SelectiveSampler)}
 
 
 def make_sampler(run_cfg, source) -> Sampler:
     scheme = run_cfg.sampler.scheme
+    if scheme == "presample" and run_cfg.sampler.host_score:
+        # engine-backed host-side Algorithm 1 (scoring off the update path)
+        scheme = "presample_host"
     if scheme not in SCHEMES:
         raise ValueError(f"unknown sampler scheme {scheme!r}; "
                          f"have {sorted(SCHEMES)}")
-    if not run_cfg.imp.enabled and scheme in ("history", "selective"):
-        # imp.enabled=False is the global IS kill-switch; score-memory
-        # selection IS importance sampling, so fall back to uniform
-        # (presample handles the switch itself via its τ gate="never")
+    if not run_cfg.imp.enabled and scheme in ("history", "selective",
+                                              "presample_host"):
+        # imp.enabled=False is the global IS kill-switch; score-memory /
+        # host-side selection IS importance sampling, so fall back to
+        # uniform (on-device presample handles the switch itself via its
+        # τ gate="never")
         scheme = "uniform"
     return SCHEMES[scheme](run_cfg, source)

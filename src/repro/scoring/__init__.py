@@ -1,0 +1,4 @@
+"""Decoupled scoring engine (see ``repro.scoring.engine``)."""
+from repro.scoring.engine import ScoreEngine
+
+__all__ = ["ScoreEngine"]

@@ -1,0 +1,102 @@
+"""The decoupled scoring engine.
+
+The paper's speedup criterion (§3.3: B + 3b < 3τb) prices the scoring pass
+at ONE forward per candidate — it only holds if scoring really is that
+cheap. Welded into the update step (the pre-refactor layout) the scoring
+pass inherits everything the update path needs and the score path doesn't:
+remat, full-precision compute, grad plumbing, and the update's sharding.
+``ScoreEngine`` owns a standalone jitted score function with none of that:
+
+* forward-only — no ``value_and_grad``, no remat (nothing is rematerialised
+  because nothing is retained);
+* ``score_dtype`` compute — floating params are cast down (bf16 by
+  default) before the forward; scores rank samples, they don't train them;
+* the fused ``ce_score`` reduction (``imp.score_impl``) for the per-token
+  statistics;
+* batch-only sharding specs — the batch axis shards over ("pod","data"),
+  params keep whatever (committed) layout they already have.
+
+Because the engine is its own dispatch unit, the trainer can launch
+scoring for batch k+1 while batch k's update runs (double-buffering — see
+``repro.runtime.trainer``), and host-side samplers can refresh the
+persistent ``ScoreStore`` out-of-band (``Sampler.refresh_scores``).
+Scores used one step late are slightly stale; selection tolerates that
+(Jiang et al. 2019) and the τ-gate maths is unchanged.
+
+Multi-host: ``gather_scores`` is the host-side all-gather hook that turns
+this host's score shard into the global vector the score-memory schemes
+key on (ROADMAP "multi-host score-gather" item).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ScoreEngine:
+    """Standalone forward-only scorer for one ``LM`` under one run config."""
+
+    def __init__(self, lm, run_cfg, mesh=None):
+        self.lm = lm
+        self.run = run_cfg
+        self.mesh = mesh
+        icfg = run_cfg.imp
+        self.score_impl = icfg.score_impl
+        sd = getattr(icfg, "score_dtype", None)
+        self.score_dtype = None if sd in (None, "", "none") else sd
+        self._jitted = {}       # batch structure -> jitted fn
+
+    # -- the score function itself (pure; dryrun lowers this AOT) -----------
+    def fwd(self, params, batch):
+        """(params, batch) -> (per_sample_loss, per_sample_score); one
+        forward pass, ``score_dtype`` compute, no grads, no remat."""
+        loss_ps, scores = self.lm.sample_stats(
+            params, batch, score_impl=self.score_impl,
+            score_dtype=self.score_dtype)
+        return (loss_ps.astype(jnp.float32),
+                jax.lax.stop_gradient(scores.astype(jnp.float32)))
+
+    # -- jit cache -----------------------------------------------------------
+    def _key(self, batch):
+        return tuple(sorted((k, tuple(v.shape), str(v.dtype))
+                            for k, v in batch.items()))
+
+    def _fn(self, batch):
+        key = self._key(batch)
+        fn = self._jitted.get(key)
+        if fn is None:
+            if self.mesh is not None:
+                from repro.distributed import sharding as shd
+                bspecs = shd.batch_specs(
+                    self.lm.cfg, jax.eval_shape(lambda: batch), self.mesh)
+                named = shd.to_named(bspecs, self.mesh)
+                # batch-only shardings: params ride on their committed layout
+                fn = jax.jit(self.fwd, in_shardings=(None, named))
+            else:
+                fn = jax.jit(self.fwd)
+            self._jitted[key] = fn
+        return fn
+
+    # -- dispatch ------------------------------------------------------------
+    def score(self, params, batch):
+        """Launch the score pass; returns (loss_ps, scores) device arrays
+        WITHOUT blocking — jax dispatch is async, so the caller can overlap
+        this with other device work and materialise later."""
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        return self._fn(batch)(params, batch)
+
+    def score_host(self, params, batch):
+        """Blocking convenience: numpy (loss_ps, scores)."""
+        loss_ps, scores = self.score(params, batch)
+        return (np.asarray(jax.device_get(loss_ps)),
+                np.asarray(jax.device_get(scores)))
+
+    # -- multi-host gather hook ----------------------------------------------
+    def gather_scores(self, local_scores, *, host_id=None, n_hosts=None,
+                      n_global=None):
+        """Host-local score shard -> global score vector (identity when
+        single-process). See ``distributed.collectives.gather_host_scores``."""
+        from repro.distributed.collectives import gather_host_scores
+        return gather_host_scores(local_scores, host_id=host_id,
+                                  n_hosts=n_hosts, n_global=n_global)

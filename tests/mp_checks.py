@@ -98,6 +98,40 @@ def check_sharded_is_step_matches_single_device():
     print("OK sharded_is_step")
 
 
+def check_score_engine_sharded():
+    """The decoupled scoring engine under a (4,2) mesh == single-device
+    scores (batch-only sharding; params ride along replicated)."""
+    from repro.configs import get_config
+    from repro.configs.base import ISConfig, OptimConfig, RunConfig, ShapeConfig
+    from repro.models.lm import LM
+    from repro.scoring import ScoreEngine
+
+    cfg = get_config("lm-tiny")
+    run = RunConfig(model=cfg,
+                    shape=ShapeConfig("t", seq_len=16, global_batch=8,
+                                      kind="train"),
+                    optim=OptimConfig(name="sgd", lr=0.1),
+                    imp=ISConfig(enabled=True, presample_ratio=3,
+                                 score_dtype="none"),
+                    remat=False)
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    batch = {
+        "tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, (24, 16))),
+        "labels": jnp.asarray(rng.randint(0, cfg.vocab_size, (24, 16))),
+    }
+    ref_loss, ref_sc = ScoreEngine(lm, run).score_host(params, batch)
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    eng = ScoreEngine(lm, run, mesh=mesh)
+    with _mesh_ctx(mesh):
+        loss, sc = eng.score_host(params, batch)
+    np.testing.assert_allclose(loss, ref_loss, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(sc, ref_sc, rtol=1e-4, atol=1e-5)
+    print("OK score_engine_sharded")
+
+
 def check_compressed_psum():
     from repro.optim.grad_compress import compressed_psum_tree, ef_init
     from jax.experimental.shard_map import shard_map

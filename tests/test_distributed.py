@@ -27,6 +27,7 @@ def _run(check):
 @pytest.mark.parametrize("check", [
     "pipeline_parallel",
     "sharded_is_step_matches_single_device",
+    "score_engine_sharded",
     "compressed_psum",
     "serve_sharded_equals_single",
 ])

@@ -70,6 +70,47 @@ def test_weighted_estimator_unbiased(n, seed):
     assert expectation == pytest.approx(x.mean(), rel=1e-4, abs=1e-5)
 
 
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 200), st.integers(0, 2 ** 31 - 1))
+def test_unbiased_weights_keep_estimator_mean_one(n, seed):
+    """E_{i~g}[wᵢ] = Σ gᵢ/(n·gᵢ) = 1 exactly — the weighted estimator of
+    the constant 1 stays mean-one under ANY sampling distribution g."""
+    g = np.asarray(imp.normalize_scores(_rand_scores(n, seed)))
+    w = np.asarray(imp.unbiased_weights(jnp.asarray(g), jnp.arange(n)))
+    assert float(np.sum(g * w)) == pytest.approx(1.0, rel=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 200), st.integers(0, 2 ** 31 - 1))
+def test_tau_and_tau_inverse_consistent(n, seed):
+    """τ·(1/τ) == 1 whenever 1/τ is away from its clip floor, and both
+    agree with the direct eq. 26 identity τ² = B·Σgᵢ²."""
+    g = imp.normalize_scores(_rand_scores(n, seed))
+    ti = float(imp.tau_inverse(g))
+    t = float(imp.tau(g))
+    if ti > 1e-5:
+        assert t * ti == pytest.approx(1.0, rel=1e-4)
+    # eq. 26 ⇔ τ² = B·Σg²  (expand ‖g−u‖² = Σg² − 1/B)
+    direct = np.sqrt(n * float(jnp.sum(jnp.square(g))))
+    assert t == pytest.approx(direct, rel=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 512), st.integers(2, 8))
+def test_speedup_guaranteed_matches_max_speedup_at_boundary(b, ratio):
+    """§3.3: the τ threshold (B+3b)/(3b) where speedup becomes guaranteed
+    is exactly 1/max_speedup scaled by B/b — at the boundary the criterion
+    flips from False to True."""
+    B = ratio * b
+    tau_star = (B + 3 * b) / (3 * b)
+    assert not imp.speedup_guaranteed(tau_star, B, b)          # strict <
+    assert imp.speedup_guaranteed(tau_star * (1 + 1e-9) + 1e-9, B, b)
+    # consistency with max_speedup: τ* · max_speedup = B/b · max_speedup²
+    # ⇒ τ* == (B/b) · max_speedup(B,b)... verified directly:
+    assert tau_star == pytest.approx((B / b) * imp.max_speedup(B, b),
+                                     rel=1e-12)
+
+
 def test_sample_with_replacement_distribution():
     g = imp.normalize_scores(jnp.asarray([1.0, 2.0, 4.0, 8.0]))
     idx = imp.sample_with_replacement(jax.random.PRNGKey(0), g, 20000)

@@ -154,6 +154,48 @@ def test_straggler_shrinks_presample_then_skips():
     assert not a["skip"]
 
 
+def test_straggler_skip_retries_same_batch():
+    """Regression: a straggler skip used to revert params but still advance
+    the loop (`continue`), silently dropping the batch while claiming it
+    would be "reused next iteration". The trainer must RETRY the same
+    batch (bounded), so every requested optimizer step actually happens."""
+    run = _tiny_run(steps=6)
+    tr = Trainer(run)
+
+    seen = []
+    orig_step = tr.step_fn
+
+    def recording_step(state, *a):
+        seen.append(np.asarray(a[0]["tokens"]))
+        return orig_step(state, *a)
+
+    tr.step_fn = recording_step
+
+    class SkipOnce:
+        """Force exactly one skip on the 3rd observation."""
+        max_skips = 3
+
+        def __init__(self):
+            self.calls = 0
+
+        def observe(self, dt):
+            self.calls += 1
+            return {"skip": self.calls == 3, "b_scale": 1.0,
+                    "over_deadline": self.calls == 3}
+
+    tr.monitor = SkipOnce()
+    state, hist = tr.fit(steps=6)
+    # 6 accepted steps + 1 retried attempt
+    assert len(seen) == 7
+    # the skipped attempt (3rd) was RETRIED with the identical batch
+    np.testing.assert_array_equal(seen[2], seen[3])
+    # and no optimizer step was lost: the state advanced exactly `steps`
+    assert int(jax.device_get(state["step"])) == 6
+    assert len(hist) == 6
+    # consecutive batches still advance through the dataset
+    assert not np.array_equal(seen[3], seen[4])
+
+
 def test_straggler_recovers():
     mon = StragglerMonitor(deadline_factor=2.0)
     for _ in range(10):

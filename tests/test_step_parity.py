@@ -1,0 +1,218 @@
+"""The unified StepSpec step implementation must be BITWISE-equivalent to
+the three pre-refactor builders.
+
+The legacy ``build_train_step`` / ``build_score_step`` /
+``build_uniform_step`` bodies below are verbatim copies of the
+pre-refactor ``repro.core.is_train`` (each carried its own copy of the
+τ-controller / lr-boost / weighting logic); the refactor collapsed them
+onto one implementation with each block existing exactly once. Same
+seeds, same inputs ⇒ identical jaxpr-level arithmetic ⇒ identical bits.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ISConfig, OptimConfig, RunConfig, ShapeConfig
+from repro.core import importance as imp
+from repro.core.is_train import (_apply_update, _batch_rows,
+                                 _loss_scores_grads, build_score_step,
+                                 build_train_step, build_uniform_step,
+                                 train_state_init)
+from repro.models.lm import LM
+from repro.optim.api import get_optimizer
+
+
+# ---------------------------------------------------------------------------
+# verbatim pre-refactor builders (the parity reference)
+# ---------------------------------------------------------------------------
+def legacy_build_train_step(lm, run_cfg, optimizer, *, gate=None):
+    icfg = run_cfg.imp
+    b = run_cfg.shape.global_batch
+    B = b * icfg.presample_ratio
+    tau_th = icfg.resolved_tau_th(b)
+    gate = gate or ("cond" if icfg.enabled else "never")
+    remat = run_cfg.remat
+    micro = run_cfg.microbatches
+
+    def is_branch(state, big_batch, key):
+        loss_ps, scores = lm.sample_stats(state["params"], big_batch,
+                                          score_impl=icfg.score_impl)
+        if icfg.score_by == "loss":
+            scores = loss_ps
+        g = imp.normalize_scores(scores)
+        idx = imp.sample_with_replacement(key, g, b)
+        w = imp.unbiased_weights(g, idx)
+        small = _batch_rows(big_batch, idx)
+        small["weights"] = w
+        loss, _, _, grads = _loss_scores_grads(
+            lm, state["params"], small, remat=remat,
+            score_impl=icfg.score_impl, microbatches=micro)
+        ctrl = imp.controller_update(state["ctrl"], g, icfg.ema,
+                                     jnp.ones((), jnp.bool_))
+        return loss, grads, ctrl, jnp.float32(1.0), \
+            jax.lax.stop_gradient(scores.astype(jnp.float32))
+
+    def uniform_branch(state, big_batch, key):
+        small = {k: v[:b] for k, v in big_batch.items()}
+        loss, per_sample, scores, grads = _loss_scores_grads(
+            lm, state["params"], small, remat=remat,
+            score_impl=icfg.score_impl, microbatches=micro)
+        if icfg.score_by == "loss":
+            scores = per_sample
+        scores = jax.lax.stop_gradient(scores.astype(jnp.float32))
+        g = imp.normalize_scores(scores)
+        ctrl = imp.controller_update(state["ctrl"], g, icfg.ema,
+                                     jnp.zeros((), jnp.bool_))
+        scores_B = jnp.concatenate(
+            [scores, jnp.full((B - b,), -1.0, jnp.float32)])
+        return loss, grads, ctrl, jnp.float32(0.0), scores_B
+
+    def step(state, big_batch):
+        key = jax.random.fold_in(state["rng"], state["step"])
+        if gate == "always":
+            loss, grads, ctrl, was_is, scores = is_branch(state, big_batch, key)
+        elif gate == "never":
+            loss, grads, ctrl, was_is, scores = uniform_branch(
+                state, big_batch, key)
+        else:
+            use_is = state["ctrl"].tau_ema > tau_th
+            loss, grads, ctrl, was_is, scores = jax.lax.cond(
+                use_is, is_branch, uniform_branch, state, big_batch, key)
+        if icfg.lr_tau_boost_cap > 0:
+            boost = jnp.where(
+                was_is > 0,
+                jnp.clip(jnp.sqrt(jnp.maximum(ctrl.tau_ema, 1.0)),
+                         1.0, icfg.lr_tau_boost_cap),
+                1.0)
+            grads = jax.tree_util.tree_map(lambda g: g * boost, grads)
+        new_state, metrics = _apply_update(
+            optimizer, dict(state, ctrl=ctrl), loss, grads,
+            {"tau": ctrl.tau_ema, "is_active": was_is,
+             "sample_scores": scores})
+        return new_state, metrics
+
+    return step
+
+
+def legacy_build_score_step(lm, run_cfg, optimizer):
+    icfg = run_cfg.imp
+    remat = run_cfg.remat
+    micro = run_cfg.microbatches
+
+    def step(state, batch, is_flag):
+        loss, per_sample, scores, grads = _loss_scores_grads(
+            lm, state["params"], batch, remat=remat,
+            score_impl=icfg.score_impl, microbatches=micro)
+        if icfg.score_by == "loss":
+            scores = jax.lax.stop_gradient(per_sample)
+        scores = jax.lax.stop_gradient(scores.astype(jnp.float32))
+        g = imp.normalize_scores(scores)
+        drawn_is = is_flag > 0.5
+        ctrl2 = imp.controller_update(state["ctrl"], g, icfg.ema, drawn_is)
+        ctrl = ctrl2._replace(tau_ema=jnp.where(drawn_is,
+                                                state["ctrl"].tau_ema,
+                                                ctrl2.tau_ema))
+        if icfg.lr_tau_boost_cap > 0:
+            boost = jnp.where(
+                drawn_is,
+                jnp.clip(jnp.sqrt(jnp.maximum(is_flag, 1.0)),
+                         1.0, icfg.lr_tau_boost_cap),
+                1.0)
+            grads = jax.tree_util.tree_map(lambda gr: gr * boost, grads)
+        return _apply_update(
+            optimizer, dict(state, ctrl=ctrl), loss, grads,
+            {"tau": ctrl.tau_ema,
+             "is_active": drawn_is.astype(jnp.float32),
+             "sample_scores": scores})
+
+    return step
+
+
+def legacy_build_uniform_step(lm, run_cfg, optimizer):
+    remat = run_cfg.remat
+    micro = run_cfg.microbatches
+
+    def step(state, batch):
+        loss, _, _, grads = _loss_scores_grads(
+            lm, state["params"], batch, remat=remat,
+            score_impl=run_cfg.imp.score_impl, microbatches=micro)
+        return _apply_update(optimizer, state, loss, grads, {})
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# harness
+# ---------------------------------------------------------------------------
+def _setup(boost_cap=0.0, tau_th=1.2):
+    cfg = get_config("lm-tiny")
+    run = RunConfig(
+        model=cfg,
+        shape=ShapeConfig("p", seq_len=16, global_batch=8, kind="train"),
+        optim=OptimConfig(name="adamw", lr=1e-3, weight_decay=0.0),
+        imp=ISConfig(enabled=True, presample_ratio=3, tau_th=tau_th,
+                     lr_tau_boost_cap=boost_cap),
+        remat=False)
+    lm = LM(cfg)
+    opt = get_optimizer(run.optim)
+    state = train_state_init(lm, opt, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    big = {"tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, (24, 16))),
+           "labels": jnp.asarray(rng.randint(0, cfg.vocab_size, (24, 16)))}
+    return lm, run, opt, state, big
+
+
+def _assert_bitwise(a_state, a_metrics, b_state, b_metrics):
+    la, lb = (jax.tree_util.tree_leaves(t) for t in (a_state, b_state))
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert set(a_metrics) == set(b_metrics)
+    for k in a_metrics:
+        np.testing.assert_array_equal(np.asarray(a_metrics[k]),
+                                      np.asarray(b_metrics[k]))
+
+
+@pytest.mark.parametrize("gate", ["cond", "always", "never"])
+@pytest.mark.parametrize("boost_cap", [0.0, 2.0])
+def test_train_step_parity(gate, boost_cap):
+    lm, run, opt, state, big = _setup(boost_cap=boost_cap)
+    new = jax.jit(build_train_step(lm, run, opt, gate=gate))
+    old = jax.jit(legacy_build_train_step(lm, run, opt, gate=gate))
+    sn, so = state, state
+    for _ in range(3):
+        sn, mn = new(sn, big)
+        so, mo = old(so, big)
+        _assert_bitwise(sn, mn, so, mo)
+
+
+@pytest.mark.parametrize("is_flag", [0.0, 2.5])
+@pytest.mark.parametrize("boost_cap", [0.0, 2.0])
+def test_score_step_parity(is_flag, boost_cap):
+    lm, run, opt, state, big = _setup(boost_cap=boost_cap)
+    batch = {k: v[:8] for k, v in big.items()}
+    batch["weights"] = jnp.linspace(0.5, 1.5, 8, dtype=jnp.float32)
+    flag = jnp.asarray(is_flag, jnp.float32)
+    new = jax.jit(build_score_step(lm, run, opt))
+    old = jax.jit(legacy_build_score_step(lm, run, opt))
+    sn, so = state, state
+    for _ in range(3):
+        sn, mn = new(sn, batch, flag)
+        so, mo = old(so, batch, flag)
+        _assert_bitwise(sn, mn, so, mo)
+
+
+def test_uniform_step_parity():
+    lm, run, opt, state, big = _setup()
+    batch = {k: v[:8] for k, v in big.items()}
+    new = jax.jit(build_uniform_step(lm, run, opt))
+    old = jax.jit(legacy_build_uniform_step(lm, run, opt))
+    sn, so = state, state
+    for _ in range(3):
+        sn, mn = new(sn, batch)
+        so, mo = old(so, batch)
+        _assert_bitwise(sn, mn, so, mo)
