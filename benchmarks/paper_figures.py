@@ -31,7 +31,7 @@ from repro.core import importance as imp
 from repro.core.variance import correlation_sse, grad_distance_reduction
 from repro.data.pipeline import PipelineState, SyntheticCLS
 from repro.models.lm import LM
-from repro.runtime.trainer import Trainer
+from repro.api import Experiment as Trainer
 
 SEQ = 16
 VOCAB = 128

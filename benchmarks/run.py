@@ -2,7 +2,8 @@
 
 One function per paper table/figure (+ the roofline report). Prints
 ``name,us_per_call,derived`` CSV lines; artifacts land in
-benchmarks/artifacts/.
+benchmarks/artifacts/. Training-loop suites run through the public
+``repro.api`` facade — there is no benchmark-local trainer wiring.
 
 Subsets: ``python -m benchmarks.run fig1 fig3 roofline``
 """
@@ -33,6 +34,9 @@ def main() -> None:
         "roofline": lambda: roofline.render(emit=print),
     }
     wanted = sys.argv[1:] or list(suites)
+    unknown = [w for w in wanted if w not in suites]
+    if unknown:
+        raise SystemExit(f"unknown suites {unknown}; have {sorted(suites)}")
     print("name,us_per_call,derived")
     failures = 0
     for name in wanted:

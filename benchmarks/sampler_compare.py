@@ -22,7 +22,7 @@ def _run_one(scheme, dataset, steps):
     from repro.configs.base import (ISConfig, OptimConfig, RunConfig,
                                     SamplerConfig, ShapeConfig)
     from repro.data.pipeline import SyntheticCLS, SyntheticLM
-    from repro.runtime.trainer import Trainer
+    from repro.api import Experiment as Trainer
 
     cfg = get_config("lm-tiny")
     run = RunConfig(

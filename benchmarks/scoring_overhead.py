@@ -71,7 +71,7 @@ def _run_scoring_mode(mode: str, ratio: int, steps: int):
     from repro.configs.base import (ISConfig, OptimConfig, RunConfig,
                                     SamplerConfig, ShapeConfig)
     from repro.data.pipeline import SyntheticLM
-    from repro.runtime.trainer import Trainer
+    from repro.api import Experiment as Trainer
 
     cfg = get_config("lm-tiny")
     host = mode in ("sync", "overlap")

@@ -11,39 +11,39 @@ within a few steps and the sampler focuses on the genuinely new samples.
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import (ATTN, ISConfig, ModelConfig, OptimConfig,
-                                RunConfig, Segment, ShapeConfig)
-from repro.data.pipeline import PipelineState, SyntheticCLS
-from repro.models.lm import LM
-from repro.runtime.trainer import Trainer
+import repro
+from repro.api import Experiment
 
 
 def make_run(cfg, enabled, lr=1e-3, tau_th=1.1):
-    return RunConfig(
+    return repro.RunConfig(
         model=cfg,
-        shape=ShapeConfig("ft", seq_len=16, global_batch=16, kind="train"),
-        optim=OptimConfig(name="adamw", lr=lr, weight_decay=0.0),
-        imp=ISConfig(enabled=enabled, presample_ratio=3, tau_th=tau_th),
+        shape=repro.ShapeConfig("ft", seq_len=16, global_batch=16,
+                                kind="train"),
+        optim=repro.OptimConfig(name="adamw", lr=lr, weight_decay=0.0),
+        imp=repro.ISConfig(enabled=enabled, presample_ratio=3, tau_th=tau_th),
         remat=False)
 
 
 def main():
-    cfg = ModelConfig(name="ft-demo", family="dense", d_model=48, n_heads=4,
-                      n_kv_heads=4, d_ff=96, vocab_size=128,
-                      segments=(Segment((ATTN,), 2),), dtype="float32")
+    cfg = repro.ModelConfig(
+        name="ft-demo", family="dense", d_model=48, n_heads=4,
+        n_kv_heads=4, d_ff=96, vocab_size=128,
+        segments=(repro.Segment((repro.ATTN,), 2),), dtype="float32")
     # --- pretrain -----------------------------------------------------------
-    pre_src = SyntheticCLS(128, 16, seed=5, host_id=0, n_hosts=1)
-    pre = Trainer(make_run(cfg, enabled=False, lr=2e-3), source=pre_src,
-                  gate="never")
+    pre_src = repro.SyntheticCLS(128, 16, seed=5, host_id=0, n_hosts=1)
+    pre = Experiment(make_run(cfg, enabled=False, lr=2e-3), source=pre_src,
+                     gate="never")
     state, _ = pre.fit(steps=200)
     print("pretrained.")
 
     # --- finetune: uniform vs IS at equal cost ------------------------------
     results = {}
     for method, steps in (("uniform", 120), ("importance", 60)):
-        src = SyntheticCLS(128, 16, seed=42, host_id=0, n_hosts=1)
-        tr = Trainer(make_run(cfg, enabled=method == "importance"),
-                     source=src, gate="never" if method == "uniform" else None)
+        src = repro.SyntheticCLS(128, 16, seed=42, host_id=0, n_hosts=1)
+        tr = Experiment(make_run(cfg, enabled=method == "importance"),
+                        source=src,
+                        gate="never" if method == "uniform" else None)
         st, pstate = tr.init_state()
         st["params"] = state["params"]
         st["opt"] = tr.opt.init(state["params"])
@@ -55,12 +55,12 @@ def main():
             hist.append(float(m["loss"]))
             if i % 20 == 0:
                 print(f"  {method} step {i:3d} loss {hist[-1]:.4f}"
-                      + (f" tau {float(m['tau']):.2f}" if method != "uniform" else ""))
+                      + (f" tau {float(m['tau']):.2f}"
+                         if method != "uniform" else ""))
         # held-out error
-        lm = LM(cfg)
-        test, _ = src.batch(PipelineState(epoch=99), 256)
+        test, _ = src.batch(repro.PipelineState(epoch=99), 256)
         test = {k: jnp.asarray(v) for k, v in test.items()}
-        logits, _ = lm.logits(st["params"], test)
+        logits, _ = tr.lm.logits(st["params"], test)
         err = float(np.mean(np.asarray(jnp.argmax(logits[:, -1], -1))
                             != np.asarray(test["labels"][:, -1])))
         results[method] = (np.mean(hist[-10:]), err)

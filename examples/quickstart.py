@@ -1,42 +1,23 @@
-"""Quickstart: importance-sampled training in ~20 lines.
+"""Quickstart: importance-sampled training through the one public API.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Trains a tiny LM on synthetic heterogeneous-difficulty data with the
-paper's Algorithm 1 (τ-gated importance sampling) and prints the τ EMA
-switching IS on as training progresses.
+Trains a tiny LM on synthetic heterogeneous-difficulty classification
+data with the paper's Algorithm 1 (τ-gated importance sampling) and
+prints the τ EMA switching IS on as training progresses.
 """
-import jax
-
-from repro.configs import get_config
-from repro.configs.base import ISConfig, OptimConfig, RunConfig, ShapeConfig
-from repro.data.pipeline import SyntheticCLS
-from repro.runtime.trainer import Trainer
+import repro
 
 
-def main():
-    run = RunConfig(
-        model=get_config("lm-tiny"),
-        shape=ShapeConfig("quickstart", seq_len=16, global_batch=16, kind="train"),
-        optim=OptimConfig(name="adamw", lr=2e-3, weight_decay=0.0),
-        imp=ISConfig(enabled=True, presample_ratio=3, tau_th=1.3),
-        steps=120, remat=False,
-    )
-    src = SyntheticCLS(run.model.vocab_size, run.shape.seq_len,
-                       seed=0, host_id=0, n_hosts=1)
-    trainer = Trainer(run, source=src)
-
-    def log(i, m):
-        if i % 10 == 0:
-            print(f"step {i:4d} loss {m['loss']:.4f} tau {m['tau']:.2f} "
-                  f"IS {'on' if m['is_active'] else 'off'}")
-
-    state, hist = trainer.fit(callback=log)
-    n_is = sum(h["is_active"] for h in hist)
-    print(f"\ndone: final loss {hist[-1]['loss']:.4f}; "
-          f"IS active on {n_is}/{len(hist)} steps "
-          f"(uniform warmup until tau > tau_th, as in Algorithm 1)")
+def log(i, m):
+    if i % 10 == 0:
+        print(f"step {i:4d} loss {m['loss']:.4f} tau {m['tau']:.2f} "
+              f"IS {'on' if m['is_active'] else 'off'}")
 
 
-if __name__ == "__main__":
-    main()
+state, hist = repro.train("lm-tiny", preset="paper_cifar", source="cls",
+                          callback=log)
+n_is = int(sum(h["is_active"] for h in hist))
+print(f"\ndone: final loss {hist[-1]['loss']:.4f}; "
+      f"IS active on {n_is}/{len(hist)} steps "
+      f"(uniform warmup until tau > tau_th, as in Algorithm 1)")

@@ -1,58 +1,20 @@
 """Batched serving demo: prefill a batch of prompts, then decode tokens
 with the KV/state cache — the serve path the prefill/decode dry-run cells
-lower, on a CPU-sized zamba2 (hybrid Mamba2 + shared attention).
+lower, on a CPU-sized zamba2 (hybrid Mamba2 + shared attention), via the
+one-call ``repro.serve``.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
-import time
-
-import jax
-import jax.numpy as jnp
-
-from repro.configs import get_config
-from repro.configs.base import reduced
-from repro.models.lm import LM
+import repro
 
 
 def main():
-    cfg = reduced(get_config("zamba2-1.2b"), d_model=128, n_heads=4,
-                  repeats=2)
-    lm = LM(cfg)
-    params = lm.init(jax.random.PRNGKey(0))
-
-    b, prompt_len, gen_len, cap = 4, 32, 16, 64
-    key = jax.random.PRNGKey(1)
-    prompts = jax.random.randint(key, (b, prompt_len), 0, cfg.vocab_size)
-
-    serve = jax.jit(lm.serve_step)
-
-    # --- prefill ------------------------------------------------------------
-    caches = lm.caches(b, cap)
-    t0 = time.time()
-    logits, caches = serve(params, caches, {
-        "tokens": prompts,
-        "positions": jnp.broadcast_to(jnp.arange(prompt_len)[None], (b, prompt_len)),
-    })
-    jax.block_until_ready(logits)
-    print(f"prefill: batch={b} len={prompt_len} in {time.time() - t0:.2f}s")
-
-    # --- decode loop ----------------------------------------------------------
-    tok = jnp.argmax(logits[:, -1], -1)[:, None]
-    out = [tok]
-    t0 = time.time()
-    for i in range(gen_len - 1):
-        pos = jnp.full((b, 1), prompt_len + i, jnp.int32)
-        logits, caches = serve(params, caches, {"tokens": tok, "positions": pos})
-        tok = jnp.argmax(logits[:, -1], -1)[:, None]
-        out.append(tok)
-    jax.block_until_ready(tok)
-    dt = time.time() - t0
-    toks = jnp.concatenate(out, axis=1)
-    print(f"decode: {gen_len} tokens/seq × {b} seqs in {dt:.2f}s "
-          f"({b * gen_len / dt:.1f} tok/s on CPU)")
+    cfg = repro.reduced(repro.get_config("zamba2-1.2b"), d_model=128,
+                        n_heads=4, repeats=2)
+    out = repro.serve(cfg, batch=4, prompt_len=32, gen=16, cap=64, log=print)
     print("sampled continuations (greedy):")
-    for r in range(b):
-        print("  ", toks[r].tolist())
+    for row in out["tokens"]:
+        print("  ", row.tolist())
 
 
 if __name__ == "__main__":

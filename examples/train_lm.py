@@ -1,5 +1,6 @@
 """End-to-end training driver: train an LM (default ~100M params) with
-importance sampling, checkpointing + restart, and straggler monitoring.
+importance sampling, checkpointing + restart, and straggler monitoring —
+all through the public ``repro`` API.
 
     # a few hundred steps of the 100M model (CPU: slow; TPU pod: use
     # --arch/--mesh via repro.launch.train instead)
@@ -8,46 +9,25 @@ importance sampling, checkpointing + restart, and straggler monitoring.
     # CPU-friendly demo that finishes in ~2 minutes
     PYTHONPATH=src python examples/train_lm.py --arch lm-tiny --steps 200
 
+Any ``RunConfig`` field is flag-addressable (dotted paths), e.g.
+``--sampler.scheme=history --imp.enabled=false --optim.lr=1e-3
+--shape.seq_len=128 --ckpt_dir /tmp/my_ckpt``.
+
 Interrupt it at any point and re-run: it resumes from the last committed
 checkpoint (bitwise-identical, including data-pipeline position and the
 IS controller's τ EMA).
 """
-import argparse
+import sys
 
-from repro.configs import get_config
-from repro.configs.base import (ISConfig, OptimConfig, RunConfig,
-                                SamplerConfig, ShapeConfig)
-from repro.data.pipeline import SyntheticLM
-from repro.runtime.trainer import Trainer
-from repro.sampler import SCHEMES
+import repro
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="lm-100m")
-    ap.add_argument("--steps", type=int, default=300)
-    ap.add_argument("--seq", type=int, default=256)
-    ap.add_argument("--batch", type=int, default=16)
-    ap.add_argument("--lr", type=float, default=3e-4)
-    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
-    ap.add_argument("--no-is", action="store_true")
-    ap.add_argument("--scheme", default="presample", choices=sorted(SCHEMES),
-                    help="example-selection scheme (repro.sampler)")
-    args = ap.parse_args()
-
-    cfg = get_config(args.arch)
-    run = RunConfig(
-        model=cfg,
-        shape=ShapeConfig("train", seq_len=args.seq, global_batch=args.batch,
-                          kind="train"),
-        optim=OptimConfig(name="adamw", lr=args.lr, weight_decay=0.01),
-        imp=ISConfig(enabled=not args.no_is, presample_ratio=3),
-        sampler=SamplerConfig(scheme=args.scheme),
-        steps=args.steps, remat=True,
-        ckpt_dir=args.ckpt, ckpt_every=50,
-    )
-    src = SyntheticLM(cfg.vocab_size, args.seq, seed=0, host_id=0, n_hosts=1)
-    trainer = Trainer(run, source=src)
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    # "demo" preset = seq 256 / b 16 / adamw / ckpt in /tmp/repro_ckpt;
+    # user flags override (later keys win in the flag dict)
+    exp = repro.Experiment.from_flags(
+        ["--arch=lm-100m", "--preset=demo", *argv])
 
     def log(i, m):
         if i % 10 == 0:
@@ -56,14 +36,15 @@ def main():
                   f"cov {m.get('store_coverage', 0):.2f} "
                   f"dt {m['dt']:.2f}s", flush=True)
 
-    state, hist = trainer.fit(callback=log)
+    state, hist = exp.fit(callback=log)
+    cfg = exp.run.model
     if hist:
         print(f"final loss {hist[-1]['loss']:.4f} "
               f"(params {cfg.param_count() / 1e6:.1f}M, "
-              f"ckpts in {args.ckpt})")
+              f"ckpts in {exp.run.ckpt_dir})")
     else:
-        print(f"nothing to do: checkpoint in {args.ckpt} is already at "
-              f"step {args.steps} (raise --steps to continue)")
+        print(f"nothing to do: checkpoint in {exp.run.ckpt_dir} is already "
+              f"at step {exp.run.steps} (raise --steps to continue)")
 
 
 if __name__ == "__main__":

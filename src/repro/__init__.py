@@ -1,0 +1,77 @@
+"""repro — Deep Learning with Importance Sampling, one public API.
+
+    import repro
+    state, history = repro.train("lm-tiny", preset="paper_cifar",
+                                 source="cls")
+
+The curated surface (``__all__``) re-exports the ``repro.api`` facade
+(``Experiment`` / ``train`` / ``score`` / ``serve``, the declarative
+config layer, the event-hook loop) plus the frozen config dataclasses.
+Exports resolve lazily (PEP 562), so ``import repro`` stays cheap and the
+subsystem modules (``repro.sampler``, ``repro.scoring``, ...) remain
+importable directly.
+"""
+from __future__ import annotations
+
+import importlib
+
+_EXPORTS = {
+    # facade
+    "Experiment": "repro.api.experiment",
+    "train": "repro.api.experiment",
+    "score": "repro.api.experiment",
+    "serve": "repro.api.serving",
+    # event-hook loop
+    "TrainLoop": "repro.api.loop",
+    "Hook": "repro.api.hooks",
+    "LoggingHook": "repro.api.hooks",
+    "MetricsHistoryHook": "repro.api.hooks",
+    "CallbackHook": "repro.api.hooks",
+    "CheckpointHook": "repro.api.hooks",
+    "StragglerHook": "repro.api.hooks",
+    # declarative configs
+    "ConfigError": "repro.api.config",
+    "apply_overrides": "repro.api.config",
+    "build_run": "repro.api.config",
+    "to_dict": "repro.api.config",
+    "from_dict": "repro.api.config",
+    "to_json": "repro.api.config",
+    "from_json": "repro.api.config",
+    "get_preset": "repro.api.config",
+    "list_presets": "repro.api.config",
+    "register_preset": "repro.api.config",
+    # config dataclasses + architecture registry
+    "RunConfig": "repro.configs.base",
+    "ModelConfig": "repro.configs.base",
+    "ShapeConfig": "repro.configs.base",
+    "OptimConfig": "repro.configs.base",
+    "ISConfig": "repro.configs.base",
+    "SamplerConfig": "repro.configs.base",
+    "Segment": "repro.configs.base",
+    "ATTN": "repro.configs.base",
+    "reduced": "repro.configs.base",
+    "SHAPES": "repro.configs.base",
+    "get_config": "repro.configs",
+    "ARCHS": "repro.configs",
+    # data sources (the ``source=`` argument of Experiment/train)
+    "SyntheticLM": "repro.data.pipeline",
+    "SyntheticCLS": "repro.data.pipeline",
+    "MemmapLM": "repro.data.pipeline",
+    "PipelineState": "repro.data.pipeline",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    try:
+        module = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}")
+    value = getattr(importlib.import_module(module), name)
+    globals()[name] = value          # cache: resolve each export once
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

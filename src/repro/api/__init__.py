@@ -1,0 +1,31 @@
+"""``repro.api`` — the one public surface.
+
+* Facade: ``Experiment``, ``train``, ``score``, ``serve``.
+* Declarative configs: ``build_run``, presets, dotted overrides,
+  lossless ``RunConfig ⇄ dict/json`` (``repro.api.config``).
+* Event-hook loop: ``TrainLoop`` + the shipped hooks
+  (``repro.api.hooks``).
+
+``import repro`` re-exports all of this lazily; launchers, examples, and
+benchmarks import only from here.
+"""
+from repro.api.config import (ConfigError, PRESETS, apply_overrides,
+                              build_run, from_dict, from_json, get_preset,
+                              list_presets, parse_cli, register_preset,
+                              to_dict, to_json, truthy)
+from repro.api.experiment import Experiment, make_mesh, score, train
+from repro.api.hooks import (CallbackHook, CheckpointHook, Hook, LoggingHook,
+                             MetricsHistoryHook, StragglerHook)
+from repro.api.loop import EVENTS, TrainLoop
+from repro.api.serving import serve
+
+__all__ = [
+    "Experiment", "train", "score", "serve",
+    "TrainLoop", "EVENTS",
+    "Hook", "LoggingHook", "MetricsHistoryHook", "CallbackHook",
+    "CheckpointHook", "StragglerHook",
+    "ConfigError", "PRESETS", "apply_overrides", "build_run",
+    "from_dict", "from_json", "to_dict", "to_json",
+    "get_preset", "list_presets", "register_preset", "parse_cli",
+    "make_mesh", "truthy",
+]

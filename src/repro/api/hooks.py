@@ -1,0 +1,121 @@
+"""Composable hooks for the event-hook training loop (``TrainLoop``).
+
+A hook subclasses ``Hook`` and overrides the events it cares about; the
+loop calls every hook for every event, in registration order. Hooks are
+plain observers except ``on_step_timed``, the loop's one control-point:
+returning True votes to retry the same batch (straggler escalation —
+``StragglerHook`` — lives entirely here, the loop just counts votes).
+
+Shipped hooks:
+
+* ``MetricsHistoryHook`` — accumulates the per-step metrics list the old
+  ``Trainer.fit`` returned (``Experiment.fit`` installs one and returns
+  its history, so the return contract is unchanged).
+* ``LoggingHook`` — the launcher's step log line (process 0 only).
+* ``CallbackHook`` — adapts the legacy ``callback(step, metrics)``.
+* ``CheckpointHook`` — periodic + final checkpoints through
+  ``loop.save_checkpoint`` (which snapshots the score store and the
+  serialized run config alongside the train state).
+* ``StragglerHook`` — consults the experiment's ``StragglerMonitor``
+  after every attempt and votes to retry while it reports a skip.
+
+Selective-backprop variants, score-service exporters, etc. plug in the
+same way: subclass ``Hook``, pass it to ``Experiment.fit(hooks=[...])``
+or ``repro.train(..., hooks=[...])``.
+"""
+from __future__ import annotations
+
+import jax
+
+
+class Hook:
+    """Base hook: every event is a no-op. Override what you need."""
+
+    def on_loop_start(self, loop, start, steps):
+        pass
+
+    def on_step_start(self, loop, step, batch, meta):
+        pass
+
+    def on_step_timed(self, loop, step, attempt, dt):
+        """Called after EVERY attempt (including retries) with its
+        wall-clock. Return True to vote for retrying the same batch."""
+        return False
+
+    def on_retry(self, loop, step, attempt, dt):
+        pass
+
+    def on_step_end(self, loop, step, metrics):
+        pass
+
+    def on_scores_ready(self, loop, step, meta, scores):
+        pass
+
+    def on_checkpoint(self, loop, step, payload):
+        pass
+
+    def on_loop_end(self, loop, state, history):
+        pass
+
+
+class MetricsHistoryHook(Hook):
+    """Collects the per-step metrics dicts (the loop's return value)."""
+
+    def __init__(self):
+        self.history = []
+
+    def on_step_end(self, loop, step, metrics):
+        self.history.append(metrics)
+
+
+class LoggingHook(Hook):
+    """Step log line every ``every`` steps (process 0 only)."""
+
+    def __init__(self, every=10, printer=print):
+        self.every = max(int(every), 1)
+        self.printer = printer
+
+    def on_step_end(self, loop, step, metrics):
+        if step % self.every or jax.process_index() != 0:
+            return
+        tau = metrics.get("tau", metrics.get("presample_tau",
+                                             metrics.get("store_tau", 0.0)))
+        active = metrics.get("is_active", metrics.get("sampler_active", 0.0))
+        self.printer(
+            f"step {step:5d} loss {metrics['loss']:.4f} tau {tau:.2f} "
+            f"is {active:.0f} dt {metrics['dt']:.2f}s", flush=True)
+
+
+class CallbackHook(Hook):
+    """Adapts the legacy ``callback(step, metrics)`` argument of
+    ``Trainer.fit`` onto the hook interface."""
+
+    def __init__(self, fn):
+        self.fn = fn
+
+    def on_step_end(self, loop, step, metrics):
+        self.fn(step, metrics)
+
+
+class CheckpointHook(Hook):
+    """Periodic (every ``run.ckpt_every`` accepted steps) and final
+    checkpoints. No-op when the experiment has no checkpoint directory.
+    Skips the final save when the loop trained zero steps (resume at the
+    final step must not rewrite the completed run's checkpoint)."""
+
+    def on_step_end(self, loop, step, metrics):
+        if loop.exp.ckpt and (step + 1) % loop.exp.run.ckpt_every == 0:
+            loop.save_checkpoint(step + 1)
+
+    def on_loop_end(self, loop, state, history):
+        if loop.exp.ckpt and loop.steps_run:
+            loop.save_checkpoint(loop.steps_target, final=True)
+
+
+class StragglerHook(Hook):
+    """Straggler escalation as a hook: feed every attempt's wall-clock to
+    the experiment's ``StragglerMonitor`` (read at call time, so tests can
+    swap ``exp.monitor``) and vote to retry while it reports a skip."""
+
+    def on_step_timed(self, loop, step, attempt, dt):
+        return bool(loop.exp.monitor.observe(dt)["skip"])

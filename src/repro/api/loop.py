@@ -1,0 +1,187 @@
+"""The event-hook training loop.
+
+``TrainLoop`` is the old ``Trainer.fit`` monolith decomposed: the loop
+keeps only the operations whose ORDER defines training semantics — the
+two-phase sampler handshake, step dispatch, double-buffered scoring,
+deferred score feedback, and bounded straggler retries — and everything
+else (logging, metrics history, checkpointing, straggler escalation)
+observes it through events:
+
+    loop_start(start, steps)
+    step_start(step, batch, meta)         after the batch materialises
+    step_timed(step, attempt, dt)         every attempt; hooks VOTE retry
+    retry(step, attempt, dt)              a vote passed; same batch re-runs
+    step_end(step, metrics)               accepted step, metrics enriched
+    scores_ready(step, meta, scores)      feedback drained into the store
+    checkpoint(step, payload)             a checkpoint was written
+    loop_end(state, history)
+
+Hooks are composable observers (``repro.api.hooks``); ``step_timed`` is
+the one control-point — any hook returning True requests a retry of the
+same batch (bounded by ``run.max_step_retries``), which is how straggler
+escalation plugs in without owning the loop. The operational order is a
+step-for-step transplant of the pre-hook loop, so metrics (loss/τ
+sequences) are bit-identical to it (``tests/test_api_loop.py`` pins this
+against a hand-rolled reference loop).
+
+Hot-path overlap (``imp.overlap_scoring``) is unchanged: while batch k's
+update runs on device, batch k+1's engine scoring is already dispatched
+(against pre-update params), and batch k-1's score feedback (device→host
+transfer + ScoreStore merges) runs on the host behind the device work.
+No synchronous ``device_get`` sits on the dispatch critical path.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+EVENTS = ("loop_start", "step_start", "step_timed", "retry", "step_end",
+          "scores_ready", "checkpoint", "loop_end")
+
+
+class TrainLoop:
+    """Runs one training loop over an ``Experiment``'s composition.
+
+    The loop reads the experiment's parts (``step_fn``, ``sampler``,
+    ``monitor``, ``ckpt``) through the experiment at call time, so tests
+    and benchmarks that swap them (fake monitors, recording step fns)
+    keep working.
+    """
+
+    def __init__(self, experiment, hooks=()):
+        self.exp = experiment
+        self.hooks = list(hooks)
+        self.state = None            # live train state (post last dispatch)
+        self.pstate = None           # live pipeline state
+        self.steps_target = 0
+        self.steps_run = 0
+        self._pending = None         # (step, meta, device scores) to observe
+
+    # -- events ---------------------------------------------------------------
+    def emit(self, event, *args) -> None:
+        for h in self.hooks:
+            getattr(h, "on_" + event)(self, *args)
+
+    def _vote_retry(self, step, attempt, dt) -> bool:
+        # list, not generator: every hook observes every attempt
+        return any([h.on_step_timed(self, step, attempt, dt)
+                    for h in self.hooks])
+
+    # -- score feedback (deferred, off the dispatch critical path) ------------
+    def drain_feedback(self) -> None:
+        """Flush the previous step's score feedback into the ScoreStore.
+
+        Called right AFTER the next step (and its overlapped scoring) has
+        been dispatched: the scores were materialised when that previous
+        step completed, so the transfer is a copy, and the store's host
+        work (EMA merges, periodic O(n) τ-gate refresh) overlaps the
+        device work now in flight instead of stalling the loop.
+        """
+        if self._pending is not None:
+            step, meta, scores = self._pending
+            self._pending = None
+            scores = np.asarray(jax.device_get(scores))
+            self.exp.sampler.observe(meta, scores)
+            self.emit("scores_ready", step, meta, scores)
+
+    # -- checkpointing (invoked by CheckpointHook) ----------------------------
+    def save_checkpoint(self, step: int, final: bool = False) -> None:
+        """Snapshot {train, sampler} plus the serialized run config (so the
+        run is reproducible from the checkpoint alone) and the pipeline
+        cursor. Drains feedback first — the payload must see the store."""
+        exp = self.exp
+        if exp.ckpt is None:
+            return
+        from repro.api.config import to_dict
+        self.drain_feedback()
+        payload = exp.checkpoint_payload(self.state)
+        exp.ckpt.save_async(step, payload,
+                            meta={"pipeline": self.pstate.as_dict(),
+                                  "run_config": to_dict(exp.run),
+                                  "source": exp.source_spec})
+        self.emit("checkpoint", step, payload)
+        if final:
+            exp.ckpt.wait()
+
+    # -- the loop -------------------------------------------------------------
+    def run(self, steps=None):
+        exp = self.exp
+        run = exp.run
+        steps = steps or run.steps
+        state, pstate, start = exp.resume_or_init()
+        self.state, self.pstate = state, pstate
+        self.steps_target, self.steps_run = steps, 0
+        self._pending = None
+        from repro.api.hooks import MetricsHistoryHook
+        hist_hook = next((h for h in self.hooks
+                          if isinstance(h, MetricsHistoryHook)), None)
+        history = hist_hook.history if hist_hook is not None else []
+        self.emit("loop_start", start, steps)
+        if start >= steps:
+            # resume-at-final-step: nothing to train. Crucially do NOT
+            # sampler.begin() — the old loop leaked an in-flight handle
+            # (and its engine scoring dispatch) here — and do not rewrite
+            # the checkpoint the completed run already committed.
+            self.emit("loop_end", state, history)
+            return state, history
+        overlap = run.imp.overlap_scoring
+        handle = exp.sampler.begin(
+            pstate, start, params=state["params"] if overlap else None)
+        i = start
+        while i < steps:
+            batch, meta, pstate_next = exp.sampler.finish(
+                handle, params=state["params"])
+            batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            self.emit("step_start", i, batch, meta)
+            launched_next = False
+            for attempt in range(run.max_step_retries + 1):
+                t0 = time.time()
+                prev_state = state
+                if exp.step_is_flagged:
+                    state, metrics = exp.step_fn(
+                        state, batch,
+                        jax.numpy.asarray(meta["is_flag"], jax.numpy.float32))
+                else:
+                    state, metrics = exp.step_fn(state, batch)
+                if not launched_next and i + 1 < steps:
+                    # double-buffer: launch batch k+1's scoring against the
+                    # PRE-update params while batch k's update runs (scores
+                    # one step stale — selection tolerates that)
+                    handle = exp.sampler.begin(
+                        pstate_next, i + 1,
+                        params=prev_state["params"] if overlap else None)
+                    launched_next = True
+                self.state = state
+                # previous step's score feedback overlaps the device work
+                self.drain_feedback()
+                scores = metrics.pop("sample_scores", None)
+                metrics = {k: float(v) for k, v in metrics.items()}
+                dt = time.time() - t0
+                if not self._vote_retry(i, attempt, dt) \
+                        or attempt == run.max_step_retries:
+                    # accepted — or retries exhausted, in which case the
+                    # (already computed, merely slow) update is kept: the
+                    # batch is RETRIED under a skip and never dropped
+                    break
+                # straggler escalation: drop this attempt's result (params
+                # AND score feedback) and RETRY THE SAME BATCH — bounded by
+                # max_step_retries; the monitor's own skip budget forces a
+                # sync once exhausted
+                state = prev_state
+                self.state = state
+                self.emit("retry", i, attempt, dt)
+            if scores is not None:
+                # close the loop lazily: scores flow into the score memory
+                # behind the NEXT step's device work (drain_feedback)
+                self._pending = (i, meta, scores)
+            pstate = pstate_next
+            self.pstate = pstate
+            metrics.update(step=i, dt=dt, **exp.sampler.stats())
+            self.steps_run += 1
+            self.emit("step_end", i, metrics)
+            i += 1
+        self.drain_feedback()
+        self.emit("loop_end", state, history)
+        return state, history

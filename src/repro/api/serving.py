@@ -1,0 +1,109 @@
+"""One-call serving: prefill + batched greedy decode (``repro.serve``).
+
+The serve loop the launcher and the batched-serving example used to each
+hand-wire: jit ``LM.serve_step`` (cache-donating, mesh-sharded when a mesh
+is given), prefill a batch of prompts, then decode greedily against the
+KV/state caches. Returns the generated tokens plus timing stats.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (ModelConfig, RunConfig, SHAPES, ShapeConfig,
+                                reduced)
+
+
+def _resolve_model(cfg) -> ModelConfig:
+    if isinstance(cfg, RunConfig):
+        return cfg.model
+    if isinstance(cfg, ModelConfig):
+        return cfg
+    from repro.configs import get_config
+    return get_config(cfg)
+
+
+def serve(cfg="lm-tiny", *, params=None, prompts=None, batch=2,
+          prompt_len=32, gen=32, cap=None, shape=None, mesh=None,
+          smoke=False, seed=1, log=None):
+    """Prefill + batched greedy decode in one call.
+
+    ``cfg`` is an arch id, ``ModelConfig``, or ``RunConfig``; ``shape``
+    optionally names a serving cell (``decode_32k`` etc.) that sets
+    batch/prompt/cap; ``smoke`` reduces the model to CPU scale. Returns
+    ``{"tokens", "prefill_s", "decode_s", "tok_per_s"}`` (tokens are the
+    ``gen`` greedy continuations, shape ``(batch, gen)``).
+    """
+    model = _resolve_model(cfg)
+    if smoke:
+        model = reduced(model, repeats=1)
+    if shape is not None:
+        if isinstance(shape, str):
+            shape = SHAPES[shape]
+        batch, prompt_len = shape.global_batch, shape.seq_len
+    if prompts is None:
+        prompts = jax.random.randint(jax.random.PRNGKey(seed),
+                                     (batch, prompt_len), 0, model.vocab_size)
+    else:
+        # caller-supplied prompts define the cache geometry
+        prompts = jnp.asarray(prompts)
+        batch, prompt_len = prompts.shape
+    # the cache must hold prompt + every generated token (a cap at exactly
+    # prompt_len would make decode's dynamic_update_slice clamp and
+    # silently overwrite the last slot)
+    cap = cap or prompt_len + gen
+    if cap < prompt_len + gen:
+        raise ValueError(f"cap={cap} cannot hold prompt_len={prompt_len} "
+                         f"+ gen={gen} tokens")
+    from repro.models.lm import LM
+    lm = LM(model)
+    if params is None:
+        params = lm.init(jax.random.PRNGKey(0))
+    caches = lm.caches(batch, cap)
+
+    if mesh is not None:
+        from repro.distributed import sharding as shd
+        named = lambda t: shd.to_named(t, mesh)
+        pspecs = shd.param_specs(model, jax.eval_shape(lambda: params), mesh)
+        cspecs = shd.cache_specs(model, jax.eval_shape(lambda: caches), mesh)
+        params = jax.device_put(params, named(pspecs))
+        caches = jax.device_put(caches, named(cspecs))
+        step = jax.jit(lm.serve_step,
+                       in_shardings=(named(pspecs), named(cspecs), None),
+                       out_shardings=(None, named(cspecs)),
+                       donate_argnums=(1,))
+    else:
+        step = jax.jit(lm.serve_step, donate_argnums=(1,))
+
+    t0 = time.time()
+    logits, caches = step(params, caches, {
+        "tokens": prompts,
+        "positions": jnp.broadcast_to(jnp.arange(prompt_len)[None],
+                                      (batch, prompt_len))})
+    jax.block_until_ready(logits)
+    prefill_s = time.time() - t0
+    if log:
+        log(f"prefill b={batch} len={prompt_len}: {prefill_s:.2f}s",
+            flush=True)
+
+    tok = jnp.argmax(logits[:, -1], -1)[:, None]
+    out = [tok]
+    t0 = time.time()
+    for i in range(gen - 1):
+        pos = jnp.full((batch, 1), prompt_len + i, jnp.int32)
+        logits, caches = step(params, caches,
+                              {"tokens": tok, "positions": pos})
+        tok = jnp.argmax(logits[:, -1], -1)[:, None]
+        out.append(tok)
+    jax.block_until_ready(tok)
+    decode_s = time.time() - t0
+    tok_per_s = batch * gen / max(decode_s, 1e-9)
+    if log:
+        log(f"decode {gen} steps: {decode_s:.2f}s ({tok_per_s:.1f} tok/s)",
+            flush=True)
+    return {"tokens": np.asarray(jnp.concatenate(out, axis=1)),
+            "prefill_s": prefill_s, "decode_s": decode_s,
+            "tok_per_s": tok_per_s}

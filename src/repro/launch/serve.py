@@ -1,4 +1,4 @@
-"""Serving launcher: prefill + batched decode on the production mesh.
+"""Serving launcher: prefill + batched decode via ``repro.api.serve``.
 
     python -m repro.launch.serve --arch zamba2-1.2b --shape decode_32k \
         --mesh pod                      # on a real pod
@@ -6,75 +6,30 @@
 """
 from __future__ import annotations
 
-import argparse
-import time
-
-import jax
-import jax.numpy as jnp
+import sys
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", default="decode_32k")
-    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "host"])
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--smoke", action="store_true")
-    args = ap.parse_args()
+def main(argv=None):
+    from repro.api import make_mesh, serve
+    from repro.api.config import ConfigError, parse_cli, truthy
 
-    from repro.configs import get_config
-    from repro.configs.base import SHAPES, reduced
-    from repro.distributed import sharding as shd
-    from repro.launch.mesh import make_host_mesh, make_production_mesh
-    from repro.models.lm import LM
+    flags = parse_cli(sys.argv[1:] if argv is None else argv)
+    arch = flags.pop("arch", None)
+    if arch is None:
+        raise ConfigError("--arch is required")
+    shape = flags.pop("shape", "decode_32k")
+    mesh_kind = flags.pop("mesh", "pod")
+    gen = int(flags.pop("gen", 32))
+    smoke = truthy(flags.pop("smoke", False))
+    if flags:
+        raise ConfigError(f"unknown serve flags {sorted(flags)}")
 
-    cfg = get_config(args.arch)
-    if args.smoke:
-        cfg = reduced(cfg, repeats=1)
-        b, prompt, cap = 2, 32, 128
-        mesh = None
+    if smoke:
+        serve(arch, smoke=True, batch=2, prompt_len=32, cap=128, gen=gen,
+              log=print)
     else:
-        shape = SHAPES[args.shape]
-        b, prompt, cap = shape.global_batch, shape.seq_len, shape.seq_len
-        mesh = (make_production_mesh(multi_pod=args.mesh == "multipod")
-                if args.mesh != "host" else make_host_mesh())
-
-    lm = LM(cfg)
-    params = lm.init(jax.random.PRNGKey(0))
-    caches = lm.caches(b, cap)
-
-    if mesh is not None:
-        named = lambda t: shd.to_named(t, mesh)
-        pspecs = shd.param_specs(cfg, jax.eval_shape(lambda: params), mesh)
-        cspecs = shd.cache_specs(cfg, jax.eval_shape(lambda: caches), mesh)
-        params = jax.device_put(params, named(pspecs))
-        caches = jax.device_put(caches, named(cspecs))
-        serve = jax.jit(lm.serve_step,
-                        in_shardings=(named(pspecs), named(cspecs), None),
-                        out_shardings=(None, named(cspecs)),
-                        donate_argnums=(1,))
-    else:
-        serve = jax.jit(lm.serve_step, donate_argnums=(1,))
-
-    key = jax.random.PRNGKey(1)
-    toks = jax.random.randint(key, (b, prompt), 0, cfg.vocab_size)
-    t0 = time.time()
-    logits, caches = serve(params, caches, {
-        "tokens": toks,
-        "positions": jnp.broadcast_to(jnp.arange(prompt)[None], (b, prompt))})
-    jax.block_until_ready(logits)
-    print(f"prefill b={b} len={prompt}: {time.time() - t0:.2f}s", flush=True)
-
-    tok = jnp.argmax(logits[:, -1], -1)[:, None]
-    t0 = time.time()
-    for i in range(args.gen):
-        pos = jnp.full((b, 1), prompt + i, jnp.int32)
-        logits, caches = serve(params, caches, {"tokens": tok, "positions": pos})
-        tok = jnp.argmax(logits[:, -1], -1)[:, None]
-    jax.block_until_ready(tok)
-    dt = time.time() - t0
-    print(f"decode {args.gen} steps: {dt:.2f}s "
-          f"({b * args.gen / dt:.1f} tok/s)")
+        serve(arch, shape=shape, mesh=make_mesh(mesh_kind), gen=gen,
+              log=print)
 
 
 if __name__ == "__main__":

@@ -1,17 +1,27 @@
-"""Production training launcher.
+"""Production training launcher — a thin shell over ``repro.api``.
 
-    python -m repro.launch.train --arch yi-34b --shape train_4k \
-        --mesh pod --ckpt gs://.../run1   # on a real pod
-    python -m repro.launch.train --arch lm-tiny --smoke   # 1-device CPU
+    python -m repro.launch.train --arch yi-34b --shape... via dotted \
+        overrides --mesh pod --ckpt_dir gs://.../run1     # on a real pod
+    python -m repro.launch.train --arch lm-tiny --smoke   # 1-device CPU (CI)
+
+Flags are the auto-generated config CLI (``Experiment.from_flags``):
+reserved ``--arch/--preset/--smoke/--mesh/--source`` plus dotted
+``RunConfig`` overrides, e.g.::
+
+    --steps 2000 --optim.lr=3e-4 --imp.presample_ratio=5 \
+    --sampler.scheme=history --imp.overlap_scoring=false \
+    --ckpt_dir gs://.../run1 --ckpt_every=100
+
+Unknown keys are hard errors — there is no launcher-local argparse copy
+to drift out of sync.
 
 On a multi-host pod each host runs this same command; jax.distributed is
-initialised from the cluster environment (TPU metadata / SLURM). The mesh,
+initialised from the cluster environment (TPU metadata / SLURM). Mesh,
 shardings, IS train step, checkpointing and straggler handling all come
-from the library — this file only wires CLI → RunConfig → Trainer.
+from the library — this file only wires CLI → Experiment → fit.
 """
 from __future__ import annotations
 
-import argparse
 import os
 
 import jax
@@ -26,87 +36,11 @@ def maybe_init_distributed():
     return False
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", default="train_4k")
-    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "host"])
-    ap.add_argument("--steps", type=int, default=1000)
-    ap.add_argument("--lr", type=float, default=3e-4)
-    ap.add_argument("--optim", default="adamw")
-    ap.add_argument("--presample-ratio", type=int, default=3)
-    ap.add_argument("--tau-th", type=float, default=0.0)
-    ap.add_argument("--no-is", action="store_true")
-    ap.add_argument("--score-impl", default="fused",
-                    choices=["fused", "naive", "chunked", "pallas"])
-    ap.add_argument("--host-score", action="store_true",
-                    help="score presample candidates on the decoupled "
-                         "ScoreEngine path (enables overlapped scoring)")
-    ap.add_argument("--score-dtype", default="bfloat16",
-                    help="engine scoring compute dtype ('none' = model dtype)")
-    ap.add_argument("--no-overlap", action="store_true",
-                    help="keep engine scoring on the critical path "
-                         "(serial; for A/B timing)")
-    ap.add_argument("--compression", default="none",
-                    choices=["none", "int8", "topk"])
-    ap.add_argument("--microbatches", type=int, default=0)
-    ap.add_argument("--ckpt", default=None)
-    ap.add_argument("--ckpt-every", type=int, default=100)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--smoke", action="store_true",
-                    help="reduced config, tiny shape, 1-device (CI)")
-    args = ap.parse_args()
-
+def main(argv=None):
     maybe_init_distributed()
-
-    from repro.configs import get_config
-    from repro.configs.base import (SHAPES, ISConfig, OptimConfig, RunConfig,
-                                    SamplerConfig, ShapeConfig, reduced)
-    from repro.data.pipeline import SyntheticLM
-    from repro.launch.dryrun import choose_microbatches
-    from repro.launch.mesh import make_host_mesh, make_production_mesh
-    from repro.runtime.trainer import Trainer
-
-    cfg = get_config(args.arch)
-    if args.smoke:
-        cfg = reduced(cfg, repeats=1)
-        shape = ShapeConfig("smoke", seq_len=32, global_batch=8, kind="train")
-        mesh = None
-    else:
-        shape = SHAPES[args.shape]
-        mesh = (make_production_mesh(multi_pod=args.mesh == "multipod")
-                if args.mesh != "host" else make_host_mesh())
-
-    dp = 1
-    if mesh is not None:
-        import numpy as np
-        dp = int(np.prod([s for s, a in zip(mesh.devices.shape, mesh.axis_names)
-                          if a != "model"]))
-    micro = args.microbatches or choose_microbatches(cfg, dp, shape.global_batch)
-
-    run = RunConfig(
-        model=cfg, shape=shape,
-        optim=OptimConfig(name=args.optim, lr=args.lr,
-                          compression=args.compression),
-        imp=ISConfig(enabled=not args.no_is,
-                     presample_ratio=args.presample_ratio,
-                     tau_th=args.tau_th, score_impl=args.score_impl,
-                     score_dtype=args.score_dtype,
-                     overlap_scoring=not args.no_overlap),
-        sampler=SamplerConfig(host_score=args.host_score),
-        steps=args.steps, microbatches=micro,
-        ckpt_dir=args.ckpt, ckpt_every=args.ckpt_every, seed=args.seed)
-
-    src = SyntheticLM(cfg.vocab_size, shape.seq_len, seed=args.seed)
-    trainer = Trainer(run, source=src, mesh=mesh)
-
-    def log(i, m):
-        if i % 10 == 0 and jax.process_index() == 0:
-            print(f"step {i:5d} loss {m['loss']:.4f} tau {m.get('tau', 0):.2f}"
-                  f" is {m.get('is_active', 0):.0f} dt {m['dt']:.2f}s",
-                  flush=True)
-
-    trainer.fit(callback=log)
+    from repro.api import Experiment, LoggingHook
+    exp = Experiment.from_flags(argv)
+    exp.fit(hooks=[LoggingHook(every=10)])
 
 
 if __name__ == "__main__":

@@ -1,204 +1,31 @@
-"""The fault-tolerant training loop.
+"""Deprecated shim — the trainer is now the ``repro.api`` facade.
 
-Composes: data pipeline → sampler scheme (repro.sampler: uniform /
-presample / presample_host / history / selective) → scoring engine
-(repro.scoring, decoupled forward-only path) → train step → optimizer →
-score-memory feedback → checkpointing (async, atomic, including the
-ScoreStore) → straggler monitor → restart logic.
+The fault-tolerant training composition that lived here (``Trainer``)
+moved to ``repro.api.experiment.Experiment``, and its ``fit`` monolith
+was decomposed into the event-hook loop (``repro.api.loop.TrainLoop`` +
+``repro.api.hooks``). This module keeps the old import path working:
 
-Hot-path overlap (``imp.overlap_scoring``): the loop is double-buffered —
-while batch k's update runs on device, the engine's scoring pass for
-batch k+1 is already dispatched (against the PRE-update params, so the
-two computations are independent; scores go one step stale, which
-selection tolerates), and the score feedback for batch k-1 (device→host
-transfer + ScoreStore EMA merges + the occasional O(n) τ-gate refresh)
-runs on the host behind the device work instead of between steps. No
-synchronous ``device_get`` sits on the dispatch critical path.
+    from repro.runtime.trainer import Trainer   # DeprecationWarning
 
-Works identically on 1 CPU device (examples/tests) and on a pod mesh (the
-launcher passes mesh + shardings).
+returns the ``Experiment`` class (same constructor signature, same
+``fit() -> (state, history)`` contract, same exposed parts: ``step_fn``,
+``sampler``, ``monitor``, ``B``, ...). New code should use::
+
+    import repro
+    repro.train(...)                  # one-call
+    repro.Experiment(run_cfg, ...)    # programmatic
 """
 from __future__ import annotations
 
-import time
-from pathlib import Path
-
-import jax
-import numpy as np
-
-from repro.checkpoint.ckpt import Checkpointer
-from repro.core.is_train import StepSpec, build_step, train_state_init
-from repro.data.pipeline import PipelineState, SyntheticLM
-from repro.models.lm import LM
-from repro.optim.api import get_optimizer, step_drop_schedule
-from repro.runtime.straggler import StragglerMonitor
-from repro.sampler import make_sampler
-from repro.scoring import ScoreEngine
+import warnings
 
 
-class Trainer:
-    def __init__(self, run_cfg, source=None, mesh=None, gate=None):
-        self.run = run_cfg
-        self.lm = LM(run_cfg.model)
-        self.opt = get_optimizer(run_cfg.optim)
-        self.mesh = mesh
-        self.gate = gate
-        self.source = source or SyntheticLM(
-            run_cfg.model.vocab_size, run_cfg.shape.seq_len, seed=run_cfg.seed)
-        self.sampler = make_sampler(run_cfg, self.source)
-        # the decoupled scoring path: host-side schemes score through it,
-        # and it backs out-of-band ScoreStore refreshes (jit is lazy, so
-        # binding it is free for schemes that never score on host)
-        self.engine = ScoreEngine(self.lm, run_cfg, mesh=mesh)
-        self.sampler.bind_engine(self.engine)
-        self.B = run_cfg.shape.global_batch * run_cfg.imp.presample_ratio
-        self.monitor = StragglerMonitor(run_cfg.step_deadline_factor)
-        self.ckpt = (Checkpointer(run_cfg.ckpt_dir, keep=run_cfg.keep_ckpts)
-                     if run_cfg.ckpt_dir else None)
-        self._pending = None     # (meta, device scores) awaiting observe()
-        self._build()
-
-    def _build(self):
-        # presample runs the paper's on-device Algorithm 1; the score-memory
-        # and host-presample schemes use the host-chosen-batch step with a
-        # sampled/weighted flag — both flavours of the ONE unified step
-        if self.sampler.uses_score_step:
-            spec = StepSpec("host")
-        else:
-            spec = StepSpec("presample", gate=self.gate or (
-                "cond" if self.run.imp.enabled else "never"))
-        step = build_step(self.lm, self.run, self.opt, spec)
-        self._flagged = spec.flagged
-        extra_in = (None,) if spec.flagged else ()  # is_flag scalar
-        if self.mesh is not None:
-            from repro.distributed import sharding as shd
-            key = jax.random.PRNGKey(self.run.seed)
-            state_sds = jax.eval_shape(
-                lambda k: train_state_init(self.lm, self.opt, k), key)
-            sspecs = shd.state_specs(self.run.model, state_sds, self.mesh)
-            named = lambda t: shd.to_named(t, self.mesh)
-            self.step_fn = jax.jit(step,
-                                   in_shardings=(named(sspecs), None) + extra_in,
-                                   out_shardings=(named(sspecs), None))
-        else:
-            # no donation here: identical scalar leaves (step/ctrl counters)
-            # can alias one buffer and double-donate on CPU
-            self.step_fn = jax.jit(step)
-
-    # -- state ----------------------------------------------------------------
-    def init_state(self):
-        key = jax.random.PRNGKey(self.run.seed)
-        return train_state_init(self.lm, self.opt, key), PipelineState()
-
-    def _payload(self, state):
-        """Checkpoint payload: train state + the sampler's score memory."""
-        return {"train": state, "sampler": self.sampler.state_dict()}
-
-    def resume_or_init(self):
-        """Restart-from-checkpoint: the node-failure recovery entry point."""
-        if self.ckpt and self.ckpt.latest_step() is not None:
-            template, pstate = self.init_state()
-            try:
-                payload, step = self.ckpt.restore({"train": template})
-                state = payload["train"]
-            except KeyError:
-                # legacy layout: train state at the payload root
-                state, step = self.ckpt.restore(template)
-            try:
-                # lenient: a checkpoint from another scheme still warms the
-                # shared score store; scheme-specific extras keep their init
-                samp, _ = self.ckpt.restore(
-                    {"sampler": self.sampler.state_dict()}, step=step,
-                    strict=False)
-                self.sampler.load_state_dict(samp["sampler"])
-            except (KeyError, ValueError):
-                pass  # different dataset/topology: sampler starts cold
-            meta = self.ckpt.meta()
-            pstate = PipelineState.from_dict(meta.get("pipeline", pstate.as_dict()))
-            return state, pstate, step
-        state, pstate = self.init_state()
-        return state, pstate, 0
-
-    # -- score feedback (deferred, off the dispatch critical path) ------------
-    def _drain_feedback(self):
-        """Flush the previous step's score feedback into the ScoreStore.
-
-        Called right AFTER the next step (and its overlapped scoring) has
-        been dispatched: the scores were materialised when that previous
-        step completed, so the transfer is a copy, and the store's host
-        work (EMA merges, periodic O(n) τ-gate refresh) overlaps the
-        device work now in flight instead of stalling the loop.
-        """
-        if self._pending is not None:
-            meta, scores = self._pending
-            self._pending = None
-            self.sampler.observe(meta, np.asarray(jax.device_get(scores)))
-
-    # -- loop -----------------------------------------------------------------
-    def fit(self, steps=None, log_every=10, callback=None):
-        steps = steps or self.run.steps
-        state, pstate, start = self.resume_or_init()
-        history = []
-        self._pending = None
-        overlap = self.run.imp.overlap_scoring
-        handle = self.sampler.begin(pstate, start,
-                                    params=state["params"] if overlap else None)
-        i = start
-        while i < steps:
-            batch, meta, pstate_next = self.sampler.finish(
-                handle, params=state["params"])
-            batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
-            launched_next = False
-            for attempt in range(self.run.max_step_retries + 1):
-                t0 = time.time()
-                prev_state = state
-                if self._flagged:
-                    state, metrics = self.step_fn(
-                        state, batch,
-                        jax.numpy.asarray(meta["is_flag"], jax.numpy.float32))
-                else:
-                    state, metrics = self.step_fn(state, batch)
-                if not launched_next and i + 1 < steps:
-                    # double-buffer: launch batch k+1's scoring against the
-                    # PRE-update params while batch k's update runs (scores
-                    # one step stale — selection tolerates that)
-                    handle = self.sampler.begin(
-                        pstate_next, i + 1,
-                        params=prev_state["params"] if overlap else None)
-                    launched_next = True
-                # previous step's score feedback overlaps the device work
-                self._drain_feedback()
-                scores = metrics.pop("sample_scores", None)
-                metrics = {k: float(v) for k, v in metrics.items()}
-                dt = time.time() - t0
-                action = self.monitor.observe(dt)
-                if not action["skip"] or attempt == self.run.max_step_retries:
-                    # accepted — or retries exhausted, in which case the
-                    # (already computed, merely slow) update is kept: the
-                    # batch is RETRIED under a skip and never dropped
-                    break
-                # straggler escalation: drop this attempt's result (params
-                # AND score feedback) and RETRY THE SAME BATCH — bounded by
-                # max_step_retries; the monitor's own skip budget forces a
-                # sync once exhausted
-                state = prev_state
-            if scores is not None:
-                # close the loop lazily: scores flow into the score memory
-                # behind the NEXT step's device work (_drain_feedback)
-                self._pending = (meta, scores)
-            pstate = pstate_next
-            metrics.update(step=i, dt=dt, **self.sampler.stats())
-            history.append(metrics)
-            if callback:
-                callback(i, metrics)
-            if self.ckpt and (i + 1) % self.run.ckpt_every == 0:
-                self._drain_feedback()   # the payload snapshots the store
-                self.ckpt.save_async(i + 1, self._payload(state),
-                                     meta={"pipeline": pstate.as_dict()})
-            i += 1
-        self._drain_feedback()
-        if self.ckpt:
-            self.ckpt.save_async(steps, self._payload(state),
-                                 meta={"pipeline": pstate.as_dict()})
-            self.ckpt.wait()
-        return state, history
+def __getattr__(name):
+    if name == "Trainer":
+        warnings.warn(
+            "repro.runtime.trainer.Trainer is deprecated; use "
+            "repro.api.Experiment (or the repro.train one-call entry point) "
+            "instead", DeprecationWarning, stacklevel=2)
+        from repro.api.experiment import Experiment
+        return Experiment
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

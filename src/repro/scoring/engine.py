@@ -18,7 +18,7 @@ remat, full-precision compute, grad plumbing, and the update's sharding.
 
 Because the engine is its own dispatch unit, the trainer can launch
 scoring for batch k+1 while batch k's update runs (double-buffering — see
-``repro.runtime.trainer``), and host-side samplers can refresh the
+``repro.api.loop``), and host-side samplers can refresh the
 persistent ``ScoreStore`` out-of-band (``Sampler.refresh_scores``).
 Scores used one step late are slightly stale; selection tolerates that
 (Jiang et al. 2019) and the τ-gate maths is unchanged.

@@ -1,0 +1,156 @@
+"""The declarative config layer (``repro.api.config``): lossless
+RunConfig ⇄ dict/json round-tripping, dotted CLI overrides with hard
+unknown-key errors, the preset registry, and ``Experiment.from_flags``."""
+import json
+
+import pytest
+
+import repro
+from repro.api.config import (ConfigError, apply_overrides, build_run,
+                              from_dict, from_json, get_preset, list_presets,
+                              parse_cli, to_dict, to_json)
+from repro.configs import get_config
+from repro.configs.base import ISConfig, OptimConfig, RunConfig, ShapeConfig
+
+
+# ---------------------------------------------------------------------------
+# round-tripping
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["lm-tiny", "deepseek-v2-236b",
+                                  "zamba2-1.2b", "xlstm-350m"])
+def test_roundtrip_dict_equality(arch):
+    """RunConfig → dict → RunConfig is the identity, including the nested
+    ModelConfig tree (segments, MoE/MLA/SSM blocks)."""
+    run = RunConfig(model=get_config(arch),
+                    shape=ShapeConfig("rt", seq_len=64, global_batch=4,
+                                      kind="train"),
+                    optim=OptimConfig(name="adamw", lr=2e-3),
+                    imp=ISConfig(presample_ratio=4, tau_th=1.7),
+                    steps=11, seed=3, ckpt_dir="/tmp/x", microbatches=2)
+    assert from_dict(to_dict(run)) == run
+
+
+def test_roundtrip_survives_json():
+    """The dict is genuinely JSON-able and the json round trip is exact
+    (tuples → lists → tuples, None preserved)."""
+    run = RunConfig(model=get_config("granite-moe-3b-a800m"))
+    assert run.ckpt_dir is None
+    s = to_json(run)
+    assert from_json(s) == run
+    # and a json.loads/dumps cycle in between changes nothing
+    assert from_dict(json.loads(json.dumps(to_dict(run)))) == run
+
+
+def test_from_dict_rejects_unknown_keys():
+    d = to_dict(RunConfig(model=get_config("lm-tiny")))
+    d["imp"]["typo_field"] = 1
+    with pytest.raises(ConfigError, match="typo_field"):
+        from_dict(d)
+
+
+# ---------------------------------------------------------------------------
+# dotted overrides
+# ---------------------------------------------------------------------------
+def test_nested_overrides_coerce_types():
+    run = RunConfig(model=get_config("lm-tiny"))
+    run = apply_overrides(run, {
+        "imp.presample_ratio": "5",        # int
+        "optim.lr": "3e-4",                # float
+        "remat": "false",                  # bool
+        "sampler.scheme": "history",       # str
+        "imp.overlap_scoring": "no",       # bool alias
+        "ckpt_dir": "/tmp/run1",           # Optional[str]
+        "steps": 200,                      # already typed (programmatic)
+    })
+    assert run.imp.presample_ratio == 5
+    assert run.optim.lr == pytest.approx(3e-4)
+    assert run.remat is False
+    assert run.sampler.scheme == "history"
+    assert run.imp.overlap_scoring is False
+    assert run.ckpt_dir == "/tmp/run1"
+    assert run.steps == 200
+    # Optional[str] accepts none → None
+    assert apply_overrides(run, {"ckpt_dir": "none"}).ckpt_dir is None
+
+
+def test_overrides_reach_the_model_tree():
+    run = apply_overrides(RunConfig(model=get_config("lm-tiny")),
+                          {"model.vocab_size": "1024",
+                           "model.moe.top_k": "2"})
+    assert run.model.vocab_size == 1024
+    assert run.model.moe.top_k == 2
+
+
+def test_unknown_keys_are_hard_errors():
+    run = RunConfig(model=get_config("lm-tiny"))
+    with pytest.raises(ConfigError, match="not a field of RunConfig"):
+        apply_overrides(run, {"stepz": 10})
+    with pytest.raises(ConfigError, match="not a field of ISConfig"):
+        apply_overrides(run, {"imp.presample_ration": 5})
+    with pytest.raises(ConfigError, match="leaf field"):
+        apply_overrides(run, {"steps.nested": 1})       # path into a leaf
+    with pytest.raises(ConfigError, match="nested config"):
+        apply_overrides(run, {"imp": "x"})              # nested set as leaf
+    with pytest.raises(ConfigError, match="bool"):
+        apply_overrides(run, {"remat": "maybe"})
+    # a bare flag (forgotten value) is only valid for bool fields: --steps
+    # followed by another flag must not silently train True == 1 step
+    with pytest.raises(ConfigError, match="bare flag"):
+        apply_overrides(run, {"steps": True})
+    assert apply_overrides(run, {"remat": True}).remat is True
+
+
+def test_parse_cli_forms():
+    flags = parse_cli(["--imp.presample-ratio=5", "--steps", "20",
+                       "--smoke", "--sampler.scheme=history"])
+    assert flags == {"imp.presample_ratio": "5", "steps": "20",
+                     "smoke": True, "sampler.scheme": "history"}
+    with pytest.raises(ConfigError, match="unexpected argument"):
+        parse_cli(["positional"])
+
+
+# ---------------------------------------------------------------------------
+# presets + build_run
+# ---------------------------------------------------------------------------
+def test_preset_registry():
+    assert {"smoke", "paper_cifar", "demo", "prod"} <= set(list_presets())
+    with pytest.raises(ConfigError, match="unknown preset"):
+        get_preset("nope")
+
+
+def test_build_run_preset_plus_overrides():
+    run = build_run(arch="lm-tiny", preset="smoke",
+                    overrides={"steps": "7", "imp.tau_th": "1.5"})
+    assert run.steps == 7
+    assert run.imp.tau_th == pytest.approx(1.5)
+    assert run.shape.name == "smoke"
+    assert run.model.name.endswith("-smoke")   # reduced model
+    with pytest.raises(ConfigError, match="arch"):
+        build_run(preset="smoke")
+
+
+# ---------------------------------------------------------------------------
+# Experiment.from_flags (the auto-generated launcher CLI)
+# ---------------------------------------------------------------------------
+def test_from_flags_smoke_and_overrides():
+    exp = repro.Experiment.from_flags(
+        ["--arch", "lm-tiny", "--smoke", "--steps=3",
+         "--imp.presample_ratio=2"])
+    assert exp.mesh is None
+    assert exp.run.steps == 3
+    assert exp.run.imp.presample_ratio == 2
+    assert exp.run.shape.name == "smoke"
+
+
+def test_from_flags_rejects_unknown_flag():
+    with pytest.raises(ConfigError, match="presample_ration"):
+        repro.Experiment.from_flags(
+            ["--arch", "lm-tiny", "--smoke", "--imp.presample_ration=2"])
+    with pytest.raises(ConfigError, match="--arch is required"):
+        repro.Experiment.from_flags(["--smoke"])
+
+
+def test_public_all_resolves():
+    """Every name in the curated repro.__all__ resolves lazily."""
+    for name in repro.__all__:
+        assert getattr(repro, name) is not None

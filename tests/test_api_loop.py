@@ -1,0 +1,270 @@
+"""The event-hook loop and the ``repro.api`` facade: step-for-step parity
+with the pre-hook monolith, hook/event wiring, the resume-at-final-step
+begin-handle fix, checkpoint config manifests, and the back-compat shim."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.api import Experiment, Hook
+from repro.configs import get_config
+from repro.configs.base import (ISConfig, OptimConfig, RunConfig,
+                                SamplerConfig, ShapeConfig)
+from repro.data.pipeline import SyntheticLM
+
+
+def _run(scheme="presample", steps=8, tmp_path=None, host_score=False,
+         **kw):
+    return RunConfig(
+        model=get_config("lm-tiny"),
+        shape=ShapeConfig("t", seq_len=16, global_batch=8, kind="train"),
+        optim=OptimConfig(name="adamw", lr=1e-3, weight_decay=0.0),
+        imp=ISConfig(enabled=True, presample_ratio=2, tau_th=1.1),
+        sampler=SamplerConfig(scheme=scheme, min_coverage=0.25,
+                              tau_th=1.005, host_score=host_score),
+        steps=steps, remat=False,
+        ckpt_dir=str(tmp_path) if tmp_path else None, ckpt_every=4, **kw)
+
+
+def _source(run):
+    return SyntheticLM(run.model.vocab_size, run.shape.seq_len,
+                       n_examples=256, seed=7, host_id=0, n_hosts=1)
+
+
+def _reference_fit(exp, steps):
+    """The pre-refactor ``Trainer.fit`` monolith, distilled (no straggler
+    retries — the monitor never skips on these runs): the parity oracle
+    for the event-hook loop."""
+    state, pstate = exp.init_state()
+    overlap = exp.run.imp.overlap_scoring
+    pending = None
+    history = []
+    handle = exp.sampler.begin(pstate, 0,
+                               params=state["params"] if overlap else None)
+    for i in range(steps):
+        batch, meta, pstate_next = exp.sampler.finish(
+            handle, params=state["params"])
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        prev_state = state
+        if exp.step_is_flagged:
+            state, metrics = exp.step_fn(
+                state, batch, jnp.asarray(meta["is_flag"], jnp.float32))
+        else:
+            state, metrics = exp.step_fn(state, batch)
+        if i + 1 < steps:
+            handle = exp.sampler.begin(
+                pstate_next, i + 1,
+                params=prev_state["params"] if overlap else None)
+        if pending is not None:
+            exp.sampler.observe(pending[0], np.asarray(
+                jax.device_get(pending[1])))
+            pending = None
+        scores = metrics.pop("sample_scores", None)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        if scores is not None:
+            pending = (meta, scores)
+        pstate = pstate_next
+        metrics.update(step=i, **exp.sampler.stats())
+        history.append(metrics)
+    if pending is not None:
+        exp.sampler.observe(pending[0], np.asarray(jax.device_get(pending[1])))
+    return state, history
+
+
+@pytest.mark.parametrize("scheme", ["presample", "history", "selective"])
+def test_loop_parity_with_monolith(scheme):
+    """Same seed ⇒ the hook loop reproduces the monolith's loss/τ sequence
+    exactly, for the on-device Algorithm 1 step AND the host-chosen-batch
+    schemes (whose selection depends on deferred-feedback ordering)."""
+    run = _run(scheme=scheme, steps=8)
+    ref_state, ref_hist = _reference_fit(
+        Experiment(run, source=_source(run)), steps=8)
+    new_state, new_hist = Experiment(run, source=_source(run)).fit(steps=8)
+    assert len(new_hist) == len(ref_hist) == 8
+    for ref, new in zip(ref_hist, new_hist):
+        for key in ("loss", "tau", "is_active", "store_coverage",
+                    "store_tau", "sampler_active"):
+            if key in ref:
+                assert new[key] == ref[key], (key, ref, new)
+    for a, b in zip(jax.tree_util.tree_leaves(ref_state["params"]),
+                    jax.tree_util.tree_leaves(new_state["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_events_fire_in_order():
+    run = _run(steps=6)
+
+    class Recorder(Hook):
+        def __init__(self):
+            self.events = []
+
+        def on_loop_start(self, loop, start, steps):
+            self.events.append(("loop_start", start, steps))
+
+        def on_step_start(self, loop, step, batch, meta):
+            self.events.append(("step_start", step))
+
+        def on_step_end(self, loop, step, metrics):
+            self.events.append(("step_end", step))
+
+        def on_scores_ready(self, loop, step, meta, scores):
+            self.events.append(("scores_ready", step))
+
+        def on_loop_end(self, loop, state, history):
+            self.events.append(("loop_end", len(history)))
+
+    rec = Recorder()
+    exp = Experiment(run, source=_source(run))
+    _, hist = exp.fit(steps=6, hooks=[rec])
+    names = [e[0] for e in rec.events]
+    assert rec.events[0] == ("loop_start", 0, 6)
+    assert names.count("step_start") == names.count("step_end") == 6
+    # feedback for step k drains during step k+1 (and once at loop end)
+    assert names.count("scores_ready") == 6
+    assert rec.events[-1] == ("loop_end", 6)
+    # step k's scores_ready lands AFTER step k+1's step_start
+    i_start1 = rec.events.index(("step_start", 1))
+    assert rec.events.index(("scores_ready", 0)) > i_start1
+
+
+def test_retry_event_and_monitor_swap():
+    """Straggler escalation is a hook: a fake monitor voting one skip makes
+    the loop emit ``retry`` and re-run the same batch."""
+    run = _run(steps=4)
+
+    class SkipOnce:
+        def __init__(self):
+            self.calls = 0
+
+        def observe(self, dt):
+            self.calls += 1
+            return {"skip": self.calls == 2, "b_scale": 1.0,
+                    "over_deadline": False}
+
+    class Retries(Hook):
+        def __init__(self):
+            self.retries = []
+
+        def on_retry(self, loop, step, attempt, dt):
+            self.retries.append((step, attempt))
+
+    rec = Retries()
+    exp = Experiment(run, source=_source(run))
+    exp.monitor = SkipOnce()
+    state, hist = exp.fit(steps=4, hooks=[rec])
+    assert rec.retries == [(1, 0)]
+    assert len(hist) == 4
+    assert int(jax.device_get(state["step"])) == 4
+
+
+def test_logging_hook_prints(capsys):
+    run = _run(steps=3)
+    Experiment(run, source=_source(run)).fit(
+        steps=3, hooks=[repro.LoggingHook(every=2)])
+    out = capsys.readouterr().out
+    assert "step     0 loss" in out and "step     2 loss" in out
+
+
+# ---------------------------------------------------------------------------
+# resume-at-final-step (the leaked begin-handle bugfix)
+# ---------------------------------------------------------------------------
+class _CountingSampler:
+    def __init__(self, inner):
+        self._inner = inner
+        self.begins = 0
+        self.finishes = 0
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+    def begin(self, *a, **kw):
+        self.begins += 1
+        return self._inner.begin(*a, **kw)
+
+    def finish(self, *a, **kw):
+        self.finishes += 1
+        return self._inner.finish(*a, **kw)
+
+
+def test_resume_at_final_step_leaks_no_handle(tmp_path):
+    run = _run(steps=4, tmp_path=tmp_path)
+    Experiment(run, source=_source(run)).fit(steps=4)
+
+    exp2 = Experiment(run, source=_source(run))
+    exp2.sampler = _CountingSampler(exp2.sampler)
+    before = exp2.ckpt.steps()
+    manifest = tmp_path / "step_4" / "manifest.json"
+    mtime = manifest.stat().st_mtime_ns
+    state, hist = exp2.fit(steps=4)
+    # nothing trained, nothing begun (the old loop leaked one begin here),
+    # and the completed run's checkpoint was not rewritten
+    assert hist == []
+    assert exp2.sampler.begins == 0 and exp2.sampler.finishes == 0
+    assert exp2.ckpt.steps() == before
+    assert manifest.stat().st_mtime_ns == mtime
+    assert int(jax.device_get(state["step"])) == 4
+
+
+def test_resume_past_final_step_same(tmp_path):
+    run = _run(steps=4, tmp_path=tmp_path)
+    Experiment(run, source=_source(run)).fit(steps=4)
+    exp2 = Experiment(run, source=_source(run))
+    state, hist = exp2.fit(steps=2)       # checkpoint is already past this
+    assert hist == []
+    assert exp2.ckpt.latest_step() == 4   # not clobbered with a stale save
+
+
+# ---------------------------------------------------------------------------
+# checkpoint config manifest + from_checkpoint
+# ---------------------------------------------------------------------------
+def test_checkpoint_carries_run_config_and_rebuilds(tmp_path):
+    run = _run(steps=4, tmp_path=tmp_path, seed=11)
+    exp = Experiment(run, source=_source(run))
+    exp.fit(steps=4)
+    meta = exp.ckpt.meta()
+    assert repro.from_dict(meta["run_config"]) == run
+    # a custom source object can't be rebuilt from the manifest: the
+    # rebuild must demand it rather than silently train on SyntheticLM
+    assert meta["source"] == "custom:SyntheticLM"
+    with pytest.raises(repro.ConfigError, match="custom data source"):
+        Experiment.from_checkpoint(tmp_path)
+
+    exp2 = Experiment.from_checkpoint(tmp_path, source=_source(run))
+    assert exp2.run == run                 # ckpt_dir round-trips too
+    _, pstate, step = exp2.resume_or_init()
+    assert step == 4
+
+
+def test_checkpoint_source_kind_roundtrips(tmp_path):
+    run = _run(steps=2, tmp_path=tmp_path)
+    exp = Experiment(run, source="cls")
+    exp.fit(steps=2)
+    assert exp.ckpt.meta()["source"] == "cls"
+    exp2 = Experiment.from_checkpoint(tmp_path)
+    assert type(exp2.source).__name__ == "SyntheticCLS"
+
+
+# ---------------------------------------------------------------------------
+# back-compat shims
+# ---------------------------------------------------------------------------
+def test_trainer_import_path_warns_but_works():
+    import repro.runtime.trainer as old
+    with pytest.warns(DeprecationWarning, match="repro.api.Experiment"):
+        trainer_cls = old.Trainer
+    assert trainer_cls is Experiment
+    # direct RunConfig construction (the old wiring style) still drives it
+    run = _run(steps=2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")     # no warnings on the new path
+        state, hist = trainer_cls(run, source=_source(run)).fit(steps=2)
+    assert len(hist) == 2
+
+
+def test_train_one_call_matches_experiment_fit():
+    run = _run(steps=4)
+    s1, h1 = repro.train(run, source=_source(run))
+    s2, h2 = Experiment(run, source=_source(run)).fit()
+    assert [h["loss"] for h in h1] == [h["loss"] for h in h2]

@@ -173,7 +173,7 @@ def test_lr_tau_boost_trains_stably_and_activates():
     from repro.configs import get_config
     from repro.configs.base import ISConfig, OptimConfig, RunConfig, ShapeConfig
     from repro.data.pipeline import SyntheticCLS
-    from repro.runtime.trainer import Trainer
+    from repro.api import Experiment as Trainer
 
     cfg = get_config("lm-tiny")
     shape = ShapeConfig("t", seq_len=16, global_batch=16, kind="train")

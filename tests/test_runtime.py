@@ -14,7 +14,7 @@ from repro.data.pipeline import PipelineState, SyntheticLM
 from repro.optim.api import get_optimizer, sgd, step_drop_schedule
 from repro.runtime.elastic import rebalance_microbatches, remesh_shape
 from repro.runtime.straggler import StragglerMonitor
-from repro.runtime.trainer import Trainer
+from repro.api import Experiment as Trainer
 
 
 # ---------------------------------------------------------------------------

@@ -17,7 +17,7 @@ from repro.configs.base import (ISConfig, OptimConfig, RunConfig,
 from repro.core import importance as imp
 from repro.data.pipeline import (MemmapLM, PipelineState, Prefetcher,
                                  SyntheticCLS, SyntheticLM)
-from repro.runtime.trainer import Trainer
+from repro.api import Experiment as Trainer
 from repro.sampler import ScoreStore, make_sampler
 
 

@@ -12,7 +12,7 @@ from repro.configs.base import (ISConfig, OptimConfig, RunConfig,
                                 SamplerConfig, ShapeConfig)
 from repro.data.pipeline import PipelineState, SyntheticCLS, SyntheticLM
 from repro.models.lm import LM
-from repro.runtime.trainer import Trainer
+from repro.api import Experiment as Trainer
 from repro.scoring import ScoreEngine
 
 
