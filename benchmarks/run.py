@@ -16,11 +16,12 @@ import traceback
 
 def main() -> None:
     from benchmarks import paper_figures as pf
-    from benchmarks import (roofline, sampler_compare, scoring_overhead,
-                            svrg_compare)
+    from benchmarks import (data_plane, roofline, sampler_compare,
+                            scoring_overhead, svrg_compare)
 
     suites = {
         "sampler": sampler_compare.sampler_compare,
+        "pipeline": data_plane.bench_data_plane,
         "fig1": pf.fig1_variance_reduction,
         "fig2": pf.fig2_correlation,
         "fig3": pf.fig3_convergence,

@@ -54,10 +54,16 @@ _EXPORTS = {
     "get_config": "repro.configs",
     "ARCHS": "repro.configs",
     # data sources (the ``source=`` argument of Experiment/train)
+    "DataSource": "repro.data.pipeline",
     "SyntheticLM": "repro.data.pipeline",
     "SyntheticCLS": "repro.data.pipeline",
     "MemmapLM": "repro.data.pipeline",
     "PipelineState": "repro.data.pipeline",
+    # the selection plane (global batch plans + pipelined assembly)
+    "BatchPlan": "repro.data.plan",
+    "DataPlane": "repro.data.pipeline",
+    "DataConfig": "repro.configs.base",
+    "Assembler": "repro.sampler.assembly",
 }
 
 __all__ = sorted(_EXPORTS)

@@ -25,8 +25,8 @@ import dataclasses
 import json
 
 from repro.configs import get_config
-from repro.configs.base import (ISConfig, MLAConfig, ModelConfig, MoEConfig,
-                                OptimConfig, RunConfig, SSMConfig,
+from repro.configs.base import (DataConfig, ISConfig, MLAConfig, ModelConfig,
+                                MoEConfig, OptimConfig, RunConfig, SSMConfig,
                                 SamplerConfig, Segment, ShapeConfig, reduced)
 
 
@@ -44,7 +44,7 @@ class ConfigError(ValueError):
 _NESTED = {
     RunConfig: {"model": ModelConfig, "shape": ShapeConfig,
                 "optim": OptimConfig, "imp": ISConfig,
-                "sampler": SamplerConfig},
+                "sampler": SamplerConfig, "data": DataConfig},
     ModelConfig: {"moe": MoEConfig, "mla": MLAConfig, "ssm": SSMConfig},
 }
 

@@ -41,7 +41,8 @@ from repro.api.config import (ConfigError, apply_overrides, build_run,
 from repro.checkpoint.ckpt import Checkpointer
 from repro.configs.base import ModelConfig, RunConfig
 from repro.core.is_train import StepSpec, build_step, train_state_init
-from repro.data.pipeline import PipelineState, SyntheticCLS, SyntheticLM
+from repro.data.pipeline import (DataPlane, PipelineState, SyntheticCLS,
+                                 SyntheticLM)
 from repro.models.lm import LM
 from repro.optim.api import get_optimizer
 from repro.runtime.straggler import StragglerMonitor
@@ -204,6 +205,19 @@ class Experiment:
             # no donation here: identical scalar leaves (step/ctrl counters)
             # can alias one buffer and double-donate on CPU
             self.step_fn = jax.jit(step)
+
+    # -- data plane ------------------------------------------------------------
+    def make_plane(self) -> DataPlane:
+        """A fresh per-run data plane over this experiment's sampler.
+
+        Pure-plan schemes (uniform / presample) get the depth-N pipelined
+        plan → gather → device-put stages (``run.data``); store- and
+        engine-coupled schemes pass through the sampler's two-phase
+        ``begin``/``finish`` (which already overlap engine scoring).
+        The loop owns the plane's lifetime (one per ``run()``).
+        """
+        return DataPlane(self.sampler, depth=self.run.data.prefetch_depth,
+                         device_put=self.run.data.device_put)
 
     # -- state ----------------------------------------------------------------
     def init_state(self):

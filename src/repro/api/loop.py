@@ -29,6 +29,17 @@ update runs on device, batch k+1's engine scoring is already dispatched
 (against pre-update params), and batch k-1's score feedback (device→host
 transfer + ScoreStore merges) runs on the host behind the device work.
 No synchronous ``device_get`` sits on the dispatch critical path.
+
+Data flows through the SELECTION PLANE: the loop consumes ``BatchPlan``s
+(``repro.data.plan``) from a per-run ``DataPlane`` rather than raw
+batches from the sampler. For pure-plan schemes the plane pre-plans,
+pre-gathers, and pre-transfers up to ``run.data.prefetch_depth`` batches
+on worker threads (overlapping both the update and any in-flight engine
+scoring); store/engine-coupled schemes pass through the sampler's own
+two-phase ``begin``/``finish``. The event payload formerly called
+``meta`` IS the step's plan (plans keep dict-style ``meta["gids"]`` /
+``meta["is_flag"]`` access for old hooks). The checkpointed pipeline
+cursor doubles as the plan cursor — resume re-plans bitwise.
 """
 from __future__ import annotations
 
@@ -54,10 +65,11 @@ class TrainLoop:
         self.exp = experiment
         self.hooks = list(hooks)
         self.state = None            # live train state (post last dispatch)
-        self.pstate = None           # live pipeline state
+        self.pstate = None           # live pipeline state (= plan cursor)
+        self.plane = None            # per-run DataPlane (made in run())
         self.steps_target = 0
         self.steps_run = 0
-        self._pending = None         # (step, meta, device scores) to observe
+        self._pending = None         # (step, plan, device scores) to observe
 
     # -- events ---------------------------------------------------------------
     def emit(self, event, *args) -> None:
@@ -80,11 +92,11 @@ class TrainLoop:
         device work now in flight instead of stalling the loop.
         """
         if self._pending is not None:
-            step, meta, scores = self._pending
+            step, plan, scores = self._pending
             self._pending = None
             scores = np.asarray(jax.device_get(scores))
-            self.exp.sampler.observe(meta, scores)
-            self.emit("scores_ready", step, meta, scores)
+            self.exp.sampler.observe(plan, scores)
+            self.emit("scores_ready", step, plan, scores)
 
     # -- checkpointing (invoked by CheckpointHook) ----------------------------
     def save_checkpoint(self, step: int, final: bool = False) -> None:
@@ -121,20 +133,33 @@ class TrainLoop:
         self.emit("loop_start", start, steps)
         if start >= steps:
             # resume-at-final-step: nothing to train. Crucially do NOT
-            # sampler.begin() — the old loop leaked an in-flight handle
-            # (and its engine scoring dispatch) here — and do not rewrite
-            # the checkpoint the completed run already committed.
+            # begin() — the old loop leaked an in-flight handle (and its
+            # engine scoring dispatch) here — and do not rewrite the
+            # checkpoint the completed run already committed.
             self.emit("loop_end", state, history)
             return state, history
         overlap = run.imp.overlap_scoring
-        handle = exp.sampler.begin(
+        plane = self.plane = exp.make_plane()
+        try:
+            return self._run_steps(plane, state, pstate, start, steps,
+                                   overlap, history)
+        finally:
+            # also on exceptions (step failures, surfaced gather errors):
+            # worker threads must not outlive the run
+            plane.stop()
+
+    def _run_steps(self, plane, state, pstate, start, steps, overlap,
+                   history):
+        exp = self.exp
+        run = exp.run
+        handle = plane.begin(
             pstate, start, params=state["params"] if overlap else None)
         i = start
         while i < steps:
-            batch, meta, pstate_next = exp.sampler.finish(
+            batch, plan, pstate_next = plane.finish(
                 handle, params=state["params"])
             batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
-            self.emit("step_start", i, batch, meta)
+            self.emit("step_start", i, batch, plan)
             launched_next = False
             for attempt in range(run.max_step_retries + 1):
                 t0 = time.time()
@@ -142,14 +167,14 @@ class TrainLoop:
                 if exp.step_is_flagged:
                     state, metrics = exp.step_fn(
                         state, batch,
-                        jax.numpy.asarray(meta["is_flag"], jax.numpy.float32))
+                        jax.numpy.asarray(plan["is_flag"], jax.numpy.float32))
                 else:
                     state, metrics = exp.step_fn(state, batch)
                 if not launched_next and i + 1 < steps:
                     # double-buffer: launch batch k+1's scoring against the
                     # PRE-update params while batch k's update runs (scores
                     # one step stale — selection tolerates that)
-                    handle = exp.sampler.begin(
+                    handle = plane.begin(
                         pstate_next, i + 1,
                         params=prev_state["params"] if overlap else None)
                     launched_next = True
@@ -175,13 +200,14 @@ class TrainLoop:
             if scores is not None:
                 # close the loop lazily: scores flow into the score memory
                 # behind the NEXT step's device work (drain_feedback)
-                self._pending = (i, meta, scores)
+                self._pending = (i, plan, scores)
             pstate = pstate_next
             self.pstate = pstate
             metrics.update(step=i, dt=dt, **exp.sampler.stats())
             self.steps_run += 1
             self.emit("step_end", i, metrics)
             i += 1
+        plane.stop()
         self.drain_feedback()
         self.emit("loop_end", state, history)
         return state, history

@@ -247,6 +247,20 @@ class SamplerConfig:
 
 
 @dataclass(frozen=True)
+class DataConfig:
+    """The pipelined data plane (``repro.data.pipeline.DataPlane``).
+
+    ``prefetch_depth`` bounds how many batches the plan → gather →
+    device-put pipeline keeps in flight (1 = the old single-slot
+    prefetch); pipelining only applies to schemes whose plans are pure
+    functions of the pipeline cursor (uniform / presample) — store- and
+    engine-coupled schemes keep the two-phase begin/finish overlap.
+    """
+    prefetch_depth: int = 2       # batches in flight (>=1)
+    device_put: bool = True       # stage 3: H2D transfer on the worker
+
+
+@dataclass(frozen=True)
 class OptimConfig:
     name: str = "sgd"              # sgd | adamw
     lr: float = 0.1
@@ -270,6 +284,7 @@ class RunConfig:
     optim: OptimConfig = field(default_factory=OptimConfig)
     imp: ISConfig = field(default_factory=ISConfig)
     sampler: SamplerConfig = field(default_factory=SamplerConfig)
+    data: DataConfig = field(default_factory=DataConfig)
     steps: int = 100
     microbatches: int = 1          # gradient accumulation
     remat: bool = True

@@ -1,30 +1,42 @@
 """Sharded, deterministic, resumable data pipeline.
 
-Two sources:
+Sources (all subclasses of ``DataSource``, which owns the index math):
 * ``SyntheticLM`` — seeded on-the-fly token streams (per-example PRNG keyed
   by (seed, epoch, index) so any host can materialise any slice without
   coordination). Used by the examples, benchmarks, and the dry-run-adjacent
   smoke training. Supports *structured* difficulty so importance sampling
   has signal: a fraction of examples are near-deterministic (easy) and a
   fraction are high-entropy (hard).
+* ``SyntheticCLS`` — sequence classification in the paper's single-output
+  setting.
 * ``MemmapLM`` — a pre-tokenised corpus in a .npy memmap; global seeded
-  shuffle per epoch, per-host contiguous slicing.
+  shuffle per epoch.
 
 The iterator state (epoch, cursor) is a tiny dict that goes into the
-checkpoint, giving bitwise-identical resume.
+checkpoint, giving bitwise-identical resume. Under the selection plane it
+doubles as the PLAN CURSOR: plans are pure functions of (epoch, cursor,
+step), so restoring it replays the identical plan sequence.
 
-Every source exposes two batch APIs:
-* ``batch(state, size)`` — the next sequential global batch (the
-  presample scheme feeds B = ratio × b of these to Algorithm 1, which
-  scores and resamples on device);
+Every source exposes two batch APIs (both defined once on ``DataSource``):
+* ``batch(state, size)`` — the next sequential global batch, materialised
+  through ``gather`` of this host's slice;
 * ``gather(indices, epoch)`` + ``global_indices``/``local_indices`` — an
   index-based API so ``repro.sampler`` schemes choose WHICH examples to
   materialise (ids are stable across epochs — for MemmapLM they are
   unpermuted corpus slots — so a persistent score memory can key on them).
+
+``DataPlane`` is the pipelined host-side data plane: plan → gather →
+device-put stages on worker threads with a credit-bounded depth, so batch
+assembly (and the host→device transfer) overlaps both the update step and
+any in-flight scoring. ``Prefetcher`` remains as a deprecated depth-1
+wrapper.
 """
 from __future__ import annotations
 
 import dataclasses
+import queue
+import threading
+import warnings
 
 import jax
 import numpy as np
@@ -52,7 +64,49 @@ class PipelineState:
         return PipelineState(self.epoch, cursor)
 
 
-class SyntheticLM:
+class DataSource:
+    """Index-addressable data source base.
+
+    Subclasses implement ``gather(indices, epoch)`` (materialise arbitrary
+    examples by STABLE global id) and may override ``global_indices`` (the
+    id order of sequential batches — e.g. MemmapLM's epoch shuffle). The
+    index math and the batch-via-gather path live here exactly once, so
+    every source automatically speaks the full selection-plane API.
+    """
+
+    def __init__(self, n_examples, host_id=None, n_hosts=None):
+        self.n = int(n_examples)
+        self.host_id = (jax.process_index() if host_id is None
+                        else int(host_id))
+        self.n_hosts = (jax.process_count() if n_hosts is None
+                        else int(n_hosts))
+
+    def gather(self, indices, epoch: int = 0) -> dict:
+        """Materialise arbitrary examples by global id (the sampler's and
+        the Assembler's index-based batch API)."""
+        raise NotImplementedError
+
+    def global_indices(self, state: PipelineState, batch_size: int):
+        """Global example ids of ALL rows of the next global batch (row r
+        of the assembled global batch holds example ``global_indices[r]``)."""
+        return (state.cursor + np.arange(batch_size, dtype=np.int64)) % self.n
+
+    def local_indices(self, state: PipelineState, batch_size: int):
+        """The slice of ``global_indices`` this host materialises."""
+        assert batch_size % self.n_hosts == 0
+        local = batch_size // self.n_hosts
+        gids = self.global_indices(state, batch_size)
+        return gids[self.host_id * local:(self.host_id + 1) * local]
+
+    def batch(self, state: PipelineState, batch_size: int):
+        """The next GLOBAL batch; this host materialises only its slice but
+        index bookkeeping is global so every host stays in lockstep."""
+        batch = self.gather(self.local_indices(state, batch_size),
+                            epoch=state.epoch)
+        return batch, state.advance(batch_size, self.n)
+
+
+class SyntheticLM(DataSource):
     """Deterministic synthetic LM data with heterogeneous difficulty.
 
     Each example i of epoch e is generated from PRNG(seed, e, i):
@@ -64,13 +118,11 @@ class SyntheticLM:
 
     def __init__(self, vocab_size, seq_len, n_examples=1 << 16, seed=0,
                  frac_easy=0.7, host_id=None, n_hosts=None):
+        super().__init__(n_examples, host_id=host_id, n_hosts=n_hosts)
         self.vocab = int(vocab_size)
         self.seq = int(seq_len)
-        self.n = int(n_examples)
         self.seed = seed
         self.frac_easy = frac_easy
-        self.host_id = host_id if host_id is not None else jax.process_index()
-        self.n_hosts = n_hosts if n_hosts is not None else jax.process_count()
 
     @property
     def _motifs(self):
@@ -93,21 +145,7 @@ class SyntheticLM:
             toks = rng.integers(0, self.vocab, size=(self.seq,))
         return toks.astype(np.int32)
 
-    def global_indices(self, state: PipelineState, batch_size: int):
-        """Global example ids of ALL rows of the next global batch (row r of
-        the assembled global batch holds example ``global_indices[r]``)."""
-        return (state.cursor + np.arange(batch_size, dtype=np.int64)) % self.n
-
-    def local_indices(self, state: PipelineState, batch_size: int):
-        """The slice of ``global_indices`` this host materialises."""
-        assert batch_size % self.n_hosts == 0
-        local = batch_size // self.n_hosts
-        gids = self.global_indices(state, batch_size)
-        return gids[self.host_id * local:(self.host_id + 1) * local]
-
     def gather(self, indices, epoch: int = 0):
-        """Materialise arbitrary examples by global id (the sampler's
-        index-based batch API)."""
         indices = np.asarray(indices, np.int64)
         toks = np.empty((len(indices), self.seq + 1), np.int32)
         for j, idx in enumerate(indices):
@@ -118,15 +156,8 @@ class SyntheticLM:
             toks[j] = np.concatenate([ex, ex[:1]])
         return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
 
-    def batch(self, state: PipelineState, batch_size: int):
-        """The next GLOBAL batch; this host materialises only its slice but
-        index bookkeeping is global so every host stays in lockstep."""
-        batch = self.gather(self.local_indices(state, batch_size),
-                            epoch=state.epoch)
-        return batch, state.advance(batch_size, self.n)
 
-
-class SyntheticCLS:
+class SyntheticCLS(DataSource):
     """Sequence-classification data in the paper's single-output setting:
     the loss sits on the LAST position only (labels elsewhere are -1), so
     the per-sample score is exactly the paper's ‖softmax(z) − 1_y‖₂.
@@ -138,13 +169,11 @@ class SyntheticCLS:
 
     def __init__(self, vocab_size, seq_len, n_classes=8, n_examples=1 << 14,
                  seed=0, host_id=None, n_hosts=None):
+        super().__init__(n_examples, host_id=host_id, n_hosts=n_hosts)
         self.vocab = int(vocab_size)
         self.seq = int(seq_len)
         self.n_classes = n_classes
-        self.n = int(n_examples)
         self.seed = seed
-        self.host_id = host_id if host_id is not None else jax.process_index()
-        self.n_hosts = n_hosts if n_hosts is not None else jax.process_count()
         r = np.random.default_rng(np.random.SeedSequence([seed, 555]))
         # class templates live in token range [n_classes, vocab)
         self.templates = r.integers(n_classes, self.vocab, size=(n_classes, seq_len))
@@ -159,9 +188,6 @@ class SyntheticCLS:
         labels[-1] = c                          # single-output CE (paper)
         return toks.astype(np.int32), labels.astype(np.int32)
 
-    global_indices = SyntheticLM.global_indices
-    local_indices = SyntheticLM.local_indices
-
     def gather(self, indices, epoch: int = 0):
         indices = np.asarray(indices, np.int64)
         toks = np.empty((len(indices), self.seq), np.int32)
@@ -173,22 +199,16 @@ class SyntheticCLS:
             toks[j], labels[j] = self._example(rng, idx)
         return {"tokens": toks, "labels": labels}
 
-    def batch(self, state: PipelineState, batch_size: int):
-        batch = self.gather(self.local_indices(state, batch_size),
-                            epoch=state.epoch)
-        return batch, state.advance(batch_size, self.n)
 
-
-class MemmapLM:
+class MemmapLM(DataSource):
     """Pre-tokenised corpus (one flat int32 .npy) with seeded epoch shuffle."""
 
     def __init__(self, path, seq_len, seed=0, host_id=None, n_hosts=None):
         self.data = np.load(path, mmap_mode="r")
         self.seq = int(seq_len)
-        self.n = (len(self.data) - 1) // self.seq
+        super().__init__((len(self.data) - 1) // self.seq,
+                         host_id=host_id, n_hosts=n_hosts)
         self.seed = seed
-        self.host_id = host_id if host_id is not None else jax.process_index()
-        self.n_hosts = n_hosts if n_hosts is not None else jax.process_count()
 
     def _perm(self, epoch):
         # size-1 memo: the sampler derives indices 2-3x per step and a full
@@ -208,12 +228,6 @@ class MemmapLM:
         pos = (state.cursor + np.arange(batch_size, dtype=np.int64)) % self.n
         return perm[pos].astype(np.int64)
 
-    def local_indices(self, state: PipelineState, batch_size: int):
-        assert batch_size % self.n_hosts == 0
-        local = batch_size // self.n_hosts
-        gids = self.global_indices(state, batch_size)
-        return gids[self.host_id * local:(self.host_id + 1) * local]
-
     def gather(self, indices, epoch: int = 0):
         indices = np.asarray(indices, np.int64)
         toks = np.empty((len(indices), self.seq + 1), np.int32)
@@ -222,50 +236,242 @@ class MemmapLM:
             toks[j] = self.data[o: o + self.seq + 1]
         return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
 
-    def batch(self, state: PipelineState, batch_size: int):
-        batch = self.gather(self.local_indices(state, batch_size))
-        return batch, state.advance(batch_size, self.n)
+
+# ---------------------------------------------------------------------------
+# the pipelined data plane
+# ---------------------------------------------------------------------------
+class DataPlane:
+    """Depth-N pipelined data plane over a plan-emitting sampler.
+
+    Three stages on worker threads — **plan** (``sampler.plan``: pure index
+    math / shared PRNG), **gather** (``sampler.assembler.assemble``: the
+    host-side materialisation, usually the expensive part), **device-put**
+    (optional H2D transfer) — connected by queues. A credit semaphore
+    bounds the pipeline to ``depth`` batches in flight, so planning runs at
+    most ``depth`` steps ahead of consumption and memory stays bounded.
+
+    Only samplers whose plans are pure functions of the pipeline cursor
+    (``sampler.plan_is_pure``) may be pipelined: pre-planning past a store
+    mutation or an engine scoring pass would fork replay determinism. For
+    the other schemes the plane degrades to a passthrough over the
+    sampler's own two-phase ``begin``/``finish`` (which already overlap
+    engine scoring with the update).
+
+    Checkpointing: the plane's durable state is just the PLAN CURSOR — the
+    ``PipelineState`` after the last consumed plan (``state_dict``), the
+    same ``{"epoch", "cursor"}`` dict every checkpoint manifest already
+    carries as ``meta["pipeline"]``. Plans are pure, so resuming re-plans
+    the identical sequence; nothing speculative in the pipeline needs
+    saving.
+
+    Failure semantics match the old ``Prefetcher``: a gather error is
+    surfaced on the consuming ``finish``/``next`` call, the same plan is
+    retried in the background, and the pipeline keeps its slot accounting
+    (one credit per successfully consumed batch).
+    """
+
+    def __init__(self, sampler, depth: int = 2, device_put=False,
+                 sync_launch=False):
+        self.sampler = sampler
+        self.depth = max(int(depth), 1)
+        self.pipelined = bool(getattr(sampler, "plan_is_pure", False))
+        if device_put is True:
+            device_put = jax.device_put
+        self._device_put = device_put or None
+        # sync_launch: ``next`` returns only once the FOLLOWING gather has
+        # entered the source — the old Prefetcher's launch-then-return
+        # contract, which its error-injection semantics (and tests) rely on
+        self._sync_launch = bool(sync_launch)
+        self._started = False
+        self._stop = threading.Event()
+        self._credits = threading.Semaphore(0)
+        self._gather_cv = threading.Condition()
+        self._gathers_started = 0
+        self._pops = 0
+        self._plan_q = queue.Queue()
+        self._dev_q = queue.Queue()
+        self._out_q = queue.Queue()
+        self._threads = []
+        self._cursor0 = None       # (PipelineState, step) given to start()
+        self._consumed = None      # (PipelineState, next step) after pops
+        self._fatal = None         # terminal plan-stage error (planning is
+                                   # pure, so it cannot be retried)
+
+    # -- the loop-facing two-phase handshake ----------------------------------
+    def begin(self, pstate, step: int, params=None):
+        if not self.pipelined:
+            return self.sampler.begin(pstate, step, params=params)
+        if not self._started:
+            self.start(pstate, step)
+        return {"step": step}
+
+    def finish(self, handle, params=None):
+        if not self.pipelined:
+            return self.sampler.finish(handle, params=params)
+        batch, plan, cursor = self.next()
+        self.sampler.notify_consumed(plan)
+        return batch, plan, cursor
+
+    # -- pipelined core -------------------------------------------------------
+    def start(self, pstate, step: int) -> None:
+        if self._started:
+            raise RuntimeError("DataPlane already started")
+        self._started = True
+        self._cursor0 = (pstate, int(step))
+        self._consumed = (pstate, int(step))
+        for _ in range(self.depth):
+            self._credits.release()
+        stages = [self._plan_worker, self._gather_worker]
+        if self._device_put is not None:
+            stages.append(self._device_worker)
+        for fn in stages:
+            t = threading.Thread(target=fn, daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def next(self):
+        """Pop the next (batch, plan, cursor') — blocking. Raises the
+        worker's error (the failed plan is retried in the background)."""
+        if not self._started:
+            raise RuntimeError("DataPlane not started (call start/begin)")
+        if self._fatal is not None:
+            # the plan worker is gone; blocking on the queue would hang
+            raise self._fatal
+        tag, *rest = self._out_q.get()
+        if tag == "fatal":
+            self._fatal = rest[0]
+            raise self._fatal
+        if tag == "err":
+            raise rest[0]
+        batch, plan, cursor = rest
+        self._consumed = (cursor, int(getattr(plan, "step", -1)) + 1)
+        self._pops += 1
+        self._credits.release()      # one more plan may enter the pipeline
+        if self._sync_launch:
+            # block until the gather AFTER the ones we've consumed has
+            # actually begun, so a caller mutating the source next affects
+            # batch k+2, never the in-flight k+1 (Prefetcher semantics)
+            with self._gather_cv:
+                self._gather_cv.wait_for(
+                    lambda: (self._gathers_started > self._pops
+                             or self._stop.is_set()), timeout=5.0)
+        return batch, plan, cursor
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._credits.release()      # unblock a waiting plan worker
+        for t in self._threads:
+            t.join(timeout=2.0)
+        self._threads = []
+
+    def state_dict(self) -> dict:
+        """The plan cursor: pipeline state after the last consumed plan
+        (identical to what the loop checkpoints as ``meta['pipeline']``)."""
+        at = self._consumed or self._cursor0
+        if at is None:
+            # never started: passthrough planes (impure schemes) and
+            # pre-begin pipelined planes don't own a cursor — the loop's
+            # pstate is the durable state there
+            raise RuntimeError("DataPlane holds no plan cursor before "
+                               "start(); checkpoint the loop's pipeline "
+                               "state instead")
+        cursor, step = at
+        return {"pipeline": cursor.as_dict(), "step": int(step)}
+
+    # -- workers --------------------------------------------------------------
+    def _put(self, q, item) -> bool:
+        q.put(item)
+        return True
+
+    def _get(self, q):
+        try:
+            return q.get(timeout=0.1)
+        except queue.Empty:
+            return None
+
+    def _plan_worker(self) -> None:
+        cursor, step = self._cursor0
+        while not self._stop.is_set():
+            if not self._credits.acquire(timeout=0.1):
+                continue
+            try:
+                plan, nxt = self.sampler.plan(cursor, step)
+            except BaseException as e:   # planning is pure: a bug, not flaky
+                self._out_q.put(("fatal", e))
+                return
+            self._plan_q.put((plan, nxt))
+            cursor, step = nxt, step + 1
+
+    def _gather_worker(self) -> None:
+        sink = self._dev_q if self._device_put is not None else self._out_q
+        while not self._stop.is_set():
+            item = self._get(self._plan_q)
+            if item is None:
+                continue
+            plan, cursor = item
+            while not self._stop.is_set():
+                # signalled one bytecode before assemble() is entered — a
+                # strictly smaller window than the old Prefetcher's
+                # thread-startup race, but still not a hard barrier
+                with self._gather_cv:
+                    self._gathers_started += 1
+                    self._gather_cv.notify_all()
+                try:
+                    batch = self.sampler.assembler.assemble(plan)
+                except BaseException as e:
+                    # surface on the consuming call, then retry this plan
+                    sink.put(("err", e))
+                    continue
+                sink.put(("ok", batch, plan, cursor))
+                break
+
+    def _device_worker(self) -> None:
+        while not self._stop.is_set():
+            item = self._get(self._dev_q)
+            if item is None:
+                continue
+            if item[0] == "ok":
+                try:
+                    item = ("ok", self._device_put(item[1])) + item[2:]
+                except BaseException as e:
+                    item = ("err", e)
+            self._out_q.put(item)
 
 
 class Prefetcher:
-    """One-deep async prefetch off the training critical path.
-
-    ``next()`` hands out the batch produced in the background and
-    immediately kicks off production of the following one; the worker is
-    only joined lazily on the NEXT call, so host-side batch assembly
-    genuinely overlaps the device step in between.
+    """DEPRECATED one-deep async prefetch — now a thin wrapper over a
+    depth-1 ``DataPlane`` whose "plans" are raw pipeline states and whose
+    gather stage is the source's sequential ``batch``. Kept so pre-plan
+    call sites keep working; new code should consume ``DataPlane`` (or
+    just the ``repro.api`` loop, which owns one).
     """
 
     def __init__(self, source, state: PipelineState, batch_size: int):
-        import threading
-        self._threading = threading
-        self.source = source
-        self.batch_size = batch_size
-        self._thread = None
-        self._box = {}
-        self._next = source.batch(state, batch_size)
+        warnings.warn(
+            "repro.data.pipeline.Prefetcher is deprecated; use DataPlane "
+            "(depth-N pipelined plan→gather→device-put) instead",
+            DeprecationWarning, stacklevel=2)
 
-    def _launch(self, state: PipelineState) -> None:
-        def work():
-            try:
-                self._box["v"] = self.source.batch(state, self.batch_size)
-            except BaseException as e:   # surfaced on the next next() call
-                self._box["e"] = e
+        class _Sequential:
+            """Adapter: sequential batches as a pure 'planner'."""
+            plan_is_pure = True
 
-        self._thread = self._threading.Thread(target=work, daemon=True)
-        self._thread.start()
+            def __init__(s):
+                s.assembler = s
+
+            def plan(s, pstate, step):
+                return pstate, pstate.advance(batch_size, source.n)
+
+            def assemble(s, pstate):
+                return source.batch(pstate, batch_size)[0]
+
+            def notify_consumed(s, plan):
+                pass
+
+        self._plane = DataPlane(_Sequential(), depth=1, device_put=False,
+                                sync_launch=True)
+        self._plane.start(state, 0)
 
     def next(self):
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
-            err = self._box.pop("e", None)
-            if err is not None:
-                # retry in the background from the same state, then surface
-                # the worker's real error (instead of wedging on KeyError)
-                self._launch(self._next[1])
-                raise err
-            self._next = self._box.pop("v")
-        batch, state = self._next
-        self._launch(state)
+        batch, _plan, state = self._plane.next()
         return batch, state

@@ -82,6 +82,57 @@ def constrain_bsd(x, head_dim_index=None):
 
 
 # ---------------------------------------------------------------------------
+# strided-shard math (ScoreStore's `id % H` ownership), pad + trim
+# ---------------------------------------------------------------------------
+def _require_multiprocess(name, n_hosts):
+    """Multi-host collectives need one JAX process per host; a simulated
+    multi-host run (tests) must inject an in-process merge instead of
+    silently gathering only its own shard."""
+    if jax.process_count() == 1:
+        raise RuntimeError(
+            f"{name}: sharded over {n_hosts} hosts but this launch has one "
+            f"process — simulated multi-host runs must inject the collective "
+            f"(see tests/test_plan.py)")
+
+
+
+def strided_shard_size(n_global: int, host_id: int, n_hosts: int) -> int:
+    """Slots host ``host_id`` owns under strided ownership
+    ``{i : i % H == h}`` — ``ceil((n - h) / H)``, correct for ANY
+    ``n % H`` (shards are uneven when ``H`` does not divide ``n``)."""
+    return (int(n_global) - int(host_id) + int(n_hosts) - 1) // int(n_hosts)
+
+
+def pad_shard(local, n_global: int, n_hosts: int, fill=-1.0):
+    """Pad a host-local strided shard to the COMMON shard length
+    ``ceil(n/H)`` so a fixed-shape all-gather can carry it; the pad value
+    is the unseen sentinel and is trimmed again on reassembly."""
+    local = np.asarray(local)
+    per = (int(n_global) + n_hosts - 1) // n_hosts
+    if local.shape[0] > per:
+        raise ValueError(f"shard of {local.shape[0]} > max shard {per} "
+                         f"(n={n_global}, H={n_hosts})")
+    padded = np.full((per,) + local.shape[1:], fill, local.dtype)
+    padded[:local.shape[0]] = local
+    return padded
+
+
+def interleave_shards(shards, n_global: int):
+    """Inverse of strided sharding: ``out[h::H] = shards[h]`` with the
+    per-host padding trimmed (``shards`` is the stacked (H, ceil(n/H), ...)
+    all-gather result). Pure numpy — the single definition of the
+    reassembly math, shared by the multi-process gather below, the
+    simulated-host test harness, and the ScoreStore's global reads."""
+    shards = np.asarray(shards)
+    n_hosts = shards.shape[0]
+    out = np.empty((int(n_global),) + shards.shape[2:], shards.dtype)
+    for h in range(n_hosts):
+        size = strided_shard_size(n_global, h, n_hosts)
+        out[h::n_hosts] = shards[h][:size]
+    return out
+
+
+# ---------------------------------------------------------------------------
 # multi-host score gather (the repro.scoring engine's host-side hook)
 # ---------------------------------------------------------------------------
 def gather_host_scores(local_scores, *, host_id=None, n_hosts=None,
@@ -93,6 +144,9 @@ def gather_host_scores(local_scores, *, host_id=None, n_hosts=None,
     shards: ``out[h::H] = shard_h``. Single-process (tests, CPU examples)
     this is the identity; with multiple processes it all-gathers the
     host-local shards via ``multihost_utils`` before interleaving.
+    Uneven shards (``n_global % n_hosts != 0``) are padded with the ``-1``
+    sentinel to the common length and trimmed on reassembly
+    (``pad_shard`` / ``interleave_shards``).
     """
     local = np.asarray(local_scores, np.float32).reshape(-1)
     n_hosts = jax.process_count() if n_hosts is None else int(n_hosts)
@@ -105,16 +159,70 @@ def gather_host_scores(local_scores, *, host_id=None, n_hosts=None,
         raise ValueError("n_global is required for a multi-process gather "
                          "(host-local shards may be uneven)")
     host_id = jax.process_index() if host_id is None else int(host_id)
+    _require_multiprocess("gather_host_scores", n_hosts)
+    expect = strided_shard_size(n_global, host_id, n_hosts)
+    if local.size != expect:
+        raise ValueError(f"host {host_id}/{n_hosts} shard has {local.size} "
+                         f"slots, expected {expect} for n={n_global}")
     from jax.experimental import multihost_utils
-    # pad to a common shard length so process_allgather gets a fixed shape
-    per = (n_global + n_hosts - 1) // n_hosts
-    padded = np.full((per,), -1.0, np.float32)
-    padded[:local.size] = local
-    shards = np.asarray(multihost_utils.process_allgather(padded))
-    out = np.full((n_global,), -1.0, np.float32)
-    for h in range(n_hosts):
-        ids = np.arange(h, n_global, n_hosts)
-        out[ids] = shards[h][:ids.size]
+    shards = np.asarray(multihost_utils.process_allgather(
+        pad_shard(local, n_global, n_hosts)))
+    return interleave_shards(shards, n_global)
+
+
+# ---------------------------------------------------------------------------
+# row-plane collectives (BatchPlan assembly across hosts)
+# ---------------------------------------------------------------------------
+def allgather_rows(local_rows, *, n_rows: int, n_hosts=None):
+    """Concatenate per-host CONTIGUOUS row blocks into the full global
+    batch: host ``h`` of ``H`` contributes rows ``[h·R/H, (h+1)·R/H)``
+    (a ``BatchPlan.row_slice``), the result has all ``R`` rows on every
+    host. ``local_rows`` is an array or a dict of arrays sharing a leading
+    row axis. Identity when single-process.
+    """
+    n_hosts = jax.process_count() if n_hosts is None else int(n_hosts)
+    single = not isinstance(local_rows, dict)
+    tree = {"x": local_rows} if single else local_rows
+    if n_hosts == 1:
+        out = {k: np.asarray(v)[:n_rows] for k, v in tree.items()}
+        return out["x"] if single else out
+    if int(n_rows) % n_hosts:
+        raise ValueError(f"{n_rows} rows not divisible by {n_hosts} hosts")
+    _require_multiprocess("allgather_rows", n_hosts)
+    from jax.experimental import multihost_utils
+    out = {}
+    for k, v in tree.items():
+        v = np.asarray(v)
+        shards = np.asarray(multihost_utils.process_allgather(v))
+        out[k] = shards.reshape((-1,) + v.shape[1:])[:n_rows]
+    return out["x"] if single else out
+
+
+def exchange_rows(contrib, row_mask, *, lo: int, hi: int, n_hosts=None):
+    """Merge per-host row CONTRIBUTIONS and return rows ``[lo, hi)``.
+
+    Partitioned data sources can only materialise the example ids they
+    hold, so each host fills the rows of the global batch it CAN produce
+    (``row_mask`` True there, zeros elsewhere) and this exchange routes
+    every row to the host whose data-parallel shard needs it. Implemented
+    as a masked all-gather + sum (every row is produced by exactly one
+    host); single-process it just slices the (complete) contribution.
+    """
+    n_hosts = jax.process_count() if n_hosts is None else int(n_hosts)
+    row_mask = np.asarray(row_mask, bool)
+    if n_hosts == 1:
+        if not row_mask.all():
+            raise ValueError("single-process exchange with missing rows "
+                             f"({int((~row_mask).sum())} unfilled)")
+        return {k: np.asarray(v)[lo:hi] for k, v in contrib.items()}
+    _require_multiprocess("exchange_rows", n_hosts)
+    from jax.experimental import multihost_utils
+    out = {}
+    for k, v in contrib.items():
+        v = np.where(row_mask.reshape((-1,) + (1,) * (np.asarray(v).ndim - 1)),
+                     np.asarray(v), 0)
+        shards = np.asarray(multihost_utils.process_allgather(v))
+        out[k] = shards.sum(axis=0)[lo:hi].astype(np.asarray(v).dtype)
     return out
 
 

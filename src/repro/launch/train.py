@@ -10,15 +10,21 @@ reserved ``--arch/--preset/--smoke/--mesh/--source`` plus dotted
 
     --steps 2000 --optim.lr=3e-4 --imp.presample_ratio=5 \
     --sampler.scheme=history --imp.overlap_scoring=false \
+    --data.prefetch_depth=3 --data.device_put=true \
     --ckpt_dir gs://.../run1 --ckpt_every=100
 
 Unknown keys are hard errors — there is no launcher-local argparse copy
 to drift out of sync.
 
 On a multi-host pod each host runs this same command; jax.distributed is
-initialised from the cluster environment (TPU metadata / SLURM). Mesh,
-shardings, IS train step, checkpointing and straggler handling all come
-from the library — this file only wires CLI → Experiment → fit.
+initialised from the cluster environment (TPU metadata / SLURM). Every
+host derives the identical ``BatchPlan`` per step (the selection plane —
+shared PRNG over the global index space, global score reads through the
+strided all-gather) and materialises only its data-parallel row slice;
+the depth-N ``DataPlane`` (``--data.prefetch_depth``) pipelines plan →
+gather → device-put behind the update step. Mesh, shardings, IS train
+step, checkpointing and straggler handling all come from the library —
+this file only wires CLI → Experiment → fit.
 """
 from __future__ import annotations
 

@@ -5,10 +5,13 @@ epochs; ``Sampler`` schemes (uniform / presample / history / selective)
 decide which examples each training step materialises. See
 ``repro.sampler.schemes`` for the scheme contract.
 """
-from repro.sampler.schemes import (SCHEMES, HistorySampler, PresampleSampler,
+from repro.sampler.assembly import Assembler
+from repro.sampler.schemes import (SCHEMES, HistorySampler,
+                                   HostPresampleSampler, PresampleSampler,
                                    Sampler, SelectiveSampler, UniformSampler,
                                    make_sampler)
 from repro.sampler.store import ScoreStore
 
 __all__ = ["ScoreStore", "Sampler", "UniformSampler", "PresampleSampler",
-           "HistorySampler", "SelectiveSampler", "SCHEMES", "make_sampler"]
+           "HostPresampleSampler", "HistorySampler", "SelectiveSampler",
+           "SCHEMES", "make_sampler", "Assembler"]

@@ -1,0 +1,108 @@
+"""Plan → data: assemble this host's shard of a global ``BatchPlan``.
+
+The selection plane separates WHAT a step trains on (a ``BatchPlan``,
+computed identically on every host) from materialising the rows. The
+``Assembler`` owns the second half: host ``h`` of ``H`` materialises rows
+``[h·R/H, (h+1)·R/H)`` of the plan — its data-parallel shard — and
+attaches the plan's unbiasedness weights, so the device step on every
+host sees exactly its slice of one agreed-upon global batch.
+
+Three materialisation paths, picked per plan:
+
+* **index gather** (default) — the repo's sources are globally
+  index-addressable (synthetic PRNG streams, memmapped corpora), so the
+  host just ``source.gather``\\ s the ids of its row slice. No network.
+* **parent reuse** — plans whose rows were selected OUT OF a parent plan
+  (``plan.src_rows``, the presample schemes' b-of-B pick) copy the
+  already-materialised candidate rows instead of re-gathering;
+  multi-process, candidate blocks are all-gathered first
+  (``collectives.allgather_rows``) because a selected row may live in
+  another host's candidate slice.
+* **partitioned exchange** — sources that can only materialise ids they
+  hold (``source.partitioned`` truthy, e.g. a corpus shard per host)
+  fill the rows they CAN produce and ``collectives.exchange_rows``
+  routes each row to the host whose shard needs it.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.plan import BatchPlan
+from repro.distributed.collectives import allgather_rows, exchange_rows
+
+
+class Assembler:
+    """Maps ``BatchPlan``s to this host's gather/exchange calls."""
+
+    def __init__(self, source, host_id=None, n_hosts=None, partitioned=None):
+        self.source = source
+        self.host_id = int(getattr(source, "host_id", 0)
+                           if host_id is None else host_id)
+        self.n_hosts = int(getattr(source, "n_hosts", 1)
+                           if n_hosts is None else n_hosts)
+        self.partitioned = bool(getattr(source, "partitioned", False)
+                                if partitioned is None else partitioned)
+        # injectable collectives (simulated multi-host tests swap these for
+        # in-process merges; production keeps the multihost_utils paths)
+        self.allgather_rows = allgather_rows
+        self.exchange_rows = exchange_rows
+
+    def row_slice(self, plan: BatchPlan):
+        return plan.row_slice(self.host_id, self.n_hosts)
+
+    def local_gids(self, plan: BatchPlan) -> np.ndarray:
+        lo, hi = self.row_slice(plan)
+        return plan.gids[lo:hi]
+
+    def assemble(self, plan: BatchPlan, parent=None) -> dict:
+        """Materialise this host's rows of ``plan``.
+
+        ``parent`` is an optional ``(parent_plan, parent_local_batch)``
+        pair for plans carrying ``src_rows``; without it (or for plans
+        with no parent) rows come from the source by global id.
+        Returns a plain dict of numpy arrays (+ ``weights`` when the plan
+        carries them) — the device transfer belongs to the data plane's
+        device-put stage, not here.
+        """
+        lo, hi = self.row_slice(plan)
+        if plan.src_rows is not None and parent is not None:
+            batch = self._from_parent(plan, parent, lo, hi)
+        elif self.partitioned:
+            batch = self._exchange(plan, lo, hi)
+        else:
+            batch = dict(self.source.gather(plan.gids[lo:hi],
+                                            epoch=plan.epoch))
+        if plan.weights is not None:
+            batch["weights"] = np.asarray(plan.weights[lo:hi], np.float32)
+        return batch
+
+    def _from_parent(self, plan, parent, lo, hi):
+        parent_plan, parent_local = parent
+        rows = {k: v for k, v in parent_local.items() if k != "weights"}
+        if self.n_hosts > 1:
+            # a selected row may sit in another host's candidate block
+            rows = self.allgather_rows(rows, n_rows=parent_plan.n_rows,
+                                       n_hosts=self.n_hosts)
+        take = plan.src_rows[lo:hi]
+        return {k: np.asarray(v)[take] for k, v in rows.items()}
+
+    def contribution(self, plan: BatchPlan):
+        """The rows of the global batch THIS partitioned host can produce:
+        a zero-filled (n_rows, ...) buffer per key with the owned rows
+        (``gid % H == host``) materialised, plus the row mask. Every row
+        is produced by exactly one host, so a masked merge across hosts
+        reassembles the full batch (``collectives.exchange_rows``)."""
+        owned = (plan.gids % self.n_hosts) == self.host_id
+        have = self.source.gather(plan.gids[owned], epoch=plan.epoch)
+        contrib, j = {}, np.flatnonzero(owned)
+        for k, v in have.items():
+            v = np.asarray(v)
+            buf = np.zeros((plan.n_rows,) + v.shape[1:], v.dtype)
+            buf[j] = v
+            contrib[k] = buf
+        return contrib, owned
+
+    def _exchange(self, plan, lo, hi):
+        contrib, owned = self.contribution(plan)
+        return self.exchange_rows(contrib, owned, lo=lo, hi=hi,
+                                  n_hosts=self.n_hosts)

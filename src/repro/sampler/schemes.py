@@ -1,47 +1,57 @@
 """Pluggable example-selection schemes behind one ``Sampler`` API.
 
+Every scheme is a PLANNER on the selection plane: it emits a device-free
+``BatchPlan`` (``repro.data.plan``) — the global example ids of every row
+of the step's global batch, plus proposal probs / unbiasedness weights —
+computed identically on all hosts from a shared PRNG keyed on
+``(seed, scheme salt, step)`` over the GLOBAL index space. Store-backed
+schemes read the global score vector through the strided all-gather
+(``ScoreStore.global_scores``), so multi-host runs select from the
+paper's global ∝ ĝ distribution instead of a biased per-host mixture.
+The ``Assembler`` (``repro.sampler.assembly``) then materialises each
+host's contiguous row slice of the plan — its data-parallel shard.
+
 The trainer's loop is scheme-agnostic and split in two phases so scoring
 can overlap the update step:
 
     handle = sampler.begin(pstate, step, params)              # may launch
-    batch, meta, pstate' = sampler.finish(handle, params)     # host side
-    state, metrics = step_fn(state, batch[, meta.is_flag])    # device side
-    sampler.observe(meta, metrics["sample_scores"])           # feedback
+    batch, plan, pstate' = sampler.finish(handle, params)     # host side
+    state, metrics = step_fn(state, batch[, plan.is_flag])    # device side
+    sampler.observe(plan, metrics["sample_scores"])           # feedback
 
 ``begin``/``finish`` degrade to a synchronous ``next_batch`` for schemes
-that don't score out-of-band.
+that don't score out-of-band; schemes whose plans are pure functions of
+the pipeline cursor (``plan_is_pure``) additionally let the depth-N
+``DataPlane`` pre-plan and pre-gather batches on worker threads.
 
 Schemes:
 
 * ``uniform`` — sequential batches of b, plain SGD. Still feeds scores
   into the store (free), so switching schemes mid-run starts warm.
-* ``presample`` — the paper's Algorithm 1: batches of B = ratio·b, the
-  device scores candidates and resamples; the τ controller lives on
-  device (``repro.core.is_train.build_train_step``).
+* ``presample`` — the paper's Algorithm 1: plans of B = ratio·b
+  sequential candidates, the device scores and resamples; the τ
+  controller lives on device (``repro.core.is_train.build_step``).
 * ``presample`` + ``host_score`` — the same Algorithm 1 but the scoring
-  pass runs on the decoupled ``repro.scoring.ScoreEngine`` path (forward
-  only, ``score_dtype``, no remat) and selection happens on host; the
-  trainer can launch step k+1's scoring while step k's update runs, and
-  the ``ScoreStore`` is refreshed out-of-band with ALL B candidate scores
-  every step (``HostPresampleSampler``).
+  pass runs on the decoupled ``repro.scoring.ScoreEngine`` path and
+  selection happens on host: each host scores its candidate row slice,
+  the row shards are all-gathered, and the (shared-PRNG) selection plan
+  reuses the already-materialised candidate rows via ``plan.src_rows``.
+  The ``ScoreStore`` is refreshed out-of-band with ALL B candidate
+  scores every step (``HostPresampleSampler``).
 * ``history`` — dataset-level importance sampling from the persistent
-  score memory: draw b ids ∝ smoothed/temperature-sharpened stored
-  scores, attach unbiased weights 1/(n·pᵢ), zero scoring overhead. The
-  τ-of-the-store gate switches it on only once the memory is warm
-  (coverage) and concentrated enough to pay (τ > τ_th), mirroring the
-  presample scheme's τ gate.
+  score memory: draw b GLOBAL ids ∝ the smoothed/sharpened GLOBAL store
+  distribution, attach unbiased weights 1/(n·pᵢ), zero scoring overhead.
+  The τ-of-the-store gate switches it on only once the memory is warm
+  (coverage) and concentrated enough to pay (τ > τ_th).
 * ``selective`` — Biggest-Losers-style selective backprop: rank a
-  sequential candidate window by stored score, train on the top-k
-  (unseen ids rank highest, so everything is visited). Deliberately
-  biased — no weights.
+  sequential candidate window by the GLOBAL stored scores, train on the
+  global top-b (unseen ids rank highest, so everything is visited).
+  Deliberately biased — no weights.
 
-``meta["gids"]`` are GLOBAL example ids aligned with ``meta["rows"]`` (the
-slice of the step's global score vector they correspond to); the store
-drops ids this host doesn't own. NOTE: the observe() contract assumes the
-step's ``sample_scores`` metric is the GLOBAL (replicated) score vector —
-true single-host; a true multi-process launch additionally routes scores
-through the engine's host-side gather hook
-(``ScoreEngine.gather_scores``) before the store update.
+Multi-host note: under a true multi-process launch the collectives ride
+``jax.experimental.multihost_utils``; a SIMULATED multi-host run (tests)
+injects ``sampler.gather_fn`` (strided score gather) and
+``sampler.row_gather_fn`` (contiguous row-shard gather) instead.
 """
 from __future__ import annotations
 
@@ -49,16 +59,20 @@ import jax
 import numpy as np
 
 from repro.data.pipeline import PipelineState
+from repro.data.plan import BatchPlan
+from repro.sampler.assembly import Assembler
 from repro.sampler.store import ScoreStore
 
 
 class Sampler:
-    """Base: sequential fetching + score-memory bookkeeping."""
+    """Base: sequential planning + score-memory bookkeeping."""
 
     scheme = "base"
     uses_score_step = True   # False → the paper's on-device presample step
+    plan_is_pure = True      # plan() reads only (pstate, step) → the
+                             # DataPlane may pre-plan ahead of consumption
 
-    def __init__(self, run_cfg, source):
+    def __init__(self, run_cfg, source, assembler=None):
         self.cfg = run_cfg.sampler
         self.icfg = run_cfg.imp
         self.b = run_cfg.shape.global_batch
@@ -69,30 +83,52 @@ class Sampler:
         self.store = ScoreStore(source.n, host_id=self.host_id,
                                 n_hosts=self.n_hosts, ema=self.cfg.ema,
                                 staleness=self.cfg.staleness)
+        self.assembler = assembler or Assembler(source)
         self._epoch = np.zeros((), np.int64)
         self.engine = None       # repro.scoring.ScoreEngine (bind_engine)
+        # simulated multi-host runs inject these; None → the production
+        # multihost_utils collectives (identity when n_hosts == 1)
+        self.gather_fn = None       # strided store-shard gather
+        self.row_gather_fn = None   # contiguous row-shard gather
 
-    # global rows the device step sees per call
+    # global rows the device step sees per plan
     @property
     def fetch_size(self) -> int:
         return self.b
 
-    def _tick_epoch(self, pstate: PipelineState) -> None:
-        if int(self._epoch) != pstate.epoch:
-            self.store.decay()
-            self._epoch = np.asarray(pstate.epoch, np.int64)
+    def _tick_epoch(self, epoch: int) -> None:
+        if int(self._epoch) != int(epoch):
+            # decay toward the GLOBAL seen mean: per-shard means would make
+            # the per-host score views drift apart at every epoch boundary
+            self.store.decay(self._global_seen_mean())
+            self._epoch = np.asarray(epoch, np.int64)
 
-    def _sequential(self, pstate: PipelineState, size: int):
-        """Next sequential batch + the global ids of ALL its global rows."""
-        gids = self.source.global_indices(pstate, size)
-        batch, nxt = self.source.batch(pstate, size)
-        return batch, gids, nxt
+    def _global_seen_mean(self):
+        if self.n_hosts == 1:
+            return None                   # local mean IS the global mean
+        sg = self.store.global_scores(self.gather_fn)
+        m = sg >= 0
+        return float(sg[m].mean()) if m.any() else None
+
+    def notify_consumed(self, plan: BatchPlan) -> None:
+        """Epoch bookkeeping at CONSUMPTION time — the DataPlane calls
+        this as plans leave the pipeline, so staleness decay fires when
+        training crosses an epoch, not when a worker thread pre-plans
+        past one."""
+        self._tick_epoch(plan.epoch)
+
+    # -- planning (the selection plane) ---------------------------------------
+    def plan(self, pstate: PipelineState, step: int):
+        """Emit (plan, pstate') for ``step``. MUST be identical on every
+        host: pure index math + shared PRNG + globally-gathered reads."""
+        gids = self.source.global_indices(pstate, self.fetch_size)
+        plan = BatchPlan(step=step, epoch=pstate.epoch, gids=gids)
+        return plan, pstate.advance(self.fetch_size, self.source.n)
 
     def next_batch(self, pstate: PipelineState, step: int):
-        self._tick_epoch(pstate)
-        batch, gids, nxt = self._sequential(pstate, self.fetch_size)
-        meta = {"gids": gids, "rows": (0, self.fetch_size), "is_flag": 0.0}
-        return batch, meta, nxt
+        self._tick_epoch(pstate.epoch)
+        plan, nxt = self.plan(pstate, step)
+        return self.assembler.assemble(plan), plan, nxt
 
     # -- two-phase API (overlapped scoring) -----------------------------------
     def begin(self, pstate: PipelineState, step: int, params=None):
@@ -103,7 +139,7 @@ class Sampler:
         return {"pstate": pstate, "step": step}
 
     def finish(self, handle, params=None):
-        """Phase 2: materialise (batch, meta, pstate'). ``params`` is used
+        """Phase 2: materialise (batch, plan, pstate'). ``params`` is used
         only if ``begin`` didn't already score (the synchronous path)."""
         return self.next_batch(handle["pstate"], handle["step"])
 
@@ -113,19 +149,39 @@ class Sampler:
         out-of-band store refresh route through it)."""
         self.engine = engine
 
-    def refresh_scores(self, params, gids, epoch: int = 0) -> int:
-        """Out-of-band ``ScoreStore`` refresh: score arbitrary example ids
-        through the engine's forward-only path and merge — no train step
-        involved. Returns how many store slots were written."""
+    def _gather_rows(self, local_scores, n_rows: int) -> np.ndarray:
+        """Row-sharded score vector -> global (identity single-host)."""
+        local = np.asarray(local_scores, np.float32).reshape(-1)
+        if self.n_hosts == 1:
+            return local[:n_rows]
+        from repro.distributed.collectives import allgather_rows
+        gather = self.row_gather_fn or allgather_rows
+        return np.asarray(gather(local, n_rows=n_rows,
+                                 n_hosts=self.n_hosts), np.float32)
+
+    def refresh_plan(self, params, plan: BatchPlan) -> int:
+        """Out-of-band ``ScoreStore`` refresh keyed by a plan: each host
+        scores ITS row slice through the engine's forward-only path, the
+        row shards are gathered, and every host merges the full vector
+        (the store drops unowned ids). Returns slots written locally."""
         if self.engine is None:
             raise RuntimeError("no ScoreEngine bound (call bind_engine)")
-        batch = self.source.gather(np.asarray(gids, np.int64), epoch=epoch)
-        _, scores = self.engine.score_host(params, batch)
-        return self.store.update(gids, scores)
+        fut = self.engine.score_plan(params, plan, self.assembler)
+        local = np.asarray(jax.device_get(fut[1]), np.float32)
+        scores = self._gather_rows(local, plan.n_rows)
+        return self.store.update(plan.gids, scores)
 
-    def observe(self, meta, scores) -> None:
-        lo, hi = meta["rows"]
-        self.store.update(meta["gids"], np.asarray(scores)[lo:hi])
+    def refresh_scores(self, params, gids, epoch: int = 0) -> int:
+        """Back-compat wrapper: score arbitrary example ids (one plan)."""
+        gids = np.asarray(gids, np.int64)
+        return self.refresh_plan(params, BatchPlan(step=-1, epoch=epoch,
+                                                   gids=gids))
+
+    def observe(self, plan, scores) -> None:
+        """Close the feedback loop: the step's (global) score vector for
+        the plan's rows merges into the store (unowned ids dropped)."""
+        lo, hi = plan["rows"]
+        self.store.update(plan["gids"], np.asarray(scores)[lo:hi])
 
     def stats(self) -> dict:
         return {"store_coverage": self.store.coverage()}
@@ -144,7 +200,7 @@ class UniformSampler(Sampler):
 
 
 class PresampleSampler(Sampler):
-    """Algorithm 1's data side: deliver B = ratio·b candidates; scoring,
+    """Algorithm 1's data side: plans of B = ratio·b candidates; scoring,
     τ gating, and resampling happen inside the jitted train step."""
 
     scheme = "presample"
@@ -158,24 +214,28 @@ class PresampleSampler(Sampler):
 class HostPresampleSampler(Sampler):
     """Algorithm 1 with the scoring pass on the decoupled engine path.
 
-    Per step: fetch B = ratio·b sequential candidates, score them with the
-    ``ScoreEngine`` (forward-only, ``score_dtype``, no remat — launched in
-    ``begin`` so it can overlap the previous update), τ-gate on a host-side
-    EMA mirroring the on-device controller, and either resample b ∝ Ĝ with
-    weights 1/(B·gᵢ) (IS phase) or take the first b with unit weights
-    (uniform phase). ALL B candidate scores refresh the ``ScoreStore``
+    Per step: plan B = ratio·b sequential candidates, assemble THIS
+    host's candidate row slice, score it with the ``ScoreEngine``
+    (forward-only, ``score_dtype``, no remat — launched in ``begin`` so
+    it can overlap the previous update), all-gather the row-sharded
+    scores, τ-gate on a host-side EMA mirroring the on-device controller,
+    and either resample b ∝ Ĝ with weights 1/(B·gᵢ) (IS phase) or take
+    the first b with unit weights (uniform phase). The selection plan
+    records ``src_rows`` so the assembler reuses the already-materialised
+    candidate rows. ALL B candidate scores refresh the ``ScoreStore``
     out-of-band, so the memory warms ratio× faster than training alone.
 
     Candidate scoring is always a uniform (sequential) draw, so — unlike
-    the host-chosen score-memory schemes — every step refreshes τ. NOTE:
-    single-host semantics (like history/selective): a true multi-process
-    launch routes scores through ``ScoreEngine.gather_scores`` first.
+    the host-chosen score-memory schemes — every step refreshes τ. The
+    gathered score vector and the shared selection PRNG make the
+    selection plan bitwise identical on every host.
     """
 
     scheme = "presample_host"
+    plan_is_pure = False     # the selection plan needs engine scores
 
-    def __init__(self, run_cfg, source):
-        super().__init__(run_cfg, source)
+    def __init__(self, run_cfg, source, assembler=None):
+        super().__init__(run_cfg, source, assembler)
         self.B = self.b * self.icfg.presample_ratio
         self.tau_th = self.icfg.resolved_tau_th(self.b)
         self.tau_ema = np.zeros((), np.float64)
@@ -185,11 +245,18 @@ class HostPresampleSampler(Sampler):
     def active(self) -> bool:
         return bool(self.tau_ema > self.tau_th)
 
+    def candidate_plan(self, pstate: PipelineState, step: int):
+        """The (pure) B-candidate plan selection is carved out of."""
+        gids = self.source.global_indices(pstate, self.B)
+        plan = BatchPlan(step=step, epoch=pstate.epoch, gids=gids)
+        return plan, pstate.advance(self.B, self.source.n)
+
     def begin(self, pstate: PipelineState, step: int, params=None):
-        self._tick_epoch(pstate)
-        cands, gids, nxt = self._sequential(pstate, self.B)
-        handle = {"pstate": pstate, "step": step, "cands": cands,
-                  "gids": gids, "nxt": nxt, "fut": None}
+        self._tick_epoch(pstate.epoch)
+        cplan, nxt = self.candidate_plan(pstate, step)
+        cands = self.assembler.assemble(cplan)
+        handle = {"pstate": pstate, "step": step, "cplan": cplan,
+                  "cands": cands, "nxt": nxt, "fut": None}
         if self.overlap and params is not None and self.engine is not None:
             # async dispatch: runs behind whatever update is in flight
             handle["fut"] = self.engine.score(params, cands)
@@ -207,11 +274,14 @@ class HostPresampleSampler(Sampler):
                     "presample_host needs params to score: pass them to "
                     "begin() (overlapped) or finish() (synchronous)")
             fut = self.engine.score(params, handle["cands"])
-        scores = np.asarray(jax.device_get(fut[1]), np.float32)
-        gids = handle["gids"]
+        local = np.asarray(jax.device_get(fut[1]), np.float32)
+        cplan = handle["cplan"]
+        # every host scored only its candidate slice; the gathered vector
+        # (identity single-host) is what makes selection globally agreed
+        scores = self._gather_rows(local, cplan.n_rows)
         # out-of-band refresh: every candidate's fresh score enters the
         # memory, trained on or not
-        self.store.update(gids, scores)
+        self.store.update(cplan.gids, scores)
         g = scores.astype(np.float64)
         g = g / max(g.sum(), 1e-20)
         tau = float(np.sqrt(self.B * np.square(g).sum()))
@@ -220,23 +290,25 @@ class HostPresampleSampler(Sampler):
             tau if self.tau_ema == 0.0
             else self.icfg.ema * float(self.tau_ema)
             + (1.0 - self.icfg.ema) * tau, np.float64)
-        cands = handle["cands"]
         if not self.active:
-            batch = {k: np.asarray(v)[:self.b] for k, v in cands.items()}
-            batch["weights"] = np.ones((self.b,), np.float32)
-            meta = {"gids": gids[:self.b], "rows": (0, self.b),
-                    "is_flag": 0.0}
-            return batch, meta, handle["nxt"]
-        rng = np.random.default_rng(
-            np.random.SeedSequence([self.seed, 4211, int(handle["step"])]))
-        idx = rng.choice(self.B, size=self.b, replace=True, p=g)
-        batch = {k: np.asarray(v)[idx] for k, v in cands.items()}
-        # the paper's unbiasedness weights wᵢ = 1/(B·gᵢ)
-        batch["weights"] = (1.0 / (self.B * np.maximum(g[idx], 1e-20))
-                            ).astype(np.float32)
-        meta = {"gids": gids[idx], "rows": (0, self.b),
-                "is_flag": max(float(self.tau_ema), 1.0)}
-        return batch, meta, handle["nxt"]
+            rows = np.arange(self.b, dtype=np.int64)
+            plan = BatchPlan(step=cplan.step, epoch=cplan.epoch,
+                             gids=cplan.gids[:self.b], src_rows=rows,
+                             weights=np.ones((self.b,), np.float32))
+        else:
+            rng = np.random.default_rng(np.random.SeedSequence(
+                [self.seed, 4211, int(handle["step"])]))
+            idx = rng.choice(self.B, size=self.b, replace=True, p=g)
+            plan = BatchPlan(
+                step=cplan.step, epoch=cplan.epoch, gids=cplan.gids[idx],
+                probs=g[idx], src_rows=idx,
+                # the paper's unbiasedness weights wᵢ = 1/(B·gᵢ)
+                weights=(1.0 / (self.B * np.maximum(g[idx], 1e-20))
+                         ).astype(np.float32),
+                is_flag=max(float(self.tau_ema), 1.0))
+        batch = self.assembler.assemble(plan,
+                                        parent=(cplan, handle["cands"]))
+        return batch, plan, handle["nxt"]
 
     def next_batch(self, pstate: PipelineState, step: int, params=None):
         return self.finish(self.begin(pstate, step, params), params)
@@ -258,56 +330,83 @@ class HostPresampleSampler(Sampler):
 
 
 class HistorySampler(Sampler):
-    """Dataset-level IS from the persistent score memory."""
+    """Dataset-level IS from the persistent score memory — sampled from
+    the GLOBAL store distribution so every host draws the same plan."""
 
     scheme = "history"
+    plan_is_pure = False     # plans read the (mutable) score memory
 
-    def __init__(self, run_cfg, source):
-        super().__init__(run_cfg, source)
+    def __init__(self, run_cfg, source, assembler=None):
+        super().__init__(run_cfg, source, assembler)
         self.tau_gate = np.zeros((), np.float64)   # EMA of store-τ
         self._obs = np.zeros((), np.int64)         # observe() count
+        self._cov_global = 0.0                     # gate-cadence coverage
+        self._gate_dirty = False                   # refresh due at next plan
         self.k_local = self.b // self.n_hosts
 
     @property
     def active(self) -> bool:
-        return (self.store.coverage() >= self.cfg.min_coverage
+        # the gate reads the GLOBAL coverage refreshed at the same cadence
+        # as τ (observe), never a live per-host value: on uneven shards a
+        # live read would flip the gate at different steps on different
+        # hosts and fork the plans. Single-host the cached value equals
+        # store.coverage() at the last gate refresh.
+        return (self._cov_global >= self.cfg.min_coverage
                 and float(self.tau_gate) > self.cfg.resolved_tau_th())
 
-    def next_batch(self, pstate: PipelineState, step: int):
-        self._tick_epoch(pstate)
-        if not self.active:
-            # warm-up: uniform batches, unit weights; scores fill the store
-            batch, gids, nxt = self._sequential(pstate, self.b)
-            batch = dict(batch)
-            batch["weights"] = np.ones((self.k_local,), np.float32)
-            return batch, {"gids": gids, "rows": (0, self.b),
-                           "is_flag": 0.0}, nxt
-        rng = np.random.default_rng(
-            np.random.SeedSequence([self.seed, 9173, int(step)]))
-        gids, p = self.store.sample(rng, self.k_local, self.cfg.smoothing,
-                                    self.cfg.temperature)
-        batch = dict(self.source.gather(gids, epoch=pstate.epoch))
-        # unbiased for this host's shard mean: wᵢ = 1/(n·pᵢ), E_p[w·x] = x̄
-        batch["weights"] = (1.0 / (self.store.n_local * p)).astype(np.float32)
-        rows = (self.host_id * self.k_local, (self.host_id + 1) * self.k_local)
-        # is_flag carries the live store-τ (≥1) for the optional lr boost
-        return batch, {"gids": gids, "rows": rows,
-                       "is_flag": max(float(self.tau_gate), 1.0)}, \
-            pstate.advance(self.b, self.source.n)
-
-    def observe(self, meta, scores) -> None:
-        super().observe(meta, scores)
-        self._obs = self._obs + 1
-        # τ over the store is O(n_local) host work — refresh the gate
-        # periodically, not every step
-        n_obs = int(self._obs)
-        if n_obs != 1 and n_obs % max(self.cfg.gate_every, 1) != 0:
-            return
+    def _maybe_refresh_gate(self):
+        """The τ/coverage gate refresh is a PLAN-TIME collective: observe
+        only marks it due. Planning is the point where every host has
+        merged the same feedback (the gather is a sync point), so the
+        gate flips on the same step everywhere; refreshing inside
+        observe would gather while peers are still mid-merge. Returns
+        the refreshed distribution so the same gather serves this
+        step's sample (never two O(n) collectives in one plan)."""
+        if not self._gate_dirty:
+            return None
+        self._gate_dirty = False
         # no extra smoothing: the store's per-example EMA already damps
         # minibatch noise, the gate just reads the current dataset-level τ
-        self.tau_gate = np.asarray(
-            self.store.tau(self.cfg.smoothing, self.cfg.temperature),
-            np.float64)
+        sg = self.store.global_scores(self.gather_fn)
+        p = self.store.distribution_from(sg, self.cfg.smoothing,
+                                         self.cfg.temperature)
+        self.tau_gate = np.asarray(self.store.tau_from(p), np.float64)
+        self._cov_global = float((sg >= 0).mean())
+        return p
+
+    def plan(self, pstate: PipelineState, step: int):
+        p = self._maybe_refresh_gate()
+        if not self.active:
+            # warm-up: uniform sequential plan, unit weights; scores fill
+            # the store
+            gids = self.source.global_indices(pstate, self.b)
+            plan = BatchPlan(step=step, epoch=pstate.epoch, gids=gids,
+                             weights=np.ones((self.b,), np.float32))
+            return plan, pstate.advance(self.b, self.source.n)
+        if p is None:
+            p = self.store.global_distribution(self.cfg.smoothing,
+                                               self.cfg.temperature,
+                                               gather_fn=self.gather_fn)
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, 9173, int(step)]))
+        gids = rng.choice(self.store.n, size=self.b, replace=True,
+                          p=p).astype(np.int64)
+        # unbiased for the global mean: wᵢ = 1/(n·pᵢ), E_p[w·x] = x̄
+        w = (1.0 / (self.store.n * p[gids])).astype(np.float32)
+        # is_flag carries the live store-τ (≥1) for the optional lr boost
+        plan = BatchPlan(step=step, epoch=pstate.epoch, gids=gids,
+                         probs=p[gids], weights=w,
+                         is_flag=max(float(self.tau_gate), 1.0))
+        return plan, pstate.advance(self.b, self.source.n)
+
+    def observe(self, plan, scores) -> None:
+        super().observe(plan, scores)
+        self._obs = self._obs + 1
+        # τ over the store is O(n) host work (plus the strided gather when
+        # multi-host) — refresh the gate periodically, not every step
+        n_obs = int(self._obs)
+        if n_obs == 1 or n_obs % max(self.cfg.gate_every, 1) == 0:
+            self._gate_dirty = True
 
     def stats(self) -> dict:
         return {"store_coverage": self.store.coverage(),
@@ -318,23 +417,32 @@ class HistorySampler(Sampler):
         d = super().state_dict()
         d["tau_gate"] = self.tau_gate
         d["obs"] = self._obs
+        d["cov_global"] = np.asarray(self._cov_global, np.float64)
+        # a refresh marked due but not yet run must survive resume, or the
+        # restored run's gate flips one cycle later than the original
+        d["gate_dirty"] = np.asarray(self._gate_dirty, np.uint8)
         return d
 
     def load_state_dict(self, d) -> None:
         super().load_state_dict(d)
         self.tau_gate = np.asarray(d["tau_gate"], np.float64).reshape(())
         self._obs = np.asarray(d.get("obs", 0), np.int64).reshape(())
+        self._cov_global = float(np.asarray(d.get("cov_global", 0.0)))
+        self._gate_dirty = bool(np.asarray(d.get("gate_dirty", 0)))
 
 
 class SelectiveSampler(Sampler):
     """Top-k selective backprop over a sliding candidate window, ranked by
     the score memory instead of a fresh scoring pass (the memory is what
-    makes this cheaper than the original Biggest-Losers forward)."""
+    makes this cheaper than the original Biggest-Losers forward). The
+    window is ranked by the GLOBAL score vector, so every host trains on
+    its shard of the one global top-b — not a per-host top-k_local."""
 
     scheme = "selective"
+    plan_is_pure = False     # plans read the (mutable) score memory
 
-    def __init__(self, run_cfg, source):
-        super().__init__(run_cfg, source)
+    def __init__(self, run_cfg, source, assembler=None):
+        super().__init__(run_cfg, source, assembler)
         self.k_local = self.b // self.n_hosts
         self.window = (self.cfg.selective_window
                        or self.b * self.icfg.presample_ratio)
@@ -345,23 +453,18 @@ class SelectiveSampler(Sampler):
         if self.window < self.b:
             raise ValueError(f"selective window {self.window} < batch {self.b}")
 
-    def next_batch(self, pstate: PipelineState, step: int):
-        self._tick_epoch(pstate)
+    def plan(self, pstate: PipelineState, step: int):
         pool = self.source.global_indices(pstate, self.window)
-        mine = pool[self.store.owned(pool)]
-        if len(mine) == 0:
-            # permuted multi-host windows can miss this host entirely
-            mine = self.store.global_ids(np.arange(
-                min(self.k_local, self.store.n_local)))
-        gids = self.store.topk(mine, min(self.k_local, len(mine)))
-        if len(gids) < self.k_local:
-            # short owned pool (strided ownership over a permuted window):
-            # cycle the top picks so every host steps with k_local rows
-            gids = np.resize(gids, self.k_local)
-        batch = self.source.gather(gids, epoch=pstate.epoch)
-        rows = (self.host_id * self.k_local, (self.host_id + 1) * self.k_local)
-        return batch, {"gids": gids, "rows": rows, "is_flag": 1.0}, \
-            pstate.advance(self.window, self.source.n)
+        sg = self.store.global_scores(self.gather_fn)
+        pri = sg[pool].astype(np.float64)
+        # never-seen ids rank highest (optimistic init: visit everything)
+        pri = np.where(pri >= 0, pri, np.inf)
+        # stable partial sort: ties (e.g. all-unseen cold start) keep pool
+        # order, so the ranking is deterministic on every host
+        order = np.argsort(-pri, kind="stable")[:self.b]
+        plan = BatchPlan(step=step, epoch=pstate.epoch, gids=pool[order],
+                         is_flag=1.0)
+        return plan, pstate.advance(self.window, self.source.n)
 
 
 SCHEMES = {c.scheme: c for c in
@@ -369,7 +472,7 @@ SCHEMES = {c.scheme: c for c in
             HistorySampler, SelectiveSampler)}
 
 
-def make_sampler(run_cfg, source) -> Sampler:
+def make_sampler(run_cfg, source, assembler=None) -> Sampler:
     scheme = run_cfg.sampler.scheme
     if scheme == "presample" and run_cfg.sampler.host_score:
         # engine-backed host-side Algorithm 1 (scoring off the update path)
@@ -384,4 +487,4 @@ def make_sampler(run_cfg, source) -> Sampler:
         # uniform (on-device presample handles the switch itself via its
         # τ gate="never")
         scheme = "uniform"
-    return SCHEMES[scheme](run_cfg, source)
+    return SCHEMES[scheme](run_cfg, source, assembler)

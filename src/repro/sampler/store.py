@@ -26,6 +26,9 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.distributed.collectives import (gather_host_scores,
+                                           strided_shard_size)
+
 
 class ScoreStore:
     def __init__(self, n_examples: int, *, host_id: int = 0, n_hosts: int = 1,
@@ -37,8 +40,10 @@ class ScoreStore:
         self.n_hosts = int(n_hosts)
         self.ema = float(ema)
         self.staleness = float(staleness)
-        # owned ids: host_id, host_id + H, host_id + 2H, ...
-        self.n_local = (self.n - self.host_id + self.n_hosts - 1) // self.n_hosts
+        # owned ids: host_id, host_id + H, host_id + 2H, ... — the one
+        # shard-size definition (collectives.strided_shard_size), correct
+        # for any n % n_hosts
+        self.n_local = strided_shard_size(self.n, self.host_id, self.n_hosts)
         self.scores = np.zeros((self.n_local,), np.float32)
         self.seen = np.zeros((self.n_local,), np.uint8)
         self.updates = np.zeros((), np.int64)
@@ -82,43 +87,105 @@ class ScoreStore:
         self.updates += gids.size
         return int(gids.size)
 
-    def decay(self) -> None:
-        """Staleness decay: pull seen scores toward their mean (epoch tick)."""
+    def decay(self, mean=None) -> None:
+        """Staleness decay: pull seen scores toward the mean (epoch tick).
+
+        ``mean`` defaults to this shard's seen mean — correct single-host.
+        Multi-host callers pass the GLOBAL seen mean (``Sampler`` gathers
+        it at the epoch tick) so every host's shard decays toward the same
+        attractor and the gathered global vector stays bitwise identical
+        to a single-host run's."""
         m = self.seen.astype(bool)
         if not m.any():
             return
-        mean = float(self.scores[m].mean())
+        mean = float(self.scores[m].mean()) if mean is None else float(mean)
         self.scores[m] = mean + self.staleness * (self.scores[m] - mean)
 
     # -- reads ----------------------------------------------------------------
     def coverage(self) -> float:
         return self._n_seen / self.n_local if self.n_local else 0.0
 
-    def distribution(self, smoothing: float = 0.1,
-                     temperature: float = 1.0) -> np.ndarray:
-        """Sampling distribution p over this host's slots.
+    # The -1 sentinel marks never-seen slots (valid scores are >= 0); it is
+    # also the all-gather pad value, so "unseen" survives the collective.
+    def sentinel_scores(self) -> np.ndarray:
+        """This host's shard with unseen slots encoded as ``-1.0`` — the
+        unit that crosses hosts (``gather_host_scores`` pads with the same
+        sentinel)."""
+        return np.where(self.seen.astype(bool), self.scores,
+                        np.float32(-1.0)).astype(np.float32)
 
-        Unseen slots get the mean seen score (optimistic-neutral), the
-        scores are sharpened by ``score^(1/T)``, and the result is mixed
-        with uniform: ``p = (1-λ)·p_score + λ·u``. λ>0 bounds the weights
-        1/(N·pᵢ) and keeps the estimator's variance finite.
+    def global_scores(self, gather_fn=None) -> np.ndarray:
+        """The GLOBAL score vector (length n, ``-1`` where never seen),
+        reassembled from every host's strided shard. Identity single-host;
+        multi-process it rides ``collectives.gather_host_scores``; a
+        simulated multi-host run (tests) injects ``gather_fn``.
         """
-        m = self.seen.astype(bool)
-        s = self.scores.astype(np.float64).copy()
+        local = self.sentinel_scores()
+        if self.n_hosts == 1:
+            return local
+        gather = gather_fn or gather_host_scores
+        return np.asarray(gather(local, host_id=self.host_id,
+                                 n_hosts=self.n_hosts, n_global=self.n),
+                          np.float32)
+
+    @staticmethod
+    def distribution_from(scores: np.ndarray, smoothing: float = 0.1,
+                          temperature: float = 1.0) -> np.ndarray:
+        """Sampling distribution p over a (global or local) sentinel score
+        vector — the one definition of the selection math, shared by the
+        host-local reads below and the selection plane's global reads.
+
+        Unseen slots (< 0) get the mean seen score (optimistic-neutral),
+        the scores are sharpened by ``score^(1/T)``, and the result is
+        mixed with uniform: ``p = (1-λ)·p_score + λ·u``. λ>0 bounds the
+        weights 1/(N·pᵢ) and keeps the estimator's variance finite.
+        """
+        s = np.asarray(scores, np.float64).copy()
+        m = s >= 0.0
         fill = float(s[m].mean()) if m.any() else 1.0
         s[~m] = fill
         s = np.maximum(s, 1e-12)
         if temperature != 1.0:
             s = s ** (1.0 / temperature)
         p = s / s.sum()
-        u = 1.0 / self.n_local
+        u = 1.0 / s.size
         return ((1.0 - smoothing) * p + smoothing * u).astype(np.float64)
 
+    @staticmethod
+    def tau_from(p: np.ndarray) -> float:
+        """eq. 26's τ of a distribution (τ² = n·Σpᵢ², the same identity
+        ``repro.core.importance.tau`` computes on-device)."""
+        p = np.asarray(p, np.float64)
+        return float(np.sqrt(p.size * np.square(p).sum()))
+
+    def distribution(self, smoothing: float = 0.1,
+                     temperature: float = 1.0) -> np.ndarray:
+        """Sampling distribution p over this host's slots."""
+        return self.distribution_from(self.sentinel_scores(), smoothing,
+                                      temperature)
+
     def tau(self, smoothing: float = 0.1, temperature: float = 1.0) -> float:
-        """eq. 26's τ of the store distribution (τ² = n·Σpᵢ², the same
-        identity ``repro.core.importance.tau`` computes on-device)."""
-        p = self.distribution(smoothing, temperature)
-        return float(np.sqrt(self.n_local * np.square(p).sum()))
+        return self.tau_from(self.distribution(smoothing, temperature))
+
+    def global_distribution(self, smoothing: float = 0.1,
+                            temperature: float = 1.0,
+                            gather_fn=None) -> np.ndarray:
+        """p over the GLOBAL id space — what every host samples from so
+        multi-host selection matches the paper's global ∝ ĝ distribution
+        (identical on all hosts given the deterministic gather)."""
+        return self.distribution_from(self.global_scores(gather_fn),
+                                      smoothing, temperature)
+
+    def sample_global(self, rng: np.random.Generator, k: int,
+                      smoothing: float = 0.1, temperature: float = 1.0,
+                      gather_fn=None):
+        """Draw k GLOBAL ids ~ global p (with replacement) from a shared
+        PRNG — every host passing the same rng stream draws the same ids.
+        Returns (global_ids, p_of_chosen); unbiased weights are
+        ``1/(n·pᵢ)``."""
+        p = self.global_distribution(smoothing, temperature, gather_fn)
+        gids = rng.choice(self.n, size=k, replace=True, p=p)
+        return gids.astype(np.int64), p[gids]
 
     def sample(self, rng: np.random.Generator, k: int,
                smoothing: float = 0.1, temperature: float = 1.0):

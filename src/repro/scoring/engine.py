@@ -92,6 +92,17 @@ class ScoreEngine:
         return (np.asarray(jax.device_get(loss_ps)),
                 np.asarray(jax.device_get(scores)))
 
+    # -- the selection plane's scoring entry ---------------------------------
+    def score_plan(self, params, plan, assembler):
+        """Score THIS host's row slice of a ``BatchPlan`` (forward-only,
+        async — same non-blocking contract as ``score``). The host-side
+        refresh path is keyed by plans: the assembler materialises exactly
+        this host's data-parallel shard, and the caller stitches the row
+        shards back together (``Sampler._gather_rows`` over
+        ``collectives.allgather_rows``) before merging into the
+        ``ScoreStore``."""
+        return self.score(params, assembler.assemble(plan))
+
     # -- multi-host gather hook ----------------------------------------------
     def gather_scores(self, local_scores, *, host_id=None, n_hosts=None,
                       n_global=None):

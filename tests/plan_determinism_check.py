@@ -1,0 +1,79 @@
+"""Cross-PROCESS selection-plane determinism check.
+
+Each invocation builds host-sharded samplers for a subset of the H
+simulated hosts and prints the sha256 of the chained ``BatchPlan``
+signatures over N steps — one line per host::
+
+    host <h> <hex digest>
+    single - <hex digest>          (with --single: the 1-host reference)
+
+The driver (tests/test_distributed.py, and the CI ``multihost`` job) runs
+TWO separate OS processes over disjoint host subsets and asserts every
+digest is identical — no shared memory, so agreement proves the plans are
+derived purely from the shared PRNG over the global index space. The
+scheme under test is the paper's ``presample`` (Algorithm 1's candidate
+plans; its plans are pure functions of the plan cursor).
+
+Usage::
+
+    python tests/plan_determinism_check.py --hosts 8 --host-set 0,1,2,3 \
+        --steps 40 [--single]
+"""
+import argparse
+import hashlib
+import sys
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import (ISConfig, OptimConfig, RunConfig,
+                                SamplerConfig, ShapeConfig)
+from repro.data.pipeline import PipelineState, SyntheticLM
+from repro.sampler import make_sampler
+
+N_EXAMPLES = 100          # not divisible by 8: uneven shards on purpose
+
+
+def run_cfg(scheme="presample"):
+    return RunConfig(
+        model=get_config("lm-tiny"),
+        shape=ShapeConfig("t", seq_len=16, global_batch=8, kind="train"),
+        optim=OptimConfig(name="adamw", lr=1e-3),
+        imp=ISConfig(enabled=True, presample_ratio=3, tau_th=1.2),
+        sampler=SamplerConfig(scheme=scheme),
+        remat=False, seed=0)
+
+
+def plan_chain_digest(host_id: int, n_hosts: int, steps: int) -> str:
+    run = run_cfg()
+    src = SyntheticLM(run.model.vocab_size, 16, n_examples=N_EXAMPLES,
+                      seed=9, host_id=host_id, n_hosts=n_hosts)
+    sampler = make_sampler(run, src)
+    assert sampler.plan_is_pure
+    h = hashlib.sha256()
+    pstate = PipelineState()
+    for step in range(steps):
+        plan, pstate = sampler.plan(pstate, step)
+        h.update(plan.signature().encode())
+        h.update(np.asarray(plan.gids, np.int64).tobytes())
+    return h.hexdigest()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hosts", type=int, default=8)
+    ap.add_argument("--host-set", default="0")
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--single", action="store_true",
+                    help="also print the 1-host reference digest")
+    args = ap.parse_args(argv)
+    for h in (int(x) for x in args.host_set.split(",")):
+        print(f"host {h} {plan_chain_digest(h, args.hosts, args.steps)}",
+              flush=True)
+    if args.single:
+        print(f"single - {plan_chain_digest(0, 1, args.steps)}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

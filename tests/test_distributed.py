@@ -33,3 +33,25 @@ def _run(check):
 ])
 def test_multidevice(check):
     _run(check)
+
+
+def test_plan_determinism_across_two_processes():
+    """The selection plane's acceptance check: TWO separate OS processes
+    (disjoint 4-host subsets of an 8-host sharding, no shared memory)
+    derive bitwise-identical presample plan chains, and both match the
+    single-host run step-for-step."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    script = str(ROOT / "tests" / "plan_determinism_check.py")
+    procs = [
+        subprocess.run(
+            [sys.executable, script, "--hosts", "8", "--host-set", hs,
+             "--steps", "40"] + (["--single"] if i == 0 else []),
+            env=env, capture_output=True, text=True, timeout=300)
+        for i, hs in enumerate(["0,1,2,3", "4,5,6,7"])]
+    digests = set()
+    for r in procs:
+        assert r.returncode == 0, r.stderr[-2000:]
+        for line in r.stdout.strip().splitlines():
+            digests.add(line.split()[-1])
+    assert len(digests) == 1, f"plan chains diverged: {digests}"

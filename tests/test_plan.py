@@ -1,0 +1,509 @@
+"""The selection plane: ``BatchPlan`` semantics, shard math (pad + trim,
+property-tested), the ``Assembler``'s three materialisation paths,
+cross-host plan determinism for every scheme under simulated 8-host
+sharding, and the depth-N ``DataPlane`` (pipelined parity, plan-cursor
+checkpointing, error retry, Prefetcher shim).
+
+"Simulated multi-host" here means H sampler/source/store instances with
+``host_id=h, n_hosts=H`` in one process, with the cross-host collectives
+injected as in-process merges (production multi-process runs use the
+``multihost_utils`` implementations of the same math —
+``collectives.pad_shard`` / ``interleave_shards`` are shared by both).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.configs.base import (DataConfig, ISConfig, OptimConfig, RunConfig,
+                                SamplerConfig, ShapeConfig)
+from repro.data.pipeline import (DataPlane, MemmapLM, PipelineState,
+                                 Prefetcher, SyntheticCLS, SyntheticLM)
+from repro.data.plan import BatchPlan
+from repro.distributed.collectives import (interleave_shards, pad_shard,
+                                           strided_shard_size)
+from repro.sampler import Assembler, ScoreStore, make_sampler
+
+
+# ---------------------------------------------------------------------------
+# BatchPlan
+# ---------------------------------------------------------------------------
+def test_plan_row_slices_partition_rows():
+    plan = BatchPlan(step=3, epoch=1, gids=np.arange(24))
+    rows = [plan.row_slice(h, 4) for h in range(4)]
+    assert rows == [(0, 6), (6, 12), (12, 18), (18, 24)]
+    with pytest.raises(ValueError, match="not divisible"):
+        plan.row_slice(0, 5)
+
+
+def test_plan_signature_covers_all_fields():
+    base = dict(step=1, epoch=0, gids=np.arange(8))
+    a = BatchPlan(**base)
+    assert a.signature() == BatchPlan(**base).signature()
+    others = [
+        BatchPlan(**{**base, "step": 2}),
+        BatchPlan(**{**base, "epoch": 1}),
+        BatchPlan(**{**base, "gids": np.arange(8)[::-1].copy()}),
+        BatchPlan(**base, weights=np.ones(8)),
+        BatchPlan(**base, probs=np.full(8, 0.125)),
+        BatchPlan(**base, src_rows=np.arange(8)),
+        BatchPlan(**base, is_flag=1.5),
+    ]
+    sigs = {p.signature() for p in others} | {a.signature()}
+    assert len(sigs) == len(others) + 1
+
+
+def test_plan_meta_dict_compat():
+    plan = BatchPlan(step=0, epoch=0, gids=np.arange(8), is_flag=2.0)
+    assert plan["rows"] == (0, 8)
+    assert plan["is_flag"] == 2.0
+    np.testing.assert_array_equal(plan["gids"], np.arange(8))
+    with pytest.raises(KeyError):
+        plan["nope"]
+
+
+# ---------------------------------------------------------------------------
+# strided shard math (pad + trim) — property-tested over uneven n % H
+# ---------------------------------------------------------------------------
+@settings(max_examples=24)
+@given(st.integers(1, 97), st.integers(1, 8))
+def test_strided_pad_interleave_roundtrip(n, H):
+    vec = np.arange(n, dtype=np.float32) + 1.0    # all >= 0 (no sentinels)
+    shards = [vec[h::H] for h in range(H)]
+    for h in range(H):
+        assert shards[h].size == strided_shard_size(n, h, H)
+    stacked = np.stack([pad_shard(s, n, H) for s in shards])
+    np.testing.assert_array_equal(interleave_shards(stacked, n), vec)
+    assert sum(strided_shard_size(n, h, H) for h in range(H)) == n
+
+
+@settings(max_examples=12)
+@given(st.integers(1, 63), st.integers(1, 5))
+def test_store_shards_reassemble_uneven(n, H):
+    """ScoreStore shards of ANY n % H reassemble to the exact global
+    vector through the shared pad+trim math (what gather_host_scores does
+    across processes)."""
+    rng = np.random.default_rng(n * 31 + H)
+    scores = rng.uniform(0.0, 5.0, n).astype(np.float32)
+    stores = [ScoreStore(n, host_id=h, n_hosts=H) for h in range(H)]
+    for s in stores:
+        s.update(np.arange(n), scores)            # keeps only owned ids
+    stacked = np.stack([pad_shard(s.sentinel_scores(), n, H) for s in stores])
+    np.testing.assert_array_equal(interleave_shards(stacked, n), scores)
+
+
+# ---------------------------------------------------------------------------
+# Assembler
+# ---------------------------------------------------------------------------
+def _seq_plan(source, pstate, size, step=0, **kw):
+    return BatchPlan(step=step, epoch=pstate.epoch,
+                     gids=source.global_indices(pstate, size), **kw)
+
+
+@pytest.mark.parametrize("src_cls", [SyntheticLM, SyntheticCLS])
+def test_assemble_matches_sequential_batch(src_cls):
+    src = src_cls(128, 16, n_examples=64, seed=5, host_id=0, n_hosts=1)
+    pstate = PipelineState(epoch=2, cursor=24)
+    plan = _seq_plan(src, pstate, 8)
+    got = Assembler(src).assemble(plan)
+    want, _ = src.batch(pstate, 8)
+    for k in want:
+        np.testing.assert_array_equal(got[k], want[k])
+
+
+def test_assemble_shards_concat_to_global_batch():
+    """H host assemblers produce exactly the H row slices of the one
+    global batch (the data-parallel shard contract)."""
+    full = SyntheticLM(128, 16, n_examples=64, seed=3, host_id=0, n_hosts=1)
+    plan = _seq_plan(full, PipelineState(cursor=10), 16,
+                     weights=np.linspace(1, 2, 16, dtype=np.float32))
+    shards = []
+    for h in range(4):
+        src = SyntheticLM(128, 16, n_examples=64, seed=3, host_id=h,
+                          n_hosts=4)
+        shards.append(Assembler(src).assemble(plan))
+    ref = Assembler(full).assemble(plan)
+    for k in ref:
+        np.testing.assert_array_equal(
+            np.concatenate([s[k] for s in shards]), ref[k])
+    assert all(s["weights"].shape == (4,) for s in shards)
+
+
+def test_assemble_parent_reuse_matches_regather():
+    """src_rows plans (presample's b-of-B) reuse the materialised parent
+    rows — bit-identical to re-gathering by id."""
+    src = SyntheticLM(128, 16, n_examples=64, seed=9, host_id=0, n_hosts=1)
+    asm = Assembler(src)
+    pstate = PipelineState(epoch=1, cursor=4)
+    cplan = _seq_plan(src, pstate, 24)
+    cands = asm.assemble(cplan)
+    rows = np.asarray([3, 3, 17, 0, 22, 9, 11, 5])
+    sel = BatchPlan(step=0, epoch=cplan.epoch, gids=cplan.gids[rows],
+                    src_rows=rows, weights=np.ones(8, np.float32))
+    reused = asm.assemble(sel, parent=(cplan, cands))
+    regathered = asm.assemble(sel)
+    for k in regathered:
+        np.testing.assert_array_equal(reused[k], regathered[k])
+
+
+class _PartitionedView:
+    """A source that can only materialise the ids it owns (id % H == h) —
+    the case the exchange path exists for."""
+
+    partitioned = True
+
+    def __init__(self, inner, host_id, n_hosts):
+        self.inner = inner
+        self.n = inner.n
+        self.host_id, self.n_hosts = host_id, n_hosts
+
+    def global_indices(self, state, size):
+        return self.inner.global_indices(state, size)
+
+    def gather(self, indices, epoch=0):
+        indices = np.asarray(indices, np.int64)
+        if ((indices % self.n_hosts) != self.host_id).any():
+            raise AssertionError("gather of unowned id on partitioned source")
+        return self.inner.gather(indices, epoch=epoch)
+
+
+def test_partitioned_contributions_merge_to_global_batch():
+    """Each partitioned host fills exactly the rows it owns; the masked
+    merge (what collectives.exchange_rows computes across processes)
+    reassembles the full global batch."""
+    H = 4
+    full = SyntheticLM(128, 16, n_examples=64, seed=11, host_id=0, n_hosts=1)
+    plan = _seq_plan(full, PipelineState(cursor=6), 16)
+    ref = full.gather(plan.gids, epoch=plan.epoch)
+    merged = {k: np.zeros_like(np.asarray(v)) for k, v in ref.items()}
+    cover = np.zeros(plan.n_rows, np.int64)
+    asms = []
+    for h in range(H):
+        view = _PartitionedView(full, h, H)
+        asm = Assembler(view, host_id=h, n_hosts=H)
+        assert asm.partitioned
+        contrib, mask = asm.contribution(plan)
+        cover += mask
+        for k in merged:
+            merged[k] += contrib[k]
+        asms.append(asm)
+    assert (cover == 1).all()          # every row produced by exactly 1 host
+    for k in ref:
+        np.testing.assert_array_equal(merged[k], ref[k])
+    # and through assemble() with an injected in-process exchange
+    for h, asm in enumerate(asms):
+        asm.exchange_rows = (
+            lambda contrib, mask, *, lo, hi, n_hosts:
+            {k: merged[k][lo:hi] for k in contrib})
+        got = asm.assemble(plan)
+        lo, hi = plan.row_slice(h, H)
+        np.testing.assert_array_equal(got["tokens"], ref["tokens"][lo:hi])
+
+
+def test_simulated_multihost_collectives_refuse_silently_wrong_gather():
+    """Production collectives must hard-error in a 1-process simulated
+    multi-host setup instead of returning a single shard as 'global'."""
+    from repro.distributed.collectives import (allgather_rows,
+                                               gather_host_scores)
+    with pytest.raises(RuntimeError, match="inject"):
+        gather_host_scores(np.zeros(4, np.float32), host_id=0, n_hosts=2,
+                           n_global=8)
+    with pytest.raises(RuntimeError, match="inject"):
+        allgather_rows(np.zeros(4, np.float32), n_rows=8, n_hosts=2)
+
+
+# ---------------------------------------------------------------------------
+# cross-host plan determinism (8 simulated hosts)
+# ---------------------------------------------------------------------------
+N_EX = 100       # NOT divisible by 8: uneven store shards on purpose
+B_GLOBAL = 8
+
+
+def _run_cfg(scheme, **skw):
+    return RunConfig(
+        model=get_config("lm-tiny"),
+        shape=ShapeConfig("t", seq_len=16, global_batch=B_GLOBAL,
+                          kind="train"),
+        optim=OptimConfig(name="adamw", lr=1e-3),
+        imp=ISConfig(enabled=True, presample_ratio=2, tau_th=1.2),
+        sampler=SamplerConfig(scheme=scheme, min_coverage=0.25,
+                              tau_th=1.001, temperature=0.5, **skw),
+        remat=False)
+
+
+def _sim_hosts(run, H, seed=9):
+    """H host-sharded samplers + the in-process strided score gather.
+
+    The injected gather serves a SNAPSHOT the driver refreshes at each
+    lockstep phase boundary — a real multi-process gather is a collective
+    where every host contributes its shard at the same program point, so
+    a live read while the driver is still iterating hosts would model an
+    impossible interleaving.
+    """
+    samplers = [make_sampler(run, SyntheticLM(
+        run.model.vocab_size, 16, n_examples=N_EX, seed=seed, host_id=h,
+        n_hosts=H)) for h in range(H)]
+    board = {}
+
+    def refresh():
+        board["snap"] = interleave_shards(
+            np.stack([pad_shard(s.store.sentinel_scores(), N_EX, H)
+                      for s in samplers]), N_EX)
+
+    def sim_gather(local, *, host_id, n_hosts, n_global):
+        return board["snap"]
+
+    for s in samplers:
+        s.gather_fn = sim_gather
+    refresh()
+    return samplers, refresh
+
+
+@pytest.mark.parametrize("scheme", ["uniform", "presample", "history",
+                                    "selective"])
+def test_plans_bitwise_identical_across_hosts(scheme):
+    """Every host derives the bitwise-identical BatchPlan per step, the
+    plans match a single-host run step-for-step, and the host shards
+    concatenate to the single-host global batch."""
+    H, steps = 8, 30
+    run = _run_cfg(scheme)
+    samplers, refresh = _sim_hosts(run, H)
+    single = make_sampler(run, SyntheticLM(
+        run.model.vocab_size, 16, n_examples=N_EX, seed=9, host_id=0,
+        n_hosts=1))
+    rng = np.random.default_rng(4)
+    sts = [PipelineState() for _ in range(H + 1)]
+    activations = 0
+    for step in range(steps):
+        # lockstep phase 1: epoch tick (staleness decay) on every host —
+        # in production each process reaches this point before the plan
+        # gather collective
+        refresh()
+        for h, sp in enumerate(samplers):
+            sp._tick_epoch(sts[h].epoch)
+        single._tick_epoch(sts[H].epoch)
+        # lockstep phase 2: plan + assemble (reads are collective-consistent)
+        refresh()
+        outs = []
+        for h, sp in enumerate(samplers):
+            batch, plan, sts[h] = sp.next_batch(sts[h], step)
+            assert batch["tokens"].shape[0] == plan.n_rows // H
+            outs.append((batch, plan))
+        sbatch, splan, sts[H] = single.next_batch(sts[H], step)
+        sigs = {p.signature() for _, p in outs}
+        assert sigs == {splan.signature()}, f"fork at step {step}"
+        np.testing.assert_array_equal(
+            np.concatenate([b["tokens"] for b, _ in outs]), sbatch["tokens"])
+        if splan.weights is not None:
+            np.testing.assert_array_equal(
+                np.concatenate([b["weights"] for b, _ in outs]),
+                sbatch["weights"])
+        # identical global score feedback on every host (what a replicated
+        # train step + gathered scores produce); stores keep their shards
+        scores = rng.uniform(0.05, 4.0, N_EX).astype(np.float32)
+        for sp, (_, plan) in zip(samplers, outs):
+            sp.observe(plan, scores[plan.gids])
+        single.observe(splan, scores[splan.gids])
+        activations += getattr(single, "active", False)
+    if scheme == "history":
+        assert activations > 0       # the IS phase actually ran
+
+
+def test_presample_host_plans_identical_across_hosts():
+    """The engine-backed Algorithm 1: candidate row slices are scored per
+    host, the gathered vector + shared PRNG make the b-of-B selection
+    plan identical everywhere, and parent-row reuse shards correctly."""
+
+    class FakeEngine:
+        def score(self, params, batch):
+            t = np.asarray(batch["tokens"], np.int64)
+            s = ((t.sum(axis=1) % 97) + 1).astype(np.float32) / 10.0
+            return np.zeros_like(s), s
+
+    H, steps = 4, 10
+    run = _run_cfg("presample", host_score=True)
+    run = dataclasses.replace(run, imp=dataclasses.replace(
+        run.imp, tau_th=1.0001))          # activate the IS phase quickly
+    samplers, refresh = _sim_hosts(run, H)
+    single = make_sampler(run, SyntheticLM(
+        run.model.vocab_size, 16, n_examples=N_EX, seed=9, host_id=0,
+        n_hosts=1))
+    board = {}
+    for sp in samplers + [single]:
+        sp.bind_engine(FakeEngine())
+    for sp in samplers:
+        sp.row_gather_fn = lambda local, *, n_rows, n_hosts: board["rows"]
+        sp.assembler.allgather_rows = (
+            lambda rows, *, n_rows, n_hosts:
+            {k: np.concatenate([np.asarray(c[k]) for c in board["cands"]]
+                               )[:n_rows] for k in rows})
+    sts = [PipelineState() for _ in range(H + 1)]
+    full_src = single.source
+    saw_is = False
+    for step in range(steps):
+        params = {"w": step}
+        refresh()                        # collective-consistent epoch tick
+        for h, sp in enumerate(samplers):
+            sp._tick_epoch(sts[h].epoch)
+        single._tick_epoch(sts[H].epoch)
+        handles = [sp.begin(sts[h], step, params=params)
+                   for h, sp in enumerate(samplers)]
+        board["cands"] = [hd["cands"] for hd in handles]
+        board["rows"] = np.concatenate(
+            [np.asarray(hd["fut"][1]) for hd in handles])
+        outs = [sp.finish(handles[h], params=params)
+                for h, sp in enumerate(samplers)]
+        sb, splan, sts[H] = single.next_batch(sts[H], step, params=params)
+        sigs = {p.signature() for _, p, _ in outs}
+        assert sigs == {splan.signature()}, f"fork at step {step}"
+        for h, (b, p, nxt) in enumerate(outs):
+            sts[h] = nxt
+        np.testing.assert_array_equal(
+            np.concatenate([b["tokens"] for b, _, _ in outs]), sb["tokens"])
+        np.testing.assert_array_equal(
+            np.concatenate([b["weights"] for b, _, _ in outs]),
+            sb["weights"])
+        ref = full_src.gather(splan.gids, epoch=splan.epoch)
+        np.testing.assert_array_equal(
+            np.concatenate([b["tokens"] for b, _, _ in outs]), ref["tokens"])
+        saw_is |= splan.is_flag > 0
+    assert saw_is                      # the resampling branch was exercised
+
+
+# ---------------------------------------------------------------------------
+# DataPlane
+# ---------------------------------------------------------------------------
+def _uniform_sampler(n=64, seed=7, depth_cfg=None):
+    run = _run_cfg("uniform")
+    src = SyntheticLM(run.model.vocab_size, 16, n_examples=n, seed=seed,
+                      host_id=0, n_hosts=1)
+    return make_sampler(run, src)
+
+
+def test_dataplane_matches_sequential_next_batch():
+    a, b = _uniform_sampler(), _uniform_sampler()
+    plane = DataPlane(a, depth=3, device_put=False)
+    assert plane.pipelined
+    plane.start(PipelineState(), 0)
+    pstate = PipelineState()
+    for step in range(12):
+        got_b, got_p, got_st = plane.next()
+        want_b, want_p, pstate = b.next_batch(pstate, step)
+        assert got_p.signature() == want_p.signature()
+        np.testing.assert_array_equal(got_b["tokens"], want_b["tokens"])
+        assert got_st == pstate
+    plane.stop()
+
+
+def test_dataplane_plan_cursor_checkpoint_resume():
+    """The plane's durable state is just the plan cursor: a new plane
+    started from state_dict() continues the identical plan sequence."""
+    a = _uniform_sampler()
+    plane = DataPlane(a, depth=2, device_put=False)
+    plane.start(PipelineState(), 0)
+    for _ in range(5):
+        plane.next()
+    ck = plane.state_dict()
+    plane.stop()
+    assert ck["step"] == 5
+    ref, pstate = _uniform_sampler(), PipelineState()
+    for step in range(5):
+        _, _, pstate = ref.next_batch(pstate, step)
+    assert ck["pipeline"] == pstate.as_dict()
+
+    resumed = DataPlane(_uniform_sampler(), depth=2, device_put=False)
+    resumed.start(PipelineState.from_dict(ck["pipeline"]), ck["step"])
+    got_b, got_p, _ = resumed.next()
+    want_b, want_p, _ = ref.next_batch(pstate, 5)
+    assert got_p.signature() == want_p.signature()
+    np.testing.assert_array_equal(got_b["tokens"], want_b["tokens"])
+    resumed.stop()
+
+
+def test_dataplane_surfaces_gather_error_then_recovers():
+    sampler = _uniform_sampler()
+    inner_gather = sampler.source.gather
+    state = {"fail": False}
+
+    def flaky(indices, epoch=0):
+        if state["fail"]:
+            state["fail"] = False
+            raise OSError("transient read error")
+        return inner_gather(indices, epoch=epoch)
+
+    sampler.source.gather = flaky
+    plane = DataPlane(sampler, depth=1, device_put=False, sync_launch=True)
+    plane.start(PipelineState(), 0)
+    plane.next()
+    state["fail"] = True
+    plane.next()                               # in-flight batch unaffected
+    with pytest.raises(OSError, match="transient"):
+        plane.next()
+    batch, plan, _ = plane.next()              # background retry succeeded
+    assert plan.step == 2                      # the plan that failed
+    want = _uniform_sampler().source.gather(plan.gids, epoch=plan.epoch)
+    np.testing.assert_array_equal(batch["tokens"], want["tokens"])
+    plane.stop()
+
+
+def test_dataplane_not_pipelined_for_impure_schemes():
+    run = _run_cfg("history")
+    src = SyntheticLM(run.model.vocab_size, 16, n_examples=64, seed=7,
+                      host_id=0, n_hosts=1)
+    sampler = make_sampler(run, src)
+    plane = DataPlane(sampler, depth=4)
+    assert not plane.pipelined
+    # passthrough: begin/finish delegate to the sampler's two-phase API
+    handle = plane.begin(PipelineState(), 0)
+    batch, plan, _ = plane.finish(handle)
+    assert plan.n_rows == run.shape.global_batch
+    plane.stop()
+
+
+def test_prefetch_depth_is_a_config_knob():
+    from repro.api.config import apply_overrides, to_dict, from_dict
+    run = _run_cfg("uniform")
+    assert run.data == DataConfig()
+    run2 = apply_overrides(run, {"data.prefetch_depth": "5",
+                                 "data.device_put": "false"})
+    assert run2.data.prefetch_depth == 5 and run2.data.device_put is False
+    assert from_dict(to_dict(run2)) == run2          # lossless round-trip
+
+
+def test_fit_resume_bitwise_across_plane_depths(tmp_path):
+    """The plan cursor is the plane's ONLY durable state: a run
+    checkpointed at depth 1 resumes at depth 3 and reproduces the
+    straight depth-3 run's losses and params bitwise."""
+    import jax
+    from repro.api import Experiment
+
+    def mk(ckpt, depth):
+        run = dataclasses.replace(
+            _run_cfg("presample"), ckpt_dir=str(ckpt), ckpt_every=4,
+            data=DataConfig(prefetch_depth=depth))
+        src = SyntheticLM(run.model.vocab_size, 16, n_examples=64, seed=9,
+                          host_id=0, n_hosts=1)
+        return Experiment(run, source=src)
+
+    sa, ha = mk(tmp_path / "a", 3).fit(steps=6)
+    mk(tmp_path / "b", 1).fit(steps=3)            # interrupted at depth 1
+    sb, hb = mk(tmp_path / "b", 3).fit(steps=6)   # resumed at depth 3
+    assert [h["loss"] for h in ha][3:] == [h["loss"] for h in hb]
+    for x, y in zip(jax.tree_util.tree_leaves(sa["params"]),
+                    jax.tree_util.tree_leaves(sb["params"])):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_prefetcher_is_deprecated_shim_over_depth1_plane():
+    src = SyntheticLM(128, 16, n_examples=64, seed=7, host_id=0, n_hosts=1)
+    with pytest.warns(DeprecationWarning, match="DataPlane"):
+        pf = Prefetcher(src, PipelineState(), 8)
+    assert isinstance(pf._plane, DataPlane)
+    assert pf._plane.depth == 1
+    got, st = pf.next()
+    want, want_st = src.batch(PipelineState(), 8)
+    np.testing.assert_array_equal(got["tokens"], want["tokens"])
+    assert st == want_st

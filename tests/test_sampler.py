@@ -140,6 +140,48 @@ def test_history_weighted_estimator_unbiased():
     assert np.mean(ests) == pytest.approx(x.mean(), abs=max(4 * se, 1e-3))
 
 
+def test_history_global_estimator_unbiased_sharded_mc():
+    """The multi-host history estimator: sample_global across H sharded
+    stores (uneven n % H) draws the same ids on every host and recovers
+    the uniform mean with weights 1/(n·pᵢ)."""
+    from repro.distributed.collectives import interleave_shards, pad_shard
+
+    rng = np.random.default_rng(5)
+    N, H = 91, 3                                   # uneven shards
+    x = rng.standard_normal(N)
+    sc = rng.uniform(0.05, 6.0, N).astype(np.float32)
+    stores = [ScoreStore(N, host_id=h, n_hosts=H) for h in range(H)]
+    for st in stores:
+        st.update(np.arange(N), sc)                # keeps only owned ids
+
+    def sim_gather(local, *, host_id, n_hosts, n_global):
+        return interleave_shards(np.stack(
+            [pad_shard(s.sentinel_scores(), n_global, n_hosts)
+             for s in stores]), n_global)
+
+    # every host draws the identical global ids from the shared PRNG
+    draws0 = stores[0].sample_global(np.random.default_rng(7), 64, 0.1, 0.7,
+                                     gather_fn=sim_gather)
+    for st in stores[1:]:
+        g, p = st.sample_global(np.random.default_rng(7), 64, 0.1, 0.7,
+                                gather_fn=sim_gather)
+        np.testing.assert_array_equal(g, draws0[0])
+        np.testing.assert_array_equal(p, draws0[1])
+    # exact expectation identity over the GLOBAL distribution
+    p_full = ScoreStore.distribution_from(sc, 0.1, 0.7)
+    assert np.sum(p_full * (1.0 / (N * p_full)) * x) == \
+        pytest.approx(x.mean(), rel=1e-9)
+    # Monte Carlo through the sharded sampling path itself
+    draws, k = 400, 48
+    ests = []
+    for d in range(draws):
+        gids, pg = stores[d % H].sample_global(
+            np.random.default_rng(d), k, 0.1, 0.7, gather_fn=sim_gather)
+        ests.append((x[gids] / (N * pg)).mean())
+    se = np.std(ests) / np.sqrt(draws)
+    assert np.mean(ests) == pytest.approx(x.mean(), abs=max(4 * se, 1e-3))
+
+
 # ---------------------------------------------------------------------------
 # index-based data API
 # ---------------------------------------------------------------------------
@@ -178,26 +220,49 @@ def test_global_indices_concat_of_host_slices():
     np.testing.assert_array_equal(np.concatenate(parts), gids)
 
 
-def test_selective_pads_short_owned_pool(tmp_path):
-    """Multi-host + permuted ids: the host-owned subset of a window can be
-    smaller than k_local; batches must still have exactly k_local rows."""
+def test_selective_global_topk_across_hosts(tmp_path):
+    """Multi-host + permuted ids: every host plans the SAME global top-b
+    of the window (ranked by the gathered global score vector) and
+    materialises exactly its b/H-row shard of it — no per-host top-k_local
+    mixture."""
+    from repro.distributed.collectives import interleave_shards, pad_shard
+
     np.save(tmp_path / "c.npy", np.arange(2048, dtype=np.int32) % 97)
     run = _run_cfg("selective")
     run = dataclasses.replace(
         run, sampler=dataclasses.replace(run.sampler, selective_window=8))
-    src = MemmapLM(tmp_path / "c.npy", seq_len=16, seed=0,
-                   host_id=0, n_hosts=2)
-    sampler = make_sampler(run, src)
-    st = PipelineState()
-    short_seen = False
-    for step in range(30):
-        pool = src.global_indices(st, 8)
-        short_seen |= sampler.store.owned(pool).sum() < sampler.k_local
-        batch, meta, st = sampler.next_batch(st, step)
-        assert batch["tokens"].shape[0] == sampler.k_local
-        assert len(meta["gids"]) == sampler.k_local
-        assert sampler.store.owned(meta["gids"]).all()
-    assert short_seen          # the padding path actually ran
+    srcs = [MemmapLM(tmp_path / "c.npy", seq_len=16, seed=0,
+                     host_id=h, n_hosts=2) for h in range(2)]
+    samplers = [make_sampler(run, s) for s in srcs]
+
+    def sim_gather(local, *, host_id, n_hosts, n_global):
+        shards = [sp.store.sentinel_scores() for sp in samplers]
+        return interleave_shards(
+            np.stack([pad_shard(s, n_global, n_hosts) for s in shards]),
+            n_global)
+
+    for sp in samplers:
+        sp.gather_fn = sim_gather
+    rng = np.random.default_rng(0)
+    sts = [PipelineState(), PipelineState()]
+    full = MemmapLM(tmp_path / "c.npy", seq_len=16, seed=0,
+                    host_id=0, n_hosts=1)
+    for step in range(12):
+        scores = rng.uniform(0.1, 5.0, srcs[0].n).astype(np.float32)
+        outs = []
+        for h, sp in enumerate(samplers):       # plan phase (lockstep)...
+            batch, plan, sts[h] = sp.next_batch(sts[h], step)
+            assert batch["tokens"].shape[0] == sp.k_local
+            outs.append((batch, plan))
+        for sp, (_, plan) in zip(samplers, outs):   # ...then feedback
+            # same global feedback on every host; each keeps its shard
+            sp.observe(plan, scores[plan.gids])
+        (b0, p0), (b1, p1) = outs
+        assert p0.signature() == p1.signature()       # identical global plan
+        # the two host shards concatenate to the one global batch
+        want = full.gather(p0.gids, epoch=0)
+        np.testing.assert_array_equal(
+            np.concatenate([b0["tokens"], b1["tokens"]]), want["tokens"])
 
 
 def test_prefetcher_surfaces_worker_error_then_recovers():
