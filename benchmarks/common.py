@@ -32,6 +32,14 @@ def timeit(fn, *args, iters=20, warmup=3):
     return (time.perf_counter() - t0) / iters * 1e6  # us
 
 
+def iqm(ts):
+    """Interquartile mean: sheds GC / neighbour-interference spikes that
+    otherwise dominate CPU wall-clock at benchmark scale."""
+    ts = np.sort(np.asarray(ts))
+    lo, hi = len(ts) // 4, max(3 * len(ts) // 4, len(ts) // 4 + 1)
+    return float(np.mean(ts[lo:hi]))
+
+
 def emit(name, us, derived=""):
     print(f"{name},{us if us is not None else ''},{derived}", flush=True)
 

@@ -33,7 +33,7 @@ from pathlib import Path
 
 import numpy as np
 
-from benchmarks.common import emit, save_json
+from benchmarks.common import emit, iqm, save_json
 
 
 class _SpikySource:
@@ -103,13 +103,10 @@ def _run_mode(depth: int, ratio: int, steps: int, corpus: Path,
         losses.append(m["loss"])
 
     tr.fit(steps=steps, callback=cb)
-    dts = np.sort(np.diff(np.asarray(stamps))[5:])
-    # interquartile mean: sheds GC / neighbour interference spikes that
-    # otherwise dominate CPU step timing at this scale
-    lo, hi = len(dts) // 4, max(3 * len(dts) // 4, len(dts) // 4 + 1)
+    dts = np.diff(np.asarray(stamps))[5:]
     return {"depth": depth, "ratio": ratio, "steps": steps,
             "spike_p": spike_p, "spike_ms": spike_ms,
-            "ms_per_step": float(np.mean(dts[lo:hi]) * 1e3),
+            "ms_per_step": iqm(dts) * 1e3,
             "ms_per_step_p50": float(np.median(dts) * 1e3),
             "final_loss": float(np.mean(losses[-5:]))}
 

@@ -17,11 +17,12 @@ import traceback
 def main() -> None:
     from benchmarks import paper_figures as pf
     from benchmarks import (data_plane, roofline, sampler_compare,
-                            scoring_overhead, svrg_compare)
+                            scoring_overhead, selection_scale, svrg_compare)
 
     suites = {
         "sampler": sampler_compare.sampler_compare,
         "pipeline": data_plane.bench_data_plane,
+        "selection": selection_scale.bench_selection_scale,
         "fig1": pf.fig1_variance_reduction,
         "fig2": pf.fig2_correlation,
         "fig3": pf.fig3_convergence,

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import bench_model, emit, save_json, timeit
+from benchmarks.common import bench_model, emit, iqm, save_json, timeit
 from repro.models.lm import LM, token_stats_chunked, token_stats_fused, token_stats_naive
 
 
@@ -94,12 +94,9 @@ def _run_scoring_mode(mode: str, ratio: int, steps: int):
         losses.append(m["loss"])
 
     tr.fit(steps=steps, callback=cb)
-    dts = np.sort(np.diff(np.asarray(stamps))[5:])
-    # interquartile mean: sheds GC / CI-neighbour interference spikes that
-    # otherwise dominate CPU step timing at this scale
-    lo, hi = len(dts) // 4, max(3 * len(dts) // 4, len(dts) // 4 + 1)
+    dts = np.diff(np.asarray(stamps))[5:]
     return {"mode": mode, "ratio": ratio, "steps": steps,
-            "ms_per_step": float(np.mean(dts[lo:hi]) * 1e3),
+            "ms_per_step": iqm(dts) * 1e3,
             "ms_per_step_p50": float(np.median(dts) * 1e3),
             "final_loss": float(np.mean(losses[-5:]))}
 

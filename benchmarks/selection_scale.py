@@ -1,0 +1,146 @@
+"""Selection-plane scaling: per-plan O(n) gather vs sharded O(b·H).
+
+Measures ONE host's critical-path work for a single history-style
+proportional selection plan, sweeping dataset size n × simulated host
+count H:
+
+* ``gather`` — what ``imp.selection_impl="gather"`` pays per plan: pad
+  this host's shard, interleave the all-gathered stack back into the
+  global score vector (the host-side half of
+  ``collectives.gather_host_scores``), build the smoothed distribution
+  over all n slots, and draw b ids with ``rng.choice`` — every step of
+  it O(n).
+* ``sharded`` — what ``imp.selection_impl="sharded"`` pays: this shard's
+  sufficient stats (O(n/H)) + the O(H) stat reduction, exponential-race
+  keys + local bottom-(b+1) over the shard (O(n/H)), and the
+  deterministic merge of the (b+1)·H exchanged candidates.
+
+Peer contributions (other hosts' padded shards / stats / candidate
+blocks) are precomputed OUTSIDE the timed region — on a real pod they
+are computed concurrently on the other hosts, so the critical path is
+one host's work plus the exchange. Network time is NOT simulated; the
+bytes moved per plan are reported instead (4n per host for the gather
+vs ~20·(b+1)·H for the exchange), so the wall-clock gap here is a LOWER
+bound on the real one.
+
+Stats are interquartile means over per-plan wall-clock — regenerate only
+on an idle machine. Artifact: benchmarks/artifacts/BENCH_selection.json.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, iqm, save_json
+
+B_GLOBAL = 64          # the drawn batch per plan
+SMOOTHING, TEMP = 0.1, 1.0
+SEED, SALT = 0, 9173
+
+
+def _shards(n: int, H: int, frac_seen=0.9, seed=1):
+    from repro.sampler import ScoreStore
+    rng = np.random.default_rng(seed)
+    scores = rng.uniform(0.05, 6.0, n).astype(np.float32)
+    seen_ids = np.flatnonzero(rng.uniform(size=n) < frac_seen)
+    stores = []
+    for h in range(H):
+        st = ScoreStore(n, host_id=h, n_hosts=H)
+        st.update(seen_ids, scores[seen_ids])
+        stores.append(st)
+    return stores
+
+
+def bench_gather_path(stores, n, trials):
+    """Host 0's per-plan cost on the O(n) gather path."""
+    from repro.distributed.collectives import interleave_shards, pad_shard
+    from repro.sampler import ScoreStore
+    H = len(stores)
+    # the allgather RESULT (peers' padded shards) exists before the
+    # host-side reassembly starts; host 0 still pays its own pad
+    stack = np.stack([pad_shard(s.sentinel_scores(), n, H) for s in stores])
+    ts = []
+    for t in range(trials):
+        t0 = time.perf_counter()
+        stack[0] = pad_shard(stores[0].sentinel_scores(), n, H)
+        sg = interleave_shards(stack, n)
+        p = ScoreStore.distribution_from(sg, SMOOTHING, TEMP)
+        rng = np.random.default_rng(
+            np.random.SeedSequence([SEED, SALT, t]))
+        gids = rng.choice(n, size=B_GLOBAL, replace=True, p=p)
+        w = (1.0 / (n * p[gids])).astype(np.float32)
+        ts.append(time.perf_counter() - t0)
+        assert w.shape == (B_GLOBAL,)
+    return iqm(ts)
+
+
+def bench_sharded_path(stores, n, trials):
+    """Host 0's per-plan cost on the sharded exchange path."""
+    from repro.sampler import selection
+    H = len(stores)
+    kc = B_GLOBAL + 1
+    peer_stats = [selection.shard_stats(s.scores, s.seen, TEMP)
+                  for s in stores[1:]]
+    ts = []
+    for t in range(trials):
+        ctx = selection.hash_context(SEED, SALT, t)
+        # peers' candidate blocks arrive via the exchange; they are
+        # computed concurrently on the other hosts → not on this host's
+        # critical path
+        if H > 1:
+            stats_all = np.stack(
+                [selection.shard_stats(stores[0].scores, stores[0].seen,
+                                       TEMP)] + peer_stats).sum(axis=0)
+            dist_pre = selection.GlobalDist(stats_all, n, SMOOTHING, TEMP)
+            peer_blocks = [selection.local_candidates(
+                s.scores, s.seen, s.global_ids(np.arange(s.n_local)),
+                dist_pre, kc, ctx=ctx) for s in stores[1:]]
+        t0 = time.perf_counter()
+        local = selection.shard_stats(stores[0].scores, stores[0].seen, TEMP)
+        stats = (np.stack([local] + peer_stats).sum(axis=0)
+                 if H > 1 else local)
+        dist = selection.GlobalDist(stats, n, SMOOTHING, TEMP)
+        blk = selection.local_candidates(
+            stores[0].scores, stores[0].seen,
+            stores[0].global_ids(np.arange(stores[0].n_local)),
+            dist, kc, ctx=ctx)
+        blocks = [blk] + peer_blocks if H > 1 else [blk]
+        cand = {k: np.concatenate([b[k] for b in blocks]) for k in blk}
+        gids, probs, thr = selection.merge_topk(cand, B_GLOBAL)
+        w = selection.ht_weights(probs, thr, n)
+        ts.append(time.perf_counter() - t0)
+        assert w.shape == (B_GLOBAL,)
+    return iqm(ts)
+
+
+def bench_selection_scale(ns=(10_000, 100_000, 1_000_000),
+                          hosts=(1, 8, 32), trials=30):
+    """O(n) gather vs sharded top-k exchange → BENCH_selection.json."""
+    out = {"b": B_GLOBAL, "trials": trials}
+    for n in ns:
+        for H in hosts:
+            stores = _shards(n, H)
+            g_ms = bench_gather_path(stores, n, trials) * 1e3
+            s_ms = bench_sharded_path(stores, n, trials) * 1e3
+            key = f"n{n}.h{H}"
+            out[key] = {
+                "n": n, "hosts": H,
+                "gather_ms_per_plan": round(g_ms, 4),
+                "sharded_ms_per_plan": round(s_ms, 4),
+                "speedup": round(g_ms / s_ms, 2),
+                # payload a host must receive per plan (f32 scores vs
+                # (gid i64 + key f64 + prob f64) candidate rows)
+                "gather_bytes": 4 * n,
+                "exchange_bytes": 24 * (B_GLOBAL + 1) * H,
+            }
+            emit(f"selection.{key}.gather_ms", round(g_ms, 3))
+            emit(f"selection.{key}.sharded_ms", round(s_ms, 3))
+            emit(f"selection.{key}.speedup", None,
+                 f"gather/sharded={g_ms / s_ms:.2f}")
+    save_json("BENCH_selection", out)
+    return out
+
+
+if __name__ == "__main__":
+    bench_selection_scale()

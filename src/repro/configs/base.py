@@ -204,6 +204,13 @@ class ISConfig:
     # go one step stale — selection tolerates that). Only applies to
     # engine-backed host-side schemes (sampler.host_score).
     overlap_scoring: bool = True
+    # store-backed selection plane (history / selective): "gather" rebuilds
+    # the full O(n) global score vector per plan (exact PR-4 semantics,
+    # bitwise identical at any host count); "sharded" (default) selects
+    # from score shards — Gumbel/exponential top-k candidate exchange +
+    # O(1) sufficient-stat collectives, O(n/H + b·H) per plan instead of
+    # O(n). See repro.sampler.selection.
+    selection_impl: str = "sharded"
 
     def resolved_tau_th(self, b: int) -> float:
         if self.tau_th > 0:

@@ -7,6 +7,8 @@ run anywhere. The special axis name ``"dp"`` expands to ("pod", "data").
 """
 from __future__ import annotations
 
+import itertools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -96,6 +98,53 @@ def _require_multiprocess(name, n_hosts):
 
 
 
+_KV_TIMEOUT_MS = 120_000
+_kv_seq = itertools.count()
+
+
+def _kv_allgather(v: np.ndarray) -> np.ndarray:
+    """Fixed-shape all-gather through the jax.distributed coordination
+    service (KV store + barrier). XLA's CPU backend has no multi-process
+    computations, so CPU multi-process launches — the 2-process CI smoke,
+    dev rigs — ride this instead of ``process_allgather``. Every process
+    must issue its collectives in the same order (standard SPMD): the
+    monotonic call counter is the rendezvous id."""
+    from jax._src import distributed
+    client = distributed.global_state.client
+    if client is None:
+        raise RuntimeError("_kv_allgather: jax.distributed is not "
+                           "initialized (call jax.distributed.initialize)")
+    pid, n = jax.process_index(), jax.process_count()
+    key = f"repro/ag{next(_kv_seq)}"
+    client.key_value_set(f"{key}/{pid}", v.tobytes().hex())
+    client.wait_at_barrier(f"{key}/ready", timeout_in_ms=_KV_TIMEOUT_MS)
+    shards = [np.frombuffer(
+        bytes.fromhex(client.blocking_key_value_get(f"{key}/{i}",
+                                                    _KV_TIMEOUT_MS)),
+        v.dtype).reshape(v.shape) for i in range(n)]
+    # best-effort cleanup once everyone has read (long CPU runs would
+    # otherwise grow the coordinator's store without bound)
+    client.wait_at_barrier(f"{key}/done", timeout_in_ms=_KV_TIMEOUT_MS)
+    if pid == 0:
+        try:
+            client.key_value_delete(f"{key}/")
+        except Exception:
+            pass
+    return np.stack(shards)
+
+
+def _process_allgather(v) -> np.ndarray:
+    """The one cross-process all-gather all collectives ride: XLA
+    ``process_allgather`` on accelerator backends, the coordination-
+    service KV path on CPU (where XLA has no multi-process programs).
+    Returns the (n_processes, ...) stack, identical on every process."""
+    v = np.asarray(v)
+    if jax.default_backend() == "cpu":
+        return _kv_allgather(v)
+    from jax.experimental import multihost_utils
+    return np.asarray(multihost_utils.process_allgather(v))
+
+
 def strided_shard_size(n_global: int, host_id: int, n_hosts: int) -> int:
     """Slots host ``host_id`` owns under strided ownership
     ``{i : i % H == h}`` — ``ceil((n - h) / H)``, correct for ANY
@@ -164,9 +213,7 @@ def gather_host_scores(local_scores, *, host_id=None, n_hosts=None,
     if local.size != expect:
         raise ValueError(f"host {host_id}/{n_hosts} shard has {local.size} "
                          f"slots, expected {expect} for n={n_global}")
-    from jax.experimental import multihost_utils
-    shards = np.asarray(multihost_utils.process_allgather(
-        pad_shard(local, n_global, n_hosts)))
+    shards = _process_allgather(pad_shard(local, n_global, n_hosts))
     return interleave_shards(shards, n_global)
 
 
@@ -189,11 +236,10 @@ def allgather_rows(local_rows, *, n_rows: int, n_hosts=None):
     if int(n_rows) % n_hosts:
         raise ValueError(f"{n_rows} rows not divisible by {n_hosts} hosts")
     _require_multiprocess("allgather_rows", n_hosts)
-    from jax.experimental import multihost_utils
     out = {}
     for k, v in tree.items():
         v = np.asarray(v)
-        shards = np.asarray(multihost_utils.process_allgather(v))
+        shards = _process_allgather(v)
         out[k] = shards.reshape((-1,) + v.shape[1:])[:n_rows]
     return out["x"] if single else out
 
@@ -216,14 +262,51 @@ def exchange_rows(contrib, row_mask, *, lo: int, hi: int, n_hosts=None):
                              f"({int((~row_mask).sum())} unfilled)")
         return {k: np.asarray(v)[lo:hi] for k, v in contrib.items()}
     _require_multiprocess("exchange_rows", n_hosts)
-    from jax.experimental import multihost_utils
     out = {}
     for k, v in contrib.items():
         v = np.where(row_mask.reshape((-1,) + (1,) * (np.asarray(v).ndim - 1)),
                      np.asarray(v), 0)
-        shards = np.asarray(multihost_utils.process_allgather(v))
+        shards = _process_allgather(v)
         out[k] = shards.sum(axis=0)[lo:hi].astype(np.asarray(v).dtype)
     return out
+
+
+# ---------------------------------------------------------------------------
+# sharded-selection collectives: O(1) stats + O(b·H) candidate exchange
+# ---------------------------------------------------------------------------
+def allreduce_stats(local_stats, *, n_hosts=None):
+    """Sum tiny per-shard sufficient-stat vectors across hosts — the O(1)
+    collective behind the sharded selection path's τ-gate, smoothing
+    normalizer and staleness-decay attractor (``repro.sampler.selection``
+    owns the math). Implemented as all-gather + host-order sum so every
+    host computes the bitwise-identical reduction; identity
+    single-process."""
+    local = np.asarray(local_stats, np.float64)
+    n_hosts = jax.process_count() if n_hosts is None else int(n_hosts)
+    if n_hosts == 1:
+        return local.copy()
+    _require_multiprocess("allreduce_stats", n_hosts)
+    return _process_allgather(local).sum(axis=0)
+
+
+def exchange_topk(candidates, *, k_each: int, n_hosts=None):
+    """Exchange fixed-size per-host candidate blocks — the O(b·H)
+    selection-plane collective that replaces the O(n) score gather.
+
+    ``candidates`` is a dict of (k_each, ...) arrays (this host's padded
+    local top-k block: ids/keys/probs or positions/priorities); the
+    result concatenates every host's block host-major, ``(k_each·H, ...)``
+    per key, identical on all hosts — the deterministic merge runs on the
+    same bytes everywhere. Rides ``allgather_rows``; identity
+    single-process."""
+    n_hosts = jax.process_count() if n_hosts is None else int(n_hosts)
+    for k, v in candidates.items():
+        if np.asarray(v).shape[0] != int(k_each):
+            raise ValueError(f"candidate block {k!r} has "
+                             f"{np.asarray(v).shape[0]} rows != k_each "
+                             f"{k_each} (blocks must be padded)")
+    return allgather_rows(candidates, n_rows=int(k_each) * n_hosts,
+                          n_hosts=n_hosts)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,58 @@
+"""jit'd public wrapper for the fused race-key + partial-top-k hot loop.
+
+On TPU the key generation runs as the Pallas kernel; elsewhere (this CPU
+container) the kernel body executes in interpret mode. The partial top-k
+over the generated keys (``lax.top_k`` of the negated keys → the k
+SMALLEST race keys, i.e. the winners) runs in the same jit, so the whole
+per-shard selection hot loop — hash, probability, key, top-k — is one
+fused device program. Mirrors the ``ce_score`` ops layout.
+
+The host-side numpy twin (``repro.sampler.selection.local_candidates``)
+computes identical uint32 hashes; its float tail is float64, so key
+VALUES agree to f32 precision and the selected candidate sets agree
+whenever keys are not pathologically tied.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.topk_keys.topk_keys import race_keys_pallas
+
+
+def _on_tpu():
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("k", "host_id", "n_hosts",
+                                             "n_global", "smoothing",
+                                             "inv_temp", "block_t"))
+def topk_race_keys(scores, seen, ctx, fill_pow, total, *, k, host_id=0,
+                   n_hosts=1, n_global=None, smoothing=0.1, inv_temp=1.0,
+                   block_t=1024):
+    """This shard's k winning candidates of one proportional draw.
+
+    scores/seen: (n_local,) shard arrays; ctx: the plan's
+    ``selection.hash_context`` (uint32); fill_pow/total: the reduced
+    sufficient-stat scalars (traced — they change every plan, the program
+    never recompiles). Returns (keys, slots): the k smallest race keys
+    ascending + their local slot indices (global id = slot·H + host_id).
+    """
+    n_local = scores.shape[0]
+    n_global = n_local if n_global is None else n_global
+    gids = (jnp.arange(n_local, dtype=jnp.uint32) * jnp.uint32(n_hosts)
+            + jnp.uint32(host_id))
+    lam = float(smoothing)
+    fparams = jnp.stack([
+        jnp.asarray(fill_pow, jnp.float32),
+        jnp.float32(1.0 - lam) / jnp.asarray(total, jnp.float32),
+        jnp.float32(lam / n_global),
+        jnp.float32(inv_temp)])
+    r = race_keys_pallas(jnp.asarray(scores, jnp.float32),
+                         jnp.asarray(seen, jnp.float32), gids,
+                         jnp.asarray(ctx, jnp.uint32).reshape(1), fparams,
+                         block_t=block_t, interpret=not _on_tpu())
+    neg, slots = jax.lax.top_k(-r, k)
+    return -neg, slots

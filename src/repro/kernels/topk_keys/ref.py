@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the fused race-key kernel.
+
+Same math, no tiling: hash (ctx, gid) → uniform → exponential, divided by
+the smoothed/sharpened proposal probability. The float32 twin of
+``repro.sampler.selection.local_candidates``'s float64 host path.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.topk_keys.topk_keys import race_keys_math
+
+
+def race_keys_ref(scores, seen, gids_u32, ctx: int, *, fill_pow, total,
+                  n_global, smoothing=0.1, inv_temp=1.0):
+    """scores (n_local,) / seen (n_local,) / gids_u32 (n_local,) → race
+    keys (n_local,) f32. ``total``/``fill_pow`` are the reduced global
+    normalizer S̃ and unseen fill mass; ``n_global`` is the dataset size
+    (the λ-mixture's uniform mass is λ/n over GLOBAL ids)."""
+    lam = float(smoothing)
+    return race_keys_math(
+        jnp.asarray(scores, jnp.float32),
+        jnp.asarray(seen, jnp.float32),
+        jnp.asarray(gids_u32, jnp.uint32),
+        jnp.uint32(ctx),
+        jnp.float32(fill_pow),
+        jnp.float32(1.0 - lam) / jnp.float32(total),
+        jnp.float32(lam) / jnp.float32(n_global),
+        jnp.float32(inv_temp))

@@ -5,6 +5,7 @@ epochs; ``Sampler`` schemes (uniform / presample / history / selective)
 decide which examples each training step materialises. See
 ``repro.sampler.schemes`` for the scheme contract.
 """
+from repro.sampler import selection
 from repro.sampler.assembly import Assembler
 from repro.sampler.schemes import (SCHEMES, HistorySampler,
                                    HostPresampleSampler, PresampleSampler,
@@ -14,4 +15,4 @@ from repro.sampler.store import ScoreStore
 
 __all__ = ["ScoreStore", "Sampler", "UniformSampler", "PresampleSampler",
            "HostPresampleSampler", "HistorySampler", "SelectiveSampler",
-           "SCHEMES", "make_sampler", "Assembler"]
+           "SCHEMES", "make_sampler", "Assembler", "selection"]

@@ -48,10 +48,19 @@ Schemes:
   global top-b (unseen ids rank highest, so everything is visited).
   Deliberately biased — no weights.
 
+Selection implementations (``imp.selection_impl``): store-backed schemes
+(``history`` / ``selective``) read the score memory either through the
+full O(n) strided gather (``"gather"``, exact PR-4 semantics) or through
+the sharded O(b) path (``"sharded"``, default): Gumbel/exponential-key
+top-k candidate exchange plus O(1) sufficient-stat collectives — see
+``repro.sampler.selection``.
+
 Multi-host note: under a true multi-process launch the collectives ride
-``jax.experimental.multihost_utils``; a SIMULATED multi-host run (tests)
-injects ``sampler.gather_fn`` (strided score gather) and
-``sampler.row_gather_fn`` (contiguous row-shard gather) instead.
+``jax.experimental.multihost_utils`` (coordination-service fallback on
+CPU); a SIMULATED multi-host run (tests) injects ``sampler.gather_fn``
+(strided score gather), ``sampler.row_gather_fn`` (contiguous row-shard
+gather), ``sampler.reduce_fn`` (sufficient-stat allreduce) and
+``sampler.topk_fn`` (candidate exchange) instead.
 """
 from __future__ import annotations
 
@@ -60,6 +69,7 @@ import numpy as np
 
 from repro.data.pipeline import PipelineState
 from repro.data.plan import BatchPlan
+from repro.sampler import selection
 from repro.sampler.assembly import Assembler
 from repro.sampler.store import ScoreStore
 
@@ -86,10 +96,13 @@ class Sampler:
         self.assembler = assembler or Assembler(source)
         self._epoch = np.zeros((), np.int64)
         self.engine = None       # repro.scoring.ScoreEngine (bind_engine)
+        self.impl = self.icfg.selection_impl   # "gather" | "sharded"
         # simulated multi-host runs inject these; None → the production
         # multihost_utils collectives (identity when n_hosts == 1)
         self.gather_fn = None       # strided store-shard gather
         self.row_gather_fn = None   # contiguous row-shard gather
+        self.reduce_fn = None       # sufficient-stat allreduce (sharded)
+        self.topk_fn = None         # candidate-block exchange (sharded)
 
     # global rows the device step sees per plan
     @property
@@ -103,7 +116,27 @@ class Sampler:
             self.store.decay(self._global_seen_mean())
             self._epoch = np.asarray(epoch, np.int64)
 
+    def _reduce_stats(self, temperature: float) -> np.ndarray:
+        """Global sufficient stats [Σs_seen, #seen, Σs̃, Σs̃²] — the O(1)
+        collective the sharded path reads instead of the full vector.
+        An injected ``reduce_fn`` (simulated multi-host) receives the
+        per-shard stats builder and applies it to every in-process store
+        at this lockstep point."""
+        def local_stats(store):
+            return selection.shard_stats(store.scores, store.seen,
+                                         temperature)
+        if self.reduce_fn is not None:
+            return np.asarray(self.reduce_fn(local_stats), np.float64)
+        from repro.distributed.collectives import allreduce_stats
+        return np.asarray(allreduce_stats(local_stats(self.store),
+                                          n_hosts=self.n_hosts), np.float64)
+
     def _global_seen_mean(self):
+        if self.impl == "sharded":
+            # staleness-decay attractor from the O(1) stats allreduce —
+            # no O(n) gather at the epoch tick
+            stats = self._reduce_stats(1.0)
+            return float(stats[0] / stats[1]) if stats[1] else None
         if self.n_hosts == 1:
             return None                   # local mean IS the global mean
         sg = self.store.global_scores(self.gather_fn)
@@ -331,10 +364,24 @@ class HostPresampleSampler(Sampler):
 
 class HistorySampler(Sampler):
     """Dataset-level IS from the persistent score memory — sampled from
-    the GLOBAL store distribution so every host draws the same plan."""
+    the GLOBAL store distribution so every host draws the same plan.
+
+    Two selection implementations (``imp.selection_impl``):
+
+    * ``"gather"`` — reassemble the O(n) global vector (gate-cadence
+      cached), sample b ids WITH replacement ∝ p, weights 1/(n·pᵢ).
+    * ``"sharded"`` (default) — O(1) sufficient-stat collectives refresh
+      the τ/coverage gate every plan, and the sample is the exponential-
+      race (Gumbel) top-b over score shards with an O(b·H) candidate
+      exchange: probability-proportional-to-p WITHOUT replacement, with
+      the race-threshold Horvitz–Thompson weights keeping the estimator
+      unbiased (``repro.sampler.selection``). Plan cost O(n/H + b·H)
+      instead of O(n).
+    """
 
     scheme = "history"
     plan_is_pure = False     # plans read the (mutable) score memory
+    SALT = 9173              # the scheme's shared-PRNG / hash salt
 
     def __init__(self, run_cfg, source, assembler=None):
         super().__init__(run_cfg, source, assembler)
@@ -343,6 +390,10 @@ class HistorySampler(Sampler):
         self._cov_global = 0.0                     # gate-cadence coverage
         self._gate_dirty = False                   # refresh due at next plan
         self.k_local = self.b // self.n_hosts
+        if self.impl == "sharded" and source.n <= self.b:
+            raise ValueError(f"history[sharded] needs n > batch "
+                             f"({source.n} <= {self.b}): the WOR sample + "
+                             f"HT threshold need b+1 distinct examples")
 
     @property
     def active(self) -> bool:
@@ -367,28 +418,56 @@ class HistorySampler(Sampler):
         self._gate_dirty = False
         # no extra smoothing: the store's per-example EMA already damps
         # minibatch noise, the gate just reads the current dataset-level τ
-        sg = self.store.global_scores(self.gather_fn)
+        sg = self.store.global_scores(self.gather_fn, use_cache=True)
         p = self.store.distribution_from(sg, self.cfg.smoothing,
                                          self.cfg.temperature)
         self.tau_gate = np.asarray(self.store.tau_from(p), np.float64)
         self._cov_global = float((sg >= 0).mean())
         return p
 
+    def _warmup_plan(self, pstate: PipelineState, step: int):
+        # warm-up: uniform sequential plan, unit weights; scores fill
+        # the store
+        gids = self.source.global_indices(pstate, self.b)
+        plan = BatchPlan(step=step, epoch=pstate.epoch, gids=gids,
+                         weights=np.ones((self.b,), np.float32))
+        return plan, pstate.advance(self.b, self.source.n)
+
+    def _plan_sharded(self, pstate: PipelineState, step: int):
+        """O(b) selection: the gate, normalizer and sample all derive
+        from this plan's O(1) stats allreduce + O(b·H) candidate
+        exchange — never the O(n) gather. The stats are reduced at EVERY
+        plan (they are the smoothing normalizer the keys need fresh), so
+        the τ/coverage gate rides along at plan cadence for free."""
+        dist = selection.GlobalDist(self._reduce_stats(self.cfg.temperature),
+                                    n=self.store.n,
+                                    smoothing=self.cfg.smoothing,
+                                    temperature=self.cfg.temperature)
+        self.tau_gate = np.asarray(dist.tau(), np.float64)
+        self._cov_global = dist.coverage
+        if not self.active:
+            return self._warmup_plan(pstate, step)
+        gids, probs, w, _ = selection.sample_sharded(
+            self.store, dist, self.b, seed=self.seed, salt=self.SALT,
+            step=step, exchange=self.topk_fn, n_hosts=self.n_hosts)
+        plan = BatchPlan(step=step, epoch=pstate.epoch, gids=gids,
+                         probs=probs, weights=w,
+                         is_flag=max(float(self.tau_gate), 1.0))
+        return plan, pstate.advance(self.b, self.source.n)
+
     def plan(self, pstate: PipelineState, step: int):
+        if self.impl == "sharded":
+            return self._plan_sharded(pstate, step)
         p = self._maybe_refresh_gate()
         if not self.active:
-            # warm-up: uniform sequential plan, unit weights; scores fill
-            # the store
-            gids = self.source.global_indices(pstate, self.b)
-            plan = BatchPlan(step=step, epoch=pstate.epoch, gids=gids,
-                             weights=np.ones((self.b,), np.float32))
-            return plan, pstate.advance(self.b, self.source.n)
+            return self._warmup_plan(pstate, step)
         if p is None:
             p = self.store.global_distribution(self.cfg.smoothing,
                                                self.cfg.temperature,
-                                               gather_fn=self.gather_fn)
+                                               gather_fn=self.gather_fn,
+                                               use_cache=True)
         rng = np.random.default_rng(
-            np.random.SeedSequence([self.seed, 9173, int(step)]))
+            np.random.SeedSequence([self.seed, self.SALT, int(step)]))
         gids = rng.choice(self.store.n, size=self.b, replace=True,
                           p=p).astype(np.int64)
         # unbiased for the global mean: wᵢ = 1/(n·pᵢ), E_p[w·x] = x̄
@@ -436,7 +515,13 @@ class SelectiveSampler(Sampler):
     the score memory instead of a fresh scoring pass (the memory is what
     makes this cheaper than the original Biggest-Losers forward). The
     window is ranked by the GLOBAL score vector, so every host trains on
-    its shard of the one global top-b — not a per-host top-k_local."""
+    its shard of the one global top-b — not a per-host top-k_local.
+
+    On the ``"sharded"`` impl each host ranks only the window rows it
+    owns and exchanges b candidates (pool position + priority) — the
+    merged global top-b is BITWISE identical to ranking the gathered
+    vector (priorities are raw stored floats, ties broken by pool
+    position on both paths), with O(W/H + b·H) cost instead of O(n)."""
 
     scheme = "selective"
     plan_is_pure = False     # plans read the (mutable) score memory
@@ -455,13 +540,25 @@ class SelectiveSampler(Sampler):
 
     def plan(self, pstate: PipelineState, step: int):
         pool = self.source.global_indices(pstate, self.window)
-        sg = self.store.global_scores(self.gather_fn)
-        pri = sg[pool].astype(np.float64)
-        # never-seen ids rank highest (optimistic init: visit everything)
-        pri = np.where(pri >= 0, pri, np.inf)
-        # stable partial sort: ties (e.g. all-unseen cold start) keep pool
-        # order, so the ranking is deterministic on every host
-        order = np.argsort(-pri, kind="stable")[:self.b]
+        if self.impl == "sharded":
+            def block(store):
+                return selection.local_rank_candidates(pool, store, self.b)
+            if self.topk_fn is not None:        # simulated multi-host
+                cand = self.topk_fn(block, k_each=self.b,
+                                    n_hosts=self.n_hosts)
+            else:
+                from repro.distributed.collectives import exchange_topk
+                cand = exchange_topk(block(self.store), k_each=self.b,
+                                     n_hosts=self.n_hosts)
+            order = selection.merge_rank(cand, self.b)
+        else:
+            sg = self.store.global_scores(self.gather_fn, use_cache=True)
+            pri = sg[pool].astype(np.float64)
+            # never-seen ids rank highest (optimistic init: visit everything)
+            pri = np.where(pri >= 0, pri, np.inf)
+            # stable partial sort: ties (e.g. all-unseen cold start) keep
+            # pool order, so the ranking is deterministic on every host
+            order = np.argsort(-pri, kind="stable")[:self.b]
         plan = BatchPlan(step=step, epoch=pstate.epoch, gids=pool[order],
                          is_flag=1.0)
         return plan, pstate.advance(self.window, self.source.n)
@@ -473,6 +570,10 @@ SCHEMES = {c.scheme: c for c in
 
 
 def make_sampler(run_cfg, source, assembler=None) -> Sampler:
+    if run_cfg.imp.selection_impl not in ("gather", "sharded"):
+        raise ValueError(
+            f"unknown imp.selection_impl {run_cfg.imp.selection_impl!r}; "
+            f"have ('gather', 'sharded')")
     scheme = run_cfg.sampler.scheme
     if scheme == "presample" and run_cfg.sampler.host_score:
         # engine-backed host-side Algorithm 1 (scoring off the update path)

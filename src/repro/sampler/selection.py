@@ -1,0 +1,319 @@
+"""Sharded O(b) proportional selection: Gumbel/exponential-key top-k with
+candidate exchange and sufficient-statistic collectives.
+
+The gather path (`imp.selection_impl="gather"`) reassembles the full O(n)
+global score vector for every history/selective ``BatchPlan``, so plan
+cost grows with the *dataset*, not the *batch* — at pod scale the
+selection plane becomes the step's serial tail and erodes the paper's
+B + 3b < 3τb margin. This module is the ``"sharded"`` implementation:
+hosts select from their own ``ScoreStore`` shards and exchange only O(b)
+candidates (Alain et al., 2015: distributed importance sampling pays when
+hosts exchange *proposals*, not the full score state).
+
+Three pieces, all bitwise-identical on every host by construction:
+
+* **Counter-based race keys.** Every (step, global id) gets a uniform
+  ``u ∈ (0,1)`` from a pure integer hash (no sequential PRNG stream to
+  slice), giving the exponential race key ``r_i = E_i / p_i`` with
+  ``E_i = −log u_i``. The k smallest ``r`` over the whole dataset are a
+  PPSWOR sample — probability-proportional-to-``p`` *without*
+  replacement (equivalently: the k largest Gumbel-perturbed
+  ``log p_i + G_i``; ``−log E`` is a standard Gumbel). Each host keys
+  only its own shard and takes a local bottom-(k+1); the global
+  bottom-(k+1) is contained in the union of the local ones, so hosts
+  exchange just ``(k+1)·H`` candidates (``collectives.exchange_topk``)
+  and an identical deterministic merge runs everywhere. No O(n)
+  materialisation, O(n/H) host work, O(b·H) network.
+* **Unbiasedness via the race threshold.** Conditioned on the (k+1)-th
+  smallest key τ*, each selected id was included with probability
+  ``π_i = P(E_i/p_i < τ*) = 1 − exp(−p_i·τ*)``, and the
+  Horvitz–Thompson weights ``w_i = 1/(n·π_i)`` keep the weighted-mean
+  estimator unbiased (the bottom-k sketch estimator of Cohen & Kaplan /
+  priority sampling) — the without-replacement analogue of the paper's
+  ``1/(n·p_i)``.
+* **Sufficient-stat collectives.** The smoothed/sharpened distribution
+  ``p_i = (1−λ)·s̃_i/S̃ + λ/n`` (``ScoreStore.distribution_from``) and
+  its τ only need four per-shard scalars — Σs_seen, #seen, Σs̃, Σs̃² —
+  so the τ-gate, the smoothing normalizer and the epoch staleness-decay
+  attractor ride an O(1) ``collectives.allreduce_stats`` instead of a
+  full-vector read (``GlobalDist`` is the closed form).
+
+The per-shard key-gen hot loop also ships as a fused jitted kernel
+(``repro.kernels.topk_keys``, Pallas on TPU) mirroring this module's
+numpy reference semantics.
+
+Determinism note: the merge is bitwise identical across the H hosts of a
+run (every host sees the same exchanged candidates and reduced scalars).
+Across *topologies* (H vs 1 host) the selection agrees but the reduced
+float64 stats may differ in final ulps (shard-wise summation order), so
+cross-topology checks compare ids exactly and weights to fp precision —
+unlike the gather path, which reassembles the identical vector at any H.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.distributed import collectives
+
+EPS = 1e-12          # the distribution_from score clamp, shared here
+_PAD_GID = -1        # candidate-block padding (filtered by the merges)
+
+
+# ---------------------------------------------------------------------------
+# counter-based uniforms: a pure function of (seed, salt, step, global id)
+# ---------------------------------------------------------------------------
+_M32 = np.uint32(0xFFFFFFFF)
+
+
+def _fmix32(x: np.ndarray) -> np.ndarray:
+    """murmur3's 32-bit finalizer (vectorized, wraps mod 2^32)."""
+    with np.errstate(over="ignore"):    # uint32 wrap IS the hash
+        x = x.astype(np.uint32)
+        x ^= x >> np.uint32(16)
+        x *= np.uint32(0x85EBCA6B)
+        x ^= x >> np.uint32(13)
+        x *= np.uint32(0xC2B2AE35)
+        x ^= x >> np.uint32(16)
+    return x
+
+
+def hash_context(seed: int, salt: int, step: int) -> int:
+    """The per-plan hash context: mixes (seed, scheme salt, step) once so
+    the per-id loop is a single multiply-xor-finalize. Pure int math —
+    the Pallas kernel computes the identical value."""
+    c = (int(seed) ^ (int(salt) * 0x9E3779B9) ^ (int(step) * 0xC2B2AE3D)) \
+        & 0xFFFFFFFF
+    return int(_fmix32(np.uint32(c)))
+
+
+def hash_uniform(gids, ctx: int) -> np.ndarray:
+    """Deterministic uniforms u(step, gid) ∈ (0,1), float64.
+
+    24 mantissa bits from a double-finalized 32-bit hash, offset by 2⁻²⁵
+    so u is never 0 (−log u stays finite). Identical on every host for
+    the same (ctx, gid) — this is what replaces the shared sequential
+    PRNG stream on the sharded path."""
+    g = np.atleast_1d(np.asarray(gids, np.int64))
+    with np.errstate(over="ignore"):    # uint32 wrap IS the hash
+        x = (g & 0xFFFFFFFF).astype(np.uint32) \
+            ^ ((g >> 32) & 0xFFFFFFFF).astype(np.uint32) \
+            * np.uint32(0x85EBCA6B)
+        h = _fmix32(x * np.uint32(0x9E3779B9) ^ np.uint32(ctx))
+        h = _fmix32(h + np.uint32(0x6A09E667))
+    return (h >> np.uint32(8)).astype(np.float64) * 2.0 ** -24 + 2.0 ** -25
+
+
+# ---------------------------------------------------------------------------
+# sufficient statistics → the global smoothed distribution, closed form
+# ---------------------------------------------------------------------------
+def shard_stats(scores, seen, temperature: float = 1.0) -> np.ndarray:
+    """This shard's contribution to the global distribution: the float64
+    4-vector [Σs_seen, #seen, Σs̃, Σs̃²] with s̃ = max(s, EPS)^(1/T) over
+    seen slots. Σ across hosts (``collectives.allreduce_stats``) is ALL
+    the state ``GlobalDist`` needs — the O(1) payload that replaces the
+    O(n) score gather for τ-gate / normalizer / decay-attractor reads."""
+    m = np.asarray(seen) != 0
+    s = np.where(m, np.asarray(scores, np.float64), 0.0)
+    sp = np.maximum(s, EPS)
+    if temperature != 1.0:
+        sp = sp ** (1.0 / temperature)
+    sp = np.where(m, sp, 0.0)       # unseen slots carry no mass
+    return np.array([s.sum(), float(m.sum()), sp.sum(),
+                     np.square(sp).sum()], np.float64)
+
+
+class GlobalDist:
+    """The global selection distribution, derived from reduced stats.
+
+    Matches ``ScoreStore.distribution_from`` (fill unseen with the seen
+    mean, clamp, sharpen by 1/T, normalize, mix λ with uniform) without
+    ever materialising the vector: per-id probabilities come from the
+    id's own shard-local score plus the reduced scalars, and τ/coverage
+    are closed forms of the same scalars."""
+
+    def __init__(self, stats, n: int, smoothing: float = 0.1,
+                 temperature: float = 1.0):
+        sum_raw, n_seen, sum_pow, sumsq_pow = np.asarray(stats, np.float64)
+        self.n = int(n)
+        self.lam = float(smoothing)
+        self.inv_t = 1.0 / float(temperature)
+        self.n_seen = int(round(float(n_seen)))
+        fill = (float(sum_raw) / self.n_seen) if self.n_seen else 1.0
+        self.fill_pow = max(fill, EPS) ** self.inv_t
+        n_unseen = self.n - self.n_seen
+        # S̃ = Σ s̃ with unseen slots carrying the fill mass
+        self.total = float(sum_pow) + n_unseen * self.fill_pow
+        self.total_sq = float(sumsq_pow) + n_unseen * self.fill_pow ** 2
+
+    @property
+    def coverage(self) -> float:
+        return self.n_seen / self.n if self.n else 0.0
+
+    def tau(self) -> float:
+        """τ² = n·Σp² expanded over the mixture:
+        n(1−λ)²·Σs̃²/S̃² + 2(1−λ)λ + λ² (the cross and uniform terms
+        telescope because Σs̃/S̃ = 1)."""
+        lam = self.lam
+        q = self.total_sq / (self.total ** 2) if self.total > 0 else 0.0
+        return float(np.sqrt(self.n * (1.0 - lam) ** 2 * q
+                             + 2.0 * (1.0 - lam) * lam + lam ** 2))
+
+    def probs(self, scores, seen) -> np.ndarray:
+        """p_i for arbitrary ids given their raw shard scores."""
+        m = np.asarray(seen).astype(bool)
+        sp = np.maximum(np.asarray(scores, np.float64), EPS)
+        if self.inv_t != 1.0:
+            sp = sp ** self.inv_t
+        sp = np.where(m, sp, self.fill_pow)
+        return (1.0 - self.lam) * sp / self.total + self.lam / self.n
+
+
+# ---------------------------------------------------------------------------
+# proportional sampling: local bottom-(k+1) → exchange → merge + HT weights
+# ---------------------------------------------------------------------------
+def local_candidates(scores, seen, gids, dist: GlobalDist, kc: int, *,
+                     ctx: int) -> dict:
+    """This shard's kc best proposal candidates: exponential race keys
+    r = −log(u)/p over the shard only, bottom-kc by (key, gid), padded to
+    a fixed kc rows (gid −1 / key +inf) so a fixed-shape exchange can
+    carry them. The fused device twin is ``repro.kernels.topk_keys``."""
+    gids = np.asarray(gids, np.int64)
+    p = dist.probs(scores, seen)
+    r = -np.log(hash_uniform(gids, ctx)) / p
+    k = min(int(kc), r.size)
+    idx = np.argpartition(r, k - 1)[:k] if r.size > k else np.arange(r.size)
+    order = np.lexsort((gids[idx], r[idx]))
+    idx = idx[order]
+    out = {"gid": np.full((kc,), _PAD_GID, np.int64),
+           "key": np.full((kc,), np.inf, np.float64),
+           "prob": np.zeros((kc,), np.float64)}
+    out["gid"][:k], out["key"][:k], out["prob"][:k] = gids[idx], r[idx], p[idx]
+    return out
+
+
+def local_candidates_kernel(store, dist: GlobalDist, kc: int, *,
+                            ctx: int, block_t: int = 1024) -> dict:
+    """The fused-kernel twin of ``local_candidates``: key-gen + partial
+    top-k run as one jitted device program (``repro.kernels.topk_keys``,
+    Pallas on TPU, interpret elsewhere); only the kc winners come back to
+    host, where their probabilities are recomputed in float64 for the
+    exchange. Keys are float32 on this path — candidate sets agree with
+    the host loop, key bytes do not, so a run must pick ONE path for all
+    hosts (``sample_sharded(use_kernel=...)``, default: kernel on TPU)."""
+    import jax
+
+    from repro.kernels.topk_keys.ops import topk_race_keys
+    kk = min(int(kc), store.n_local)
+    keys, slots = topk_race_keys(
+        store.scores, store.seen.astype(np.float32), np.uint32(ctx),
+        dist.fill_pow, dist.total, k=kk, host_id=store.host_id,
+        n_hosts=store.n_hosts, n_global=dist.n, smoothing=dist.lam,
+        inv_temp=dist.inv_t, block_t=block_t)
+    keys = np.asarray(jax.device_get(keys), np.float64)
+    slots = np.asarray(jax.device_get(slots), np.int64)
+    gids = store.global_ids(slots)
+    order = np.lexsort((gids, keys))
+    out = {"gid": np.full((int(kc),), _PAD_GID, np.int64),
+           "key": np.full((int(kc),), np.inf, np.float64),
+           "prob": np.zeros((int(kc),), np.float64)}
+    out["gid"][:kk] = gids[order]
+    out["key"][:kk] = keys[order]
+    out["prob"][:kk] = dist.probs(store.scores[slots[order]],
+                                  store.seen[slots[order]])
+    return out
+
+
+def merge_topk(cand: dict, k: int):
+    """Deterministic global merge of the exchanged candidate blocks: the
+    k smallest race keys win (ties broken by gid), and the (k+1)-th key
+    is the Horvitz–Thompson threshold τ*. Identical on every host —
+    everyone merges the same bytes."""
+    gid = np.asarray(cand["gid"], np.int64)
+    valid = gid >= 0
+    gid, key, prob = (gid[valid], np.asarray(cand["key"], np.float64)[valid],
+                      np.asarray(cand["prob"], np.float64)[valid])
+    if gid.size <= k:
+        raise ValueError(f"{gid.size} candidates for top-{k} — the HT "
+                         f"threshold needs k+1 (dataset must have n > k)")
+    order = np.lexsort((gid, key))
+    sel = order[:k]
+    return gid[sel], prob[sel], float(key[order[k]])
+
+
+def ht_weights(probs, threshold: float, n: int) -> np.ndarray:
+    """Unbiasedness weights for the race sample: conditioned on τ*, id i
+    is in iff E_i < p_i·τ*, so π_i = 1 − exp(−p_i·τ*) and the mean
+    estimator (1/n)Σ x_i/π_i ... = Σ w_i·x_i with w_i = 1/(n·π_i) is
+    unbiased (bottom-k sketches) — the WOR analogue of 1/(n·p_i)."""
+    pi = -np.expm1(-np.asarray(probs, np.float64) * float(threshold))
+    return (1.0 / (n * np.maximum(pi, 1e-300))).astype(np.float32)
+
+
+def sample_sharded(store, dist: GlobalDist, k: int, *, seed: int, salt: int,
+                   step: int, exchange=None, n_hosts: int = 1,
+                   use_kernel=None):
+    """Draw k global ids ∝ ``dist`` across host-sharded stores.
+
+    Each host keys only its own shard; ``collectives.exchange_topk``
+    (identity single-host) carries the (k+1)-per-host candidate blocks;
+    the merge and weights are pure functions of the exchanged bytes.
+    A SIMULATED multi-host run injects ``exchange``, which receives the
+    per-shard block *builder* instead of this host's block — the sim
+    applies it to every in-process store at the same lockstep point,
+    reproducing exactly what each real host would contribute.
+    ``use_kernel`` routes the key-gen + partial-top-k hot loop through
+    the fused ``repro.kernels.topk_keys`` device program (None → only on
+    TPU; the numpy loop is the CPU production path).
+    Returns (gids, probs, weights, threshold)."""
+    ctx = hash_context(seed, salt, step)
+    if use_kernel is None:
+        import jax
+        use_kernel = jax.default_backend() == "tpu"
+
+    def block(st):
+        if use_kernel:
+            return local_candidates_kernel(st, dist, k + 1, ctx=ctx)
+        return local_candidates(st.scores, st.seen,
+                                st.global_ids(np.arange(st.n_local)),
+                                dist, k + 1, ctx=ctx)
+
+    if exchange is not None:
+        cand = exchange(block, k_each=k + 1, n_hosts=n_hosts)
+    else:
+        cand = collectives.exchange_topk(block(store), k_each=k + 1,
+                                         n_hosts=n_hosts)
+    gids, probs, thr = merge_topk(cand, k)
+    return gids, probs, ht_weights(probs, thr, store.n), thr
+
+
+# ---------------------------------------------------------------------------
+# selective backprop: sharded global top-b ranking of a candidate window
+# ---------------------------------------------------------------------------
+def local_rank_candidates(pool, store, k: int) -> dict:
+    """This host's k best rows of the selective window, ranked exactly
+    like the gather path's stable argsort: priority = stored score
+    (never-seen → +inf, optimistic), ties broken by pool position. The
+    merged global top-k is bitwise identical to ranking the gathered
+    vector — priorities are raw stored floats, no arithmetic."""
+    pool = np.asarray(pool, np.int64)
+    pos = np.flatnonzero(store.owned(pool))
+    slots = store.slot(pool[pos])
+    pri = np.where(store.seen[slots].astype(bool),
+                   store.scores[slots].astype(np.float64), np.inf)
+    take = np.lexsort((pos, -pri))[:min(int(k), pos.size)]
+    out = {"pos": np.full((int(k),), _PAD_GID, np.int64),
+           "pri": np.full((int(k),), -np.inf, np.float64)}
+    out["pos"][:take.size] = pos[take]
+    out["pri"][:take.size] = pri[take]
+    return out
+
+
+def merge_rank(cand: dict, k: int) -> np.ndarray:
+    """Global top-k pool positions by (priority desc, pool position) —
+    the same total order as ``argsort(-pri, kind="stable")`` over the
+    full window."""
+    pos = np.asarray(cand["pos"], np.int64)
+    valid = pos >= 0
+    pos, pri = pos[valid], np.asarray(cand["pri"], np.float64)[valid]
+    order = np.lexsort((pos, -pri))[:k]
+    return pos[order]

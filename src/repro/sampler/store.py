@@ -48,6 +48,12 @@ class ScoreStore:
         self.seen = np.zeros((self.n_local,), np.uint8)
         self.updates = np.zeros((), np.int64)
         self._n_seen = 0   # incremental Σseen: coverage() stays O(1)
+        # write version + gather cache: every mutation (update/decay/load)
+        # bumps the version, so a cached global gather can never serve a
+        # post-observe read — see global_scores(use_cache=True)
+        self.version = 0
+        self._gcache = None
+        self._gcache_version = -1
 
     # -- id mapping -----------------------------------------------------------
     def owned(self, gids: np.ndarray) -> np.ndarray:
@@ -71,6 +77,12 @@ class ScoreStore:
         scores = np.asarray(scores, np.float32).reshape(-1)
         if gids.shape != scores.shape:
             raise ValueError(f"ids {gids.shape} vs scores {scores.shape}")
+        # invalidate the gather cache on the CALL, not the local write:
+        # update/decay calls are collective-lockstep across hosts, local
+        # writes are not (a host may own none of the batch's ids) — a
+        # local-write key would let one host serve a stale cache while
+        # its peers re-gather, forking the plans
+        self.version += 1
         keep = self.owned(gids) & (scores >= 0) & np.isfinite(scores)
         gids, scores = gids[keep], scores[keep]
         if gids.size == 0:
@@ -95,6 +107,7 @@ class ScoreStore:
         it at the epoch tick) so every host's shard decays toward the same
         attractor and the gathered global vector stays bitwise identical
         to a single-host run's."""
+        self.version += 1      # call-level invalidation (see update())
         m = self.seen.astype(bool)
         if not m.any():
             return
@@ -114,19 +127,38 @@ class ScoreStore:
         return np.where(self.seen.astype(bool), self.scores,
                         np.float32(-1.0)).astype(np.float32)
 
-    def global_scores(self, gather_fn=None) -> np.ndarray:
+    def global_scores(self, gather_fn=None, use_cache: bool = False
+                      ) -> np.ndarray:
         """The GLOBAL score vector (length n, ``-1`` where never seen),
         reassembled from every host's strided shard. Identity single-host;
         multi-process it rides ``collectives.gather_host_scores``; a
         simulated multi-host run (tests) injects ``gather_fn``.
+
+        ``use_cache=True`` is the amortization for exact-distribution
+        consumers (``global_distribution``, diagnostics, serving,
+        replans): repeated reads between writes reuse the last gathered
+        vector, and EVERY ``update``/``decay``/restore bumps
+        ``self.version`` so a stale cache can never serve a post-observe
+        plan. Note the training loop itself writes (observe) every step,
+        so plan-path reads stay O(n) per plan BY DESIGN on the gather
+        impl — fresh post-observe scores are the point; escaping the
+        per-plan O(n) is what ``imp.selection_impl="sharded"`` is for.
+        Treat the returned array as read-only.
         """
+        if use_cache and self._gcache is not None \
+                and self._gcache_version == self.version:
+            return self._gcache
         local = self.sentinel_scores()
         if self.n_hosts == 1:
-            return local
-        gather = gather_fn or gather_host_scores
-        return np.asarray(gather(local, host_id=self.host_id,
-                                 n_hosts=self.n_hosts, n_global=self.n),
-                          np.float32)
+            out = local
+        else:
+            gather = gather_fn or gather_host_scores
+            out = np.asarray(gather(local, host_id=self.host_id,
+                                    n_hosts=self.n_hosts, n_global=self.n),
+                             np.float32)
+        if use_cache:
+            self._gcache, self._gcache_version = out, self.version
+        return out
 
     @staticmethod
     def distribution_from(scores: np.ndarray, smoothing: float = 0.1,
@@ -169,12 +201,14 @@ class ScoreStore:
 
     def global_distribution(self, smoothing: float = 0.1,
                             temperature: float = 1.0,
-                            gather_fn=None) -> np.ndarray:
+                            gather_fn=None,
+                            use_cache: bool = False) -> np.ndarray:
         """p over the GLOBAL id space — what every host samples from so
         multi-host selection matches the paper's global ∝ ĝ distribution
         (identical on all hosts given the deterministic gather)."""
-        return self.distribution_from(self.global_scores(gather_fn),
-                                      smoothing, temperature)
+        return self.distribution_from(
+            self.global_scores(gather_fn, use_cache=use_cache),
+            smoothing, temperature)
 
     def sample_global(self, rng: np.random.Generator, k: int,
                       smoothing: float = 0.1, temperature: float = 1.0,
@@ -227,3 +261,4 @@ class ScoreStore:
         self.seen = seen.copy()
         self._n_seen = int(self.seen.astype(bool).sum())
         self.updates = np.asarray(d["updates"], np.int64).reshape(())
+        self.version += 1

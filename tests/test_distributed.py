@@ -35,6 +35,22 @@ def test_multidevice(check):
     _run(check)
 
 
+def test_two_process_jax_distributed_smoke():
+    """True multi-process launch (ROADMAP item): 2 OS processes under
+    jax.distributed drive every production collective — score gather,
+    row all-gather/exchange, stats allreduce, candidate exchange — plus
+    real sharded/gather plan chains, asserted digest-identical. CPU
+    rides the coordination-service KV fallback; the same call sites ride
+    multihost_utils on accelerator pods."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    r = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "mp_smoke.py"), "--launch"],
+        env=env, capture_output=True, text=True, timeout=540)
+    assert r.returncode == 0, f"{r.stdout}\n{r.stderr[-3000:]}"
+    assert "2-process launch smoke OK" in r.stdout
+
+
 def test_plan_determinism_across_two_processes():
     """The selection plane's acceptance check: TWO separate OS processes
     (disjoint 4-host subsets of an 8-host sharding, no shared memory)

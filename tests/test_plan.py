@@ -25,7 +25,7 @@ from repro.data.pipeline import (DataPlane, MemmapLM, PipelineState,
 from repro.data.plan import BatchPlan
 from repro.distributed.collectives import (interleave_shards, pad_shard,
                                            strided_shard_size)
-from repro.sampler import Assembler, ScoreStore, make_sampler
+from repro.sampler import (Assembler, ScoreStore, make_sampler, selection)
 
 
 # ---------------------------------------------------------------------------
@@ -222,54 +222,91 @@ N_EX = 100       # NOT divisible by 8: uneven store shards on purpose
 B_GLOBAL = 8
 
 
-def _run_cfg(scheme, **skw):
+def _run_cfg(scheme, impl="sharded", **skw):
     return RunConfig(
         model=get_config("lm-tiny"),
         shape=ShapeConfig("t", seq_len=16, global_batch=B_GLOBAL,
                           kind="train"),
         optim=OptimConfig(name="adamw", lr=1e-3),
-        imp=ISConfig(enabled=True, presample_ratio=2, tau_th=1.2),
+        imp=ISConfig(enabled=True, presample_ratio=2, tau_th=1.2,
+                     selection_impl=impl),
         sampler=SamplerConfig(scheme=scheme, min_coverage=0.25,
                               tau_th=1.001, temperature=0.5, **skw),
         remat=False)
 
 
 def _sim_hosts(run, H, seed=9):
-    """H host-sharded samplers + the in-process strided score gather.
+    """H host-sharded samplers + the in-process cross-host collectives.
 
-    The injected gather serves a SNAPSHOT the driver refreshes at each
-    lockstep phase boundary — a real multi-process gather is a collective
-    where every host contributes its shard at the same program point, so
-    a live read while the driver is still iterating hosts would model an
-    impossible interleaving.
+    All injected collectives serve a SNAPSHOT the driver refreshes at
+    each lockstep phase boundary — a real multi-process collective has
+    every host contribute its shard at the same program point, so a live
+    read while the driver is still iterating hosts would model an
+    impossible interleaving (e.g. during the epoch tick, host 3's stats
+    allreduce would see hosts 0-2's shards already decayed). The
+    sharded-path collectives (stats allreduce + candidate exchange)
+    receive the per-shard BLOCK BUILDER and apply it to every snapshot
+    shard, host-major — the same reduction order as
+    `collectives.allreduce_stats`/`exchange_topk`.
     """
     samplers = [make_sampler(run, SyntheticLM(
         run.model.vocab_size, 16, n_examples=N_EX, seed=seed, host_id=h,
         n_hosts=H)) for h in range(H)]
     board = {}
 
+    class _StoreSnap:
+        """A frozen view of one host's shard: copied arrays + the store's
+        (pure) id math — what that host would contribute to a collective
+        fired at the snapshot point."""
+
+        def __init__(self, store):
+            self.scores, self.seen = store.scores.copy(), store.seen.copy()
+            self.n, self.n_local = store.n, store.n_local
+            self.host_id, self.n_hosts = store.host_id, store.n_hosts
+            self.owned, self.slot = store.owned, store.slot
+            self.global_ids = store.global_ids
+
     def refresh():
         board["snap"] = interleave_shards(
             np.stack([pad_shard(s.store.sentinel_scores(), N_EX, H)
                       for s in samplers]), N_EX)
+        board["shards"] = [_StoreSnap(s.store) for s in samplers]
 
     def sim_gather(local, *, host_id, n_hosts, n_global):
         return board["snap"]
 
+    def sim_reduce(local_stats_fn):
+        return np.stack([local_stats_fn(sh)
+                         for sh in board["shards"]]).sum(axis=0)
+
+    def sim_topk(block_fn, *, k_each, n_hosts):
+        blocks = [block_fn(sh) for sh in board["shards"]]
+        return {k: np.concatenate([b[k] for b in blocks]) for k in blocks[0]}
+
     for s in samplers:
         s.gather_fn = sim_gather
+        s.reduce_fn = sim_reduce
+        s.topk_fn = sim_topk
     refresh()
     return samplers, refresh
 
 
+@pytest.mark.parametrize("impl", ["gather", "sharded"])
 @pytest.mark.parametrize("scheme", ["uniform", "presample", "history",
                                     "selective"])
-def test_plans_bitwise_identical_across_hosts(scheme):
+def test_plans_bitwise_identical_across_hosts(scheme, impl):
     """Every host derives the bitwise-identical BatchPlan per step, the
     plans match a single-host run step-for-step, and the host shards
-    concatenate to the single-host global batch."""
+    concatenate to the single-host global batch.
+
+    On the gather impl the single-host comparison is bitwise (the gather
+    reassembles the identical vector at any H). On the sharded impl the
+    EIGHT hosts are bitwise identical (everyone merges the same
+    exchanged bytes — the acceptance requirement) and the single-host
+    run agrees on the selected ids with weights equal to fp precision
+    (the reduced float64 stats may round differently shard-wise)."""
     H, steps = 8, 30
-    run = _run_cfg(scheme)
+    run = _run_cfg(scheme, impl=impl)
     samplers, refresh = _sim_hosts(run, H)
     single = make_sampler(run, SyntheticLM(
         run.model.vocab_size, 16, n_examples=N_EX, seed=9, host_id=0,
@@ -294,10 +331,22 @@ def test_plans_bitwise_identical_across_hosts(scheme):
             outs.append((batch, plan))
         sbatch, splan, sts[H] = single.next_batch(sts[H], step)
         sigs = {p.signature() for _, p in outs}
-        assert sigs == {splan.signature()}, f"fork at step {step}"
+        assert len(sigs) == 1, f"hosts forked at step {step}"
+        if impl == "gather":
+            assert sigs == {splan.signature()}, f"fork at step {step}"
+        else:
+            p0 = outs[0][1]
+            np.testing.assert_array_equal(p0.gids, splan.gids,
+                                          err_msg=f"step {step}")
+            if splan.weights is not None:
+                np.testing.assert_allclose(p0.weights, splan.weights,
+                                           rtol=1e-6)
+            if splan.probs is not None:
+                np.testing.assert_allclose(p0.probs, splan.probs,
+                                           rtol=1e-9)
         np.testing.assert_array_equal(
             np.concatenate([b["tokens"] for b, _ in outs]), sbatch["tokens"])
-        if splan.weights is not None:
+        if impl == "gather" and splan.weights is not None:
             np.testing.assert_array_equal(
                 np.concatenate([b["weights"] for b, _ in outs]),
                 sbatch["weights"])
@@ -371,6 +420,119 @@ def test_presample_host_plans_identical_across_hosts():
             np.concatenate([b["tokens"] for b, _, _ in outs]), ref["tokens"])
         saw_is |= splan.is_flag > 0
     assert saw_is                      # the resampling branch was exercised
+
+
+# ---------------------------------------------------------------------------
+# sharded selection: distributional + exactness properties
+# ---------------------------------------------------------------------------
+def test_selective_sharded_plans_bitwise_equal_gather():
+    """The sharded selective ranking (local top-b + candidate exchange)
+    is BITWISE the gather path's stable argsort — priorities are raw
+    stored floats, ties break by pool position on both paths."""
+    H, steps = 4, 20
+    runs = {impl: _run_cfg("selective", impl=impl)
+            for impl in ("gather", "sharded")}
+    rng = np.random.default_rng(2)
+    sampler_sets = {impl: _sim_hosts(run, H, seed=11)
+                    for impl, run in runs.items()}
+    sts = {impl: [PipelineState() for _ in range(H)] for impl in runs}
+    for step in range(steps):
+        scores = rng.uniform(0.05, 5.0, N_EX).astype(np.float32)
+        plans = {}
+        for impl, (samplers, refresh) in sampler_sets.items():
+            refresh()
+            outs = []
+            for h, sp in enumerate(samplers):
+                _, plan, sts[impl][h] = sp.next_batch(sts[impl][h], step)
+                outs.append(plan)
+            assert len({p.signature() for p in outs}) == 1
+            plans[impl] = outs[0]
+            for sp, plan in zip(samplers, outs):
+                sp.observe(plan, scores[plan.gids])
+        assert plans["gather"].signature() == plans["sharded"].signature(), \
+            f"impl fork at step {step}"
+
+
+def test_sharded_selection_chi_square_matches_proportional():
+    """Distributional equivalence: sharded Gumbel/exponential top-k
+    inclusion frequencies match exact proportional sampling.
+
+    Two-sample chi-square between (a) the sharded race sample's
+    inclusion counts and (b) ``ScoreStore.sample_global``'s (the exact
+    WR reference) over the same trial count, ids binned by probability
+    mass. b/n is small, so the WOR-vs-WR marginal skew is far below the
+    test's noise floor, while a wrong p (unsorted keys, bad normalizer,
+    missing fill) shifts frequencies at order 1 and fails hard."""
+    N, b, trials = 400, 6, 2500
+    rng = np.random.default_rng(8)
+    sc = rng.uniform(0.05, 6.0, N).astype(np.float32)
+    store = ScoreStore(N)
+    store.update(np.arange(N), sc)
+    stats = selection.shard_stats(store.scores, store.seen, 1.0)
+    dist = selection.GlobalDist(stats, N, 0.1, 1.0)
+    counts_race = np.zeros(N, np.int64)
+    for t in range(trials):
+        gids, _, _, _ = selection.sample_sharded(
+            store, dist, b, seed=3, salt=77, step=t)
+        counts_race[gids] += 1
+    counts_ref = np.zeros(N, np.int64)
+    for t in range(trials):
+        gids, _ = store.sample_global(np.random.default_rng(t), b, 0.1, 1.0)
+        counts_ref[np.unique(gids)] += 1      # inclusion, like the race
+    # bin ids by p so every cell has a healthy expected count
+    p = store.global_distribution(0.1, 1.0)
+    order = np.argsort(p)
+    bins = np.array_split(order, 16)
+    o1 = np.array([counts_race[bn].sum() for bn in bins], np.float64)
+    o2 = np.array([counts_ref[bn].sum() for bn in bins], np.float64)
+    chi2 = float((np.square(o1 - o2) / (o1 + o2)).sum())
+    # chi-square_{0.999, df=15} ≈ 37.7 — exceed it and the sharded path
+    # is NOT sampling ∝ p
+    assert chi2 < 37.7, f"chi2={chi2:.1f}: sharded selection is biased"
+    # the race must also spread: every trial returns b DISTINCT ids
+    assert counts_race.sum() == trials * b
+
+
+def test_sharded_ht_weights_unbiased_mc():
+    """The race-threshold Horvitz–Thompson weights keep the weighted
+    mean estimator unbiased (the WOR analogue of the history scheme's
+    1/(n·p) — same property test as the WR paths)."""
+    N, k, trials = 256, 32, 2500
+    rng = np.random.default_rng(4)
+    x = rng.standard_normal(N)
+    store = ScoreStore(N)
+    store.update(np.arange(N), rng.uniform(0.05, 6.0, N))
+    stats = selection.shard_stats(store.scores, store.seen, 0.7)
+    dist = selection.GlobalDist(stats, N, 0.1, 0.7)
+    ests = []
+    for t in range(trials):
+        gids, _, w, _ = selection.sample_sharded(
+            store, dist, k, seed=1, salt=5, step=t)
+        ests.append(float((w * x[gids]).sum()))
+    se = np.std(ests) / np.sqrt(trials)
+    assert np.mean(ests) == pytest.approx(x.mean(), abs=max(4 * se, 1e-3))
+
+
+def test_sharded_history_resume_replans_identically():
+    """Sharded plans are pure functions of (store state, step): restoring
+    the store and replaying the same step reproduces the plan bitwise —
+    the plan-cursor checkpoint contract holds on the sharded path."""
+    run = _run_cfg("history")
+    src = SyntheticLM(run.model.vocab_size, 16, n_examples=N_EX, seed=9,
+                      host_id=0, n_hosts=1)
+    a = make_sampler(run, src)
+    rng = np.random.default_rng(0)
+    pstate = PipelineState()
+    for step in range(12):
+        _, plan, pstate = a.next_batch(pstate, step)
+        a.observe(plan, rng.uniform(0.1, 4.0, N_EX).astype(
+            np.float32)[plan.gids])
+    ck, ck_pstate = a.state_dict(), pstate
+    _, plan_next, _ = a.next_batch(pstate, 12)
+    b = make_sampler(run, src)
+    b.load_state_dict(ck)
+    _, plan_b, _ = b.next_batch(ck_pstate, 12)
+    assert plan_b.signature() == plan_next.signature()
 
 
 # ---------------------------------------------------------------------------

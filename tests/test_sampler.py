@@ -96,6 +96,73 @@ def test_store_checkpointer_roundtrip(tmp_path):
     assert int(st2.updates) == int(st.updates)
 
 
+def test_store_cached_gather_invalidated_on_every_write():
+    """The gate-cadence gather cache: repeated reads between writes reuse
+    one gather; EVERY update/decay/restore invalidates — a stale cache
+    must never serve a post-observe read. Invalidation is per CALL, not
+    per local write (update/decay calls are collective-lockstep across
+    hosts, local writes are not)."""
+    calls = {"n": 0}
+
+    def counting_gather(local, *, host_id, n_hosts, n_global):
+        calls["n"] += 1
+        return np.arange(n_global, dtype=np.float32) + calls["n"]
+
+    st = ScoreStore(12, host_id=0, n_hosts=2)
+    g1 = st.global_scores(counting_gather, use_cache=True)
+    g2 = st.global_scores(counting_gather, use_cache=True)
+    assert calls["n"] == 1 and g2 is g1              # cache hit, no gather
+    st.update([0], [2.0])
+    g3 = st.global_scores(counting_gather, use_cache=True)
+    assert calls["n"] == 2 and g3[0] != g1[0]        # update invalidated
+    st.update([1], [-1.0])                           # filtered write...
+    st.global_scores(counting_gather, use_cache=True)
+    assert calls["n"] == 3                           # ...still invalidates
+    st.decay()
+    st.global_scores(counting_gather, use_cache=True)
+    assert calls["n"] == 4                           # decay invalidates
+    st.load_state_dict(st.state_dict())
+    st.global_scores(counting_gather, use_cache=True)
+    assert calls["n"] == 5                           # restore invalidates
+    # plain (uncached) reads never touch the cache
+    st.global_scores(counting_gather)
+    assert calls["n"] == 6
+
+
+def test_history_gather_replan_sees_fresh_scores_after_observe():
+    """Regression for the cached gather: observe → re-plan must select
+    from the POST-observe distribution, never a cached pre-observe one."""
+    run = _run_cfg("history", min_coverage=0.2, tau_th=1.001,
+                   temperature=0.5)
+    run = dataclasses.replace(
+        run, imp=dataclasses.replace(run.imp, selection_impl="gather"))
+    src = _source(run, n=64)
+    sampler = make_sampler(run, src)
+    pstate = PipelineState()
+    rng = np.random.default_rng(0)
+    for step in range(10):                 # warm the store + flip the gate
+        _, plan, pstate = sampler.next_batch(pstate, step)
+        sampler.observe(plan, rng.uniform(0.5, 2.0, 64).astype(
+            np.float32)[plan.gids])
+    assert sampler.active
+    _, plan_a, _ = sampler.next_batch(pstate, 10)
+    # feedback that makes example 7 dominate: the very next plan must see
+    # its post-observe probability through the (invalidated) cache
+    spike = np.full(64, 0.01, np.float32)
+    spike[7] = 1000.0
+    sampler.observe(plan_a, spike[plan_a.gids])
+    sampler.store.update(np.arange(64), spike)      # direct refresh too
+    p_fresh = sampler.store.global_distribution(
+        run.sampler.smoothing, run.sampler.temperature, use_cache=True)
+    assert p_fresh[7] == p_fresh.max()
+    _, plan_b, _ = sampler.next_batch(pstate, 11)
+    assert 7 in plan_b.gids                # the dominant id is selected
+    np.testing.assert_array_equal(
+        plan_b.probs, sampler.store.global_distribution(
+            run.sampler.smoothing,
+            run.sampler.temperature)[plan_b.gids])
+
+
 # ---------------------------------------------------------------------------
 # estimator unbiasedness (Monte Carlo)
 # ---------------------------------------------------------------------------
@@ -230,7 +297,10 @@ def test_selective_global_topk_across_hosts(tmp_path):
     np.save(tmp_path / "c.npy", np.arange(2048, dtype=np.int32) % 97)
     run = _run_cfg("selective")
     run = dataclasses.replace(
-        run, sampler=dataclasses.replace(run.sampler, selective_window=8))
+        run, sampler=dataclasses.replace(run.sampler, selective_window=8),
+        # this harness injects only the score gather; the sharded
+        # candidate-exchange twin of this test lives in tests/test_plan.py
+        imp=dataclasses.replace(run.imp, selection_impl="gather"))
     srcs = [MemmapLM(tmp_path / "c.npy", seq_len=16, seed=0,
                      host_id=h, n_hosts=2) for h in range(2)]
     samplers = [make_sampler(run, s) for s in srcs]
