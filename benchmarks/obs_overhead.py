@@ -1,0 +1,114 @@
+"""Telemetry overhead benchmark: is ``repro.obs`` cheap enough to leave
+in the hot paths permanently?
+
+Three configurations of the SAME training run (presample scheme on the
+pipelined data plane — the config with the most instrumented code on the
+step path):
+
+* ``disabled``      — ``obs.enabled=false``: every instrument record
+  reduces to one attribute check (the permanent-instrumentation tax);
+* ``enabled``       — registry on, sink ``none``: full record-time cost
+  (clocks, histogram locks) without I/O;
+* ``enabled_jsonl`` — the production shape: registry + rotating JSONL
+  flushes every 10 steps (I/O rides between steps, so this should track
+  ``enabled`` closely).
+
+Also reports the raw per-op cost of the core instruments (counter inc,
+histogram observe, span enter/exit) enabled vs disabled.
+
+Stats are interquartile means over per-step wall-clock (first 5 steps
+dropped to shed compile) — regenerate only on an idle machine. The
+acceptance bar is ``enabled`` ≤ 2% over ``disabled``. Artifact:
+``benchmarks/artifacts/BENCH_obs.json``.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, iqm, save_json
+
+
+def _run_mode(mode: str, steps: int, obs_dir: str):
+    from repro import obs
+    from repro.api import Experiment
+    from repro.configs import get_config
+    from repro.configs.base import (ISConfig, ObsConfig, OptimConfig,
+                                    RunConfig, SamplerConfig, ShapeConfig)
+    from repro.data.pipeline import SyntheticLM
+
+    obs.reset()
+    ocfg = {"disabled": ObsConfig(enabled=False),
+            "enabled": ObsConfig(enabled=True, sink="none"),
+            "enabled_jsonl": ObsConfig(enabled=True, sink="jsonl",
+                                       dir=obs_dir, flush_every=10)}[mode]
+    run = RunConfig(
+        model=get_config("lm-tiny"),
+        shape=ShapeConfig("bench", seq_len=64, global_batch=16, kind="train"),
+        imp=ISConfig(enabled=True, presample_ratio=3, tau_th=1.0001),
+        sampler=SamplerConfig(scheme="presample"),
+        optim=OptimConfig(name="adamw", lr=1e-3, weight_decay=0.0),
+        obs=ocfg, remat=False)
+    src = SyntheticLM(run.model.vocab_size, run.shape.seq_len,
+                      n_examples=4096, seed=3, host_id=0, n_hosts=1)
+    stamps = []
+
+    def cb(i, m):
+        stamps.append(time.perf_counter())
+
+    Experiment(run, source=src).fit(steps=steps, callback=cb)
+    dts = np.diff(np.asarray(stamps))[5:]
+    return {"mode": mode, "steps": steps,
+            "ms_per_step": iqm(dts) * 1e3,
+            "ms_per_step_p50": float(np.median(dts) * 1e3)}
+
+
+def _instrument_op_costs(iters=200_000):
+    """Raw per-op cost (ns) of the core instruments, enabled/disabled."""
+    from repro.obs.registry import Registry
+    out = {}
+    for state in ("disabled", "enabled"):
+        r = Registry(enabled=state == "enabled")
+        c, h, s = r.counter("c"), r.histogram("h"), r.span("s")
+
+        def t(fn):
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                fn()
+            return (time.perf_counter() - t0) / iters * 1e9
+
+        def span_op():
+            with s:
+                pass
+
+        out[state] = {"counter_inc_ns": t(c.inc),
+                      "histogram_observe_ns": t(lambda: h.observe(1.0)),
+                      "span_ns": t(span_op)}
+    return out
+
+
+def bench_obs_overhead(steps=80):
+    """obs disabled vs enabled vs enabled+jsonl → BENCH_obs.json."""
+    from repro import obs
+    out = {"ops": _instrument_op_costs()}
+    for state, ops in out["ops"].items():
+        for op, ns in ops.items():
+            emit(f"obs.op.{state}.{op}", None, f"{ns:.0f}ns")
+    with tempfile.TemporaryDirectory() as tmp:
+        for mode in ("disabled", "enabled", "enabled_jsonl"):
+            out[mode] = _run_mode(mode, steps, tmp)
+            emit(f"obs.{mode}.ms_per_step",
+                 round(out[mode]["ms_per_step"], 3))
+    obs.enable(False)
+    base = out["disabled"]["ms_per_step"]
+    for mode in ("enabled", "enabled_jsonl"):
+        pct = (out[mode]["ms_per_step"] / base - 1.0) * 100.0
+        out[mode]["overhead_pct"] = pct
+        emit(f"obs.{mode}.overhead_pct", None, f"{pct:+.2f}%")
+    out["acceptance"] = {"bar_pct": 2.0,
+                         "enabled_within_bar":
+                             bool(out["enabled"]["overhead_pct"] <= 2.0)}
+    save_json("BENCH_obs", out)
+    return out

@@ -16,13 +16,15 @@ import traceback
 
 def main() -> None:
     from benchmarks import paper_figures as pf
-    from benchmarks import (data_plane, roofline, sampler_compare,
-                            scoring_overhead, selection_scale, svrg_compare)
+    from benchmarks import (data_plane, obs_overhead, roofline,
+                            sampler_compare, scoring_overhead,
+                            selection_scale, svrg_compare)
 
     suites = {
         "sampler": sampler_compare.sampler_compare,
         "pipeline": data_plane.bench_data_plane,
         "selection": selection_scale.bench_selection_scale,
+        "obs": obs_overhead.bench_obs_overhead,
         "fig1": pf.fig1_variance_reduction,
         "fig2": pf.fig2_correlation,
         "fig3": pf.fig3_convergence,

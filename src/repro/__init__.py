@@ -64,6 +64,10 @@ _EXPORTS = {
     "DataPlane": "repro.data.pipeline",
     "DataConfig": "repro.configs.base",
     "Assembler": "repro.sampler.assembly",
+    # the telemetry plane (repro.obs)
+    "ObsConfig": "repro.configs.base",
+    "TelemetryHook": "repro.obs.hook",
+    "VarianceGainHook": "repro.obs.health",
 }
 
 __all__ = sorted(_EXPORTS)

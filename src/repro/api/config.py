@@ -26,8 +26,9 @@ import json
 
 from repro.configs import get_config
 from repro.configs.base import (DataConfig, ISConfig, MLAConfig, ModelConfig,
-                                MoEConfig, OptimConfig, RunConfig, SSMConfig,
-                                SamplerConfig, Segment, ShapeConfig, reduced)
+                                MoEConfig, ObsConfig, OptimConfig, RunConfig,
+                                SSMConfig, SamplerConfig, Segment,
+                                ShapeConfig, reduced)
 
 
 class ConfigError(ValueError):
@@ -44,7 +45,8 @@ class ConfigError(ValueError):
 _NESTED = {
     RunConfig: {"model": ModelConfig, "shape": ShapeConfig,
                 "optim": OptimConfig, "imp": ISConfig,
-                "sampler": SamplerConfig, "data": DataConfig},
+                "sampler": SamplerConfig, "data": DataConfig,
+                "obs": ObsConfig},
     ModelConfig: {"moe": MoEConfig, "mla": MLAConfig, "ssm": SSMConfig},
 }
 
@@ -258,12 +260,16 @@ def _paper_cifar(model: ModelConfig) -> RunConfig:
 
 
 @register_preset("prod", "pod-scale training cell: train_4k shape, adamw, "
-                         "1000 steps, ckpt every 100")
+                         "1000 steps, ckpt every 100, telemetry on")
 def _prod(model: ModelConfig) -> RunConfig:
     return RunConfig(
         model=model,
         optim=OptimConfig(name="adamw", lr=3e-4),
         imp=ISConfig(enabled=True, presample_ratio=3),
+        # production runs are observable by default: JSONL telemetry
+        # (loop spans, data-plane stages, collective/store counters,
+        # IS-health gauges) every 10 accepted steps
+        obs=ObsConfig(enabled=True),
         steps=1000, ckpt_every=100)
 
 

@@ -97,6 +97,11 @@ class Experiment:
 
     def __init__(self, run_cfg, source=None, mesh=None, gate=None, hooks=()):
         self.run = run_cfg
+        # apply the telemetry switch before any instrumented part is built
+        # (handles work either way, but the registry state should reflect
+        # the run config from the first instant of the run)
+        from repro import obs
+        obs.configure(run_cfg.obs)
         self.lm = LM(run_cfg.model)
         self.opt = get_optimizer(run_cfg.optim)
         self.mesh = mesh
@@ -262,12 +267,22 @@ class Experiment:
                                      StragglerHook)
         from repro.api.loop import TrainLoop
         hs = [MetricsHistoryHook()]
+        if self.run.obs.enabled:
+            # IS-health gauges first so every later hook (logging, user
+            # hooks, the telemetry flush) sees the enriched metrics dict
+            from repro.obs.health import VarianceGainHook
+            hs.append(VarianceGainHook())
         if log_every:
             hs.append(LoggingHook(every=log_every))
         hs += list(self.default_hooks) + list(hooks)
         if callback is not None:
             hs.append(CallbackHook(callback))
         hs += [CheckpointHook(), StragglerHook()]
+        if self.run.obs.enabled:
+            # flush pump last: the registry snapshot it writes includes
+            # everything the step's other hooks recorded
+            from repro.obs.hook import TelemetryHook
+            hs.append(TelemetryHook(self.run.obs))
         state, history = TrainLoop(self, hs).run(steps)
         self.last_state = state
         return state, history

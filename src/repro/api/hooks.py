@@ -81,9 +81,16 @@ class LoggingHook(Hook):
         tau = metrics.get("tau", metrics.get("presample_tau",
                                              metrics.get("store_tau", 0.0)))
         active = metrics.get("is_active", metrics.get("sampler_active", 0.0))
-        self.printer(
-            f"step {step:5d} loss {metrics['loss']:.4f} tau {tau:.2f} "
-            f"is {active:.0f} dt {metrics['dt']:.2f}s", flush=True)
+        # .get throughout: custom step_fns (and eval-style loops) are not
+        # obliged to emit loss/dt, and a log hook must never KeyError a run
+        loss = metrics.get("loss", float("nan"))
+        dt = metrics.get("dt", 0.0)
+        line = (f"step {step:5d} loss {loss:.4f} tau {tau:.2f} "
+                f"is {active:.0f} dt {dt:.2f}s")
+        if "variance_gain" in metrics:
+            line += (f" vgain {metrics['variance_gain']:.2f}"
+                     f" spd {metrics.get('speedup_est', 0.0):.2f}x")
+        self.printer(line, flush=True)
 
 
 class CallbackHook(Hook):

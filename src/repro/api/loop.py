@@ -43,10 +43,13 @@ cursor doubles as the plan cursor — resume re-plans bitwise.
 """
 from __future__ import annotations
 
+import sys
 import time
 
 import jax
 import numpy as np
+
+from repro import obs
 
 EVENTS = ("loop_start", "step_start", "step_timed", "retry", "step_end",
           "scores_ready", "checkpoint", "loop_end")
@@ -70,14 +73,41 @@ class TrainLoop:
         self.steps_target = 0
         self.steps_run = 0
         self._pending = None         # (step, plan, device scores) to observe
+        self._failed_hooks = set()   # hook classes already reported once
+        # telemetry (inert unless run.obs enables the registry)
+        self._sp_dispatch = obs.span("loop.dispatch")
+        self._sp_drain = obs.span("loop.drain_feedback")
+        self._sp_retry = obs.span("loop.retry")
+        self._h_step = obs.histogram("loop.step_s")
+        self._c_steps = obs.counter("loop.steps")
+        self._c_retries = obs.counter("loop.retries")
+        self._c_hook_errors = obs.counter("loop.hook_errors")
 
     # -- events ---------------------------------------------------------------
     def emit(self, event, *args) -> None:
+        """Dispatch an event to every hook, ISOLATED: hooks are
+        observers, so a raising hook must not kill the training run —
+        the failure is counted (``loop.hook_errors``) and reported once
+        per hook class. The one exception is ``step_timed``
+        (``_vote_retry``): its return value is loop SEMANTICS (retry
+        votes), so it stays un-guarded by design."""
         for h in self.hooks:
-            getattr(h, "on_" + event)(self, *args)
+            try:
+                getattr(h, "on_" + event)(self, *args)
+            except Exception as e:
+                self._c_hook_errors.inc()
+                cls = type(h)
+                if cls not in self._failed_hooks:
+                    self._failed_hooks.add(cls)
+                    print(f"[repro] hook {cls.__name__}.on_{event} raised "
+                          f"{type(e).__name__}: {e} — hook errors are "
+                          f"isolated; reporting this hook class once",
+                          file=sys.stderr, flush=True)
 
     def _vote_retry(self, step, attempt, dt) -> bool:
-        # list, not generator: every hook observes every attempt
+        # list, not generator: every hook observes every attempt.
+        # Deliberately NOT exception-isolated — retry votes are control
+        # flow, not observation (see emit()).
         return any([h.on_step_timed(self, step, attempt, dt)
                     for h in self.hooks])
 
@@ -94,8 +124,9 @@ class TrainLoop:
         if self._pending is not None:
             step, plan, scores = self._pending
             self._pending = None
-            scores = np.asarray(jax.device_get(scores))
-            self.exp.sampler.observe(plan, scores)
+            with self._sp_drain:
+                scores = np.asarray(jax.device_get(scores))
+                self.exp.sampler.observe(plan, scores)
             self.emit("scores_ready", step, plan, scores)
 
     # -- checkpointing (invoked by CheckpointHook) ----------------------------
@@ -161,15 +192,18 @@ class TrainLoop:
             batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
             self.emit("step_start", i, batch, plan)
             launched_next = False
+            dt_total = 0.0
             for attempt in range(run.max_step_retries + 1):
                 t0 = time.time()
                 prev_state = state
-                if exp.step_is_flagged:
-                    state, metrics = exp.step_fn(
-                        state, batch,
-                        jax.numpy.asarray(plan["is_flag"], jax.numpy.float32))
-                else:
-                    state, metrics = exp.step_fn(state, batch)
+                with self._sp_dispatch:
+                    if exp.step_is_flagged:
+                        state, metrics = exp.step_fn(
+                            state, batch,
+                            jax.numpy.asarray(plan["is_flag"],
+                                              jax.numpy.float32))
+                    else:
+                        state, metrics = exp.step_fn(state, batch)
                 if not launched_next and i + 1 < steps:
                     # double-buffer: launch batch k+1's scoring against the
                     # PRE-update params while batch k's update runs (scores
@@ -184,6 +218,7 @@ class TrainLoop:
                 scores = metrics.pop("sample_scores", None)
                 metrics = {k: float(v) for k, v in metrics.items()}
                 dt = time.time() - t0
+                dt_total += dt
                 if not self._vote_retry(i, attempt, dt) \
                         or attempt == run.max_step_retries:
                     # accepted — or retries exhausted, in which case the
@@ -196,14 +231,23 @@ class TrainLoop:
                 # sync once exhausted
                 state = prev_state
                 self.state = state
-                self.emit("retry", i, attempt, dt)
+                self._c_retries.inc()
+                with self._sp_retry:
+                    self.emit("retry", i, attempt, dt)
             if scores is not None:
                 # close the loop lazily: scores flow into the score memory
                 # behind the NEXT step's device work (drain_feedback)
                 self._pending = (i, plan, scores)
             pstate = pstate_next
             self.pstate = pstate
-            metrics.update(step=i, dt=dt, **exp.sampler.stats())
+            # retried steps used to mis-report timing: `dt` is the LAST
+            # attempt only. Carry the attempt count and the cumulative
+            # wall time so consumers can tell a clean 50 ms step from a
+            # 3-attempt 150 ms one.
+            metrics.update(step=i, dt=dt, attempts=attempt + 1,
+                           dt_total=dt_total, **exp.sampler.stats())
+            self._h_step.observe(dt)
+            self._c_steps.inc()
             self.steps_run += 1
             self.emit("step_end", i, metrics)
             i += 1

@@ -268,6 +268,24 @@ class DataConfig:
 
 
 @dataclass(frozen=True)
+class ObsConfig:
+    """The telemetry plane (``repro.obs``).
+
+    Disabled, instrumentation costs a couple of attribute checks per
+    record site; enabled, the registry collects loop/data-plane/
+    collective/store/IS-health metrics and the ``TelemetryHook``
+    flushes snapshots to the configured sink every ``flush_every``
+    accepted steps. On by default in the ``prod`` preset; the config
+    snapshot rides the checkpoint manifest like every other section.
+    """
+    enabled: bool = False
+    sink: str = "jsonl"           # jsonl | console | tensorboard | none
+    dir: str = "/tmp/repro_obs"   # sink output directory (per-process files)
+    flush_every: int = 10         # steps between sink flushes
+    rotate_mb: float = 64.0       # jsonl size-based rotation threshold
+
+
+@dataclass(frozen=True)
 class OptimConfig:
     name: str = "sgd"              # sgd | adamw
     lr: float = 0.1
@@ -292,6 +310,7 @@ class RunConfig:
     imp: ISConfig = field(default_factory=ISConfig)
     sampler: SamplerConfig = field(default_factory=SamplerConfig)
     data: DataConfig = field(default_factory=DataConfig)
+    obs: ObsConfig = field(default_factory=ObsConfig)
     steps: int = 100
     microbatches: int = 1          # gradient accumulation
     remat: bool = True

@@ -41,6 +41,8 @@ import warnings
 import jax
 import numpy as np
 
+from repro import obs
+
 
 @dataclasses.dataclass
 class PipelineState:
@@ -296,6 +298,15 @@ class DataPlane:
         self._consumed = None      # (PipelineState, next step) after pops
         self._fatal = None         # terminal plan-stage error (planning is
                                    # pure, so it cannot be retried)
+        # stage telemetry (inert unless repro.obs is enabled); spans keep
+        # per-thread start stacks, so one handle serves all workers
+        self._sp_plan = obs.span("plane.plan")
+        self._sp_gather = obs.span("plane.gather")
+        self._sp_device_put = obs.span("plane.device_put")
+        self._sp_wait = obs.span("plane.next_wait")
+        self._g_depth = obs.gauge("plane.queue_depth")
+        self._c_stalls = obs.counter("plane.credit_stalls")
+        self._c_batches = obs.counter("plane.batches")
 
     # -- the loop-facing two-phase handshake ----------------------------------
     def begin(self, pstate, step: int, params=None):
@@ -337,7 +348,9 @@ class DataPlane:
         if self._fatal is not None:
             # the plan worker is gone; blocking on the queue would hang
             raise self._fatal
-        tag, *rest = self._out_q.get()
+        self._g_depth.set(self._out_q.qsize())
+        with self._sp_wait:          # consumer starvation = pipeline behind
+            tag, *rest = self._out_q.get()
         if tag == "fatal":
             self._fatal = rest[0]
             raise self._fatal
@@ -346,6 +359,7 @@ class DataPlane:
         batch, plan, cursor = rest
         self._consumed = (cursor, int(getattr(plan, "step", -1)) + 1)
         self._pops += 1
+        self._c_batches.inc()
         self._credits.release()      # one more plan may enter the pipeline
         if self._sync_launch:
             # block until the gather AFTER the ones we've consumed has
@@ -393,9 +407,14 @@ class DataPlane:
         cursor, step = self._cursor0
         while not self._stop.is_set():
             if not self._credits.acquire(timeout=0.1):
+                # depth batches in flight: planning is throttled by the
+                # consumer, which is the healthy steady state — a LOW
+                # stall count means the pipeline is running dry
+                self._c_stalls.inc()
                 continue
             try:
-                plan, nxt = self.sampler.plan(cursor, step)
+                with self._sp_plan:
+                    plan, nxt = self.sampler.plan(cursor, step)
             except BaseException as e:   # planning is pure: a bug, not flaky
                 self._out_q.put(("fatal", e))
                 return
@@ -417,7 +436,8 @@ class DataPlane:
                     self._gathers_started += 1
                     self._gather_cv.notify_all()
                 try:
-                    batch = self.sampler.assembler.assemble(plan)
+                    with self._sp_gather:
+                        batch = self.sampler.assembler.assemble(plan)
                 except BaseException as e:
                     # surface on the consuming call, then retry this plan
                     sink.put(("err", e))
@@ -432,7 +452,8 @@ class DataPlane:
                 continue
             if item[0] == "ok":
                 try:
-                    item = ("ok", self._device_put(item[1])) + item[2:]
+                    with self._sp_device_put:
+                        item = ("ok", self._device_put(item[1])) + item[2:]
                 except BaseException as e:
                     item = ("err", e)
             self._out_q.put(item)

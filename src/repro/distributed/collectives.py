@@ -14,6 +14,21 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import obs
+
+
+def _note_collective(name: str, payload) -> None:
+    """Count a collective call and its LOCAL payload bytes (what this host
+    contributes). Called at function ENTRY — before the single-process
+    identity early-returns — so the counters describe selection-plane
+    traffic shape even in 1-process runs (CI smokes, examples)."""
+    if not obs.enabled():
+        return
+    obs.counter(f"collectives.{name}.calls").inc()
+    tree = payload if isinstance(payload, dict) else {"x": payload}
+    obs.counter(f"collectives.{name}.bytes").inc(
+        int(sum(np.asarray(v).nbytes for v in tree.values())))
+
 
 def axis_size(axis_name) -> int:
     """Static size of a mapped axis (inside shard_map/pmap/vmap).
@@ -198,6 +213,7 @@ def gather_host_scores(local_scores, *, host_id=None, n_hosts=None,
     (``pad_shard`` / ``interleave_shards``).
     """
     local = np.asarray(local_scores, np.float32).reshape(-1)
+    _note_collective("gather_host_scores", local)
     n_hosts = jax.process_count() if n_hosts is None else int(n_hosts)
     if n_hosts == 1:
         return local if n_global is None else local[:n_global]
@@ -230,6 +246,7 @@ def allgather_rows(local_rows, *, n_rows: int, n_hosts=None):
     n_hosts = jax.process_count() if n_hosts is None else int(n_hosts)
     single = not isinstance(local_rows, dict)
     tree = {"x": local_rows} if single else local_rows
+    _note_collective("allgather_rows", tree)
     if n_hosts == 1:
         out = {k: np.asarray(v)[:n_rows] for k, v in tree.items()}
         return out["x"] if single else out
@@ -256,6 +273,7 @@ def exchange_rows(contrib, row_mask, *, lo: int, hi: int, n_hosts=None):
     """
     n_hosts = jax.process_count() if n_hosts is None else int(n_hosts)
     row_mask = np.asarray(row_mask, bool)
+    _note_collective("exchange_rows", contrib)
     if n_hosts == 1:
         if not row_mask.all():
             raise ValueError("single-process exchange with missing rows "
@@ -282,6 +300,7 @@ def allreduce_stats(local_stats, *, n_hosts=None):
     host computes the bitwise-identical reduction; identity
     single-process."""
     local = np.asarray(local_stats, np.float64)
+    _note_collective("allreduce_stats", local)
     n_hosts = jax.process_count() if n_hosts is None else int(n_hosts)
     if n_hosts == 1:
         return local.copy()
@@ -300,6 +319,11 @@ def exchange_topk(candidates, *, k_each: int, n_hosts=None):
     same bytes everywhere. Rides ``allgather_rows``; identity
     single-process."""
     n_hosts = jax.process_count() if n_hosts is None else int(n_hosts)
+    _note_collective("exchange_topk", candidates)
+    if obs.enabled():
+        # candidate-block size distribution: the knob that trades exchange
+        # bandwidth (k_each·H rows) against selection fidelity
+        obs.histogram("collectives.exchange_topk.k_each").observe(int(k_each))
     for k, v in candidates.items():
         if np.asarray(v).shape[0] != int(k_each):
             raise ValueError(f"candidate block {k!r} has "

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro import obs
 from repro.distributed.collectives import (gather_host_scores,
                                            strided_shard_size)
 
@@ -54,6 +55,16 @@ class ScoreStore:
         self.version = 0
         self._gcache = None
         self._gcache_version = -1
+        # telemetry (inert unless repro.obs is enabled): gather-cache
+        # economics, write-version invalidations, and the per-id staleness
+        # clock (update ticks since an id was last rescored — allocated
+        # lazily so disabled runs pay nothing)
+        self._c_hits = obs.counter("store.gather_cache.hits")
+        self._c_misses = obs.counter("store.gather_cache.misses")
+        self._c_inval = obs.counter("store.invalidations")
+        self._h_staleness = obs.histogram("store.staleness")
+        self._tick = 0
+        self._last_tick = None
 
     # -- id mapping -----------------------------------------------------------
     def owned(self, gids: np.ndarray) -> np.ndarray:
@@ -83,6 +94,7 @@ class ScoreStore:
         # local-write key would let one host serve a stale cache while
         # its peers re-gather, forking the plans
         self.version += 1
+        self._c_inval.inc()
         keep = self.owned(gids) & (scores >= 0) & np.isfinite(scores)
         gids, scores = gids[keep], scores[keep]
         if gids.size == 0:
@@ -91,6 +103,7 @@ class ScoreStore:
         slots = self.slot(gids)
         self._n_seen += int((self.seen[np.unique(slots)] == 0).sum())
         old_seen = self.seen[slots].astype(bool)
+        self._note_staleness(slots, old_seen)
         merged = np.where(old_seen,
                           self.ema * self.scores[slots] + (1 - self.ema) * scores,
                           scores)
@@ -98,6 +111,20 @@ class ScoreStore:
         self.seen[slots] = 1
         self.updates += gids.size
         return int(gids.size)
+
+    def _note_staleness(self, slots, old_seen) -> None:
+        """Observe, for every REVISITED id in this update, how many update
+        ticks elapsed since it was last rescored — the distribution a
+        scheme's revisit policy shapes (history reuse vs fresh scoring).
+        The per-slot clock is allocated on first enabled update only."""
+        if not obs.enabled():
+            return
+        self._tick += 1
+        if self._last_tick is None:
+            self._last_tick = np.zeros((self.n_local,), np.int64)
+        for age in self._tick - self._last_tick[slots[old_seen]]:
+            self._h_staleness.observe(float(age))
+        self._last_tick[slots] = self._tick
 
     def decay(self, mean=None) -> None:
         """Staleness decay: pull seen scores toward the mean (epoch tick).
@@ -108,6 +135,7 @@ class ScoreStore:
         attractor and the gathered global vector stays bitwise identical
         to a single-host run's."""
         self.version += 1      # call-level invalidation (see update())
+        self._c_inval.inc()
         m = self.seen.astype(bool)
         if not m.any():
             return
@@ -145,9 +173,12 @@ class ScoreStore:
         per-plan O(n) is what ``imp.selection_impl="sharded"`` is for.
         Treat the returned array as read-only.
         """
-        if use_cache and self._gcache is not None \
-                and self._gcache_version == self.version:
-            return self._gcache
+        if use_cache:
+            if self._gcache is not None \
+                    and self._gcache_version == self.version:
+                self._c_hits.inc()
+                return self._gcache
+            self._c_misses.inc()
         local = self.sentinel_scores()
         if self.n_hosts == 1:
             out = local
@@ -262,3 +293,4 @@ class ScoreStore:
         self._n_seen = int(self.seen.astype(bool).sum())
         self.updates = np.asarray(d["updates"], np.int64).reshape(())
         self.version += 1
+        self._c_inval.inc()

@@ -33,6 +33,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 
 class ScoreEngine:
     """Standalone forward-only scorer for one ``LM`` under one run config."""
@@ -66,6 +68,9 @@ class ScoreEngine:
         key = self._key(batch)
         fn = self._jitted.get(key)
         if fn is None:
+            # a new batch structure costs an XLA compile; a growing count
+            # mid-run means shape churn on the scoring path
+            obs.counter("engine.jit_compiles").inc()
             if self.mesh is not None:
                 from repro.distributed import sharding as shd
                 bspecs = shd.batch_specs(
@@ -83,8 +88,12 @@ class ScoreEngine:
         """Launch the score pass; returns (loss_ps, scores) device arrays
         WITHOUT blocking — jax dispatch is async, so the caller can overlap
         this with other device work and materialise later."""
-        batch = {k: jnp.asarray(v) for k, v in batch.items()}
-        return self._fn(batch)(params, batch)
+        obs.counter("engine.dispatches").inc()
+        # the span covers dispatch cost only, not compute — the pass is
+        # async; a fat span here means host-side tracing/transfer overhead
+        with obs.span("engine.dispatch"):
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            return self._fn(batch)(params, batch)
 
     def score_host(self, params, batch):
         """Blocking convenience: numpy (loss_ps, scores)."""

@@ -158,6 +158,14 @@ def test_retry_event_and_monitor_swap():
     assert rec.retries == [(1, 0)]
     assert len(hist) == 4
     assert int(jax.device_get(state["step"])) == 4
+    # retried steps must report honest timing: step 1 ran 2 attempts, and
+    # dt (the LAST attempt) is only part of the cumulative dt_total
+    assert [h["attempts"] for h in hist] == [1, 2, 1, 1]
+    for h in hist:
+        if h["attempts"] == 1:
+            assert h["dt_total"] == h["dt"]
+        else:
+            assert h["dt_total"] > h["dt"]
 
 
 def test_logging_hook_prints(capsys):

@@ -1,0 +1,342 @@
+"""The ``repro.obs`` telemetry plane: registry semantics, instrument
+maths (buckets, spans, ESS, §3.3 variance gain), sink round-trips, hook
+exception isolation, and the TrainLoop smoke pinning the documented
+metric names."""
+import json
+import math
+import threading
+
+import numpy as np
+import pytest
+
+import repro
+from repro import obs
+from repro.api import Experiment, Hook
+from repro.configs import get_config
+from repro.configs.base import (ISConfig, ObsConfig, OptimConfig, RunConfig,
+                                SamplerConfig, ShapeConfig)
+from repro.data.pipeline import SyntheticLM
+from repro.obs.health import ess, speedup_estimate, variance_gain
+from repro.obs.registry import Registry
+from repro.obs.sinks import JsonlSink, make_sink
+
+
+@pytest.fixture(autouse=True)
+def _global_registry_guard():
+    """Tests here flip the process-global registry; leave it the way the
+    rest of the suite expects (disabled, zeroed)."""
+    yield
+    obs.enable(False)
+    obs.reset()
+
+
+def _run(scheme="presample", steps=6, obs_cfg=None, **kw):
+    return RunConfig(
+        model=get_config("lm-tiny"),
+        shape=ShapeConfig("t", seq_len=16, global_batch=8, kind="train"),
+        optim=OptimConfig(name="adamw", lr=1e-3, weight_decay=0.0),
+        imp=ISConfig(enabled=True, presample_ratio=2, tau_th=1.1),
+        sampler=SamplerConfig(scheme=scheme, min_coverage=0.25,
+                              tau_th=1.005),
+        obs=obs_cfg or ObsConfig(),
+        steps=steps, remat=False, **kw)
+
+
+def _source(run, n=256):
+    return SyntheticLM(run.model.vocab_size, run.shape.seq_len,
+                       n_examples=n, seed=7, host_id=0, n_hosts=1)
+
+
+# ---------------------------------------------------------------------------
+# registry + instruments
+# ---------------------------------------------------------------------------
+def test_registry_get_or_create_and_kind_collision():
+    r = Registry(enabled=True)
+    c = r.counter("a.calls")
+    assert r.counter("a.calls") is c          # same handle
+    with pytest.raises(ValueError):
+        r.gauge("a.calls")                    # name maps to ONE kind
+    c.inc()
+    c.inc(3)
+    r.gauge("a.depth").set(2.5)
+    snap = r.snapshot()
+    assert snap["a.calls"] == 4
+    assert snap["a.depth"] == 2.5
+    assert r.names() == ["a.calls", "a.depth"]
+
+
+def test_registry_reset_keeps_handles_live():
+    r = Registry(enabled=True)
+    c = r.counter("x")
+    h = r.histogram("y")
+    c.inc(5)
+    h.observe(1.0)
+    r.reset()
+    assert r.snapshot()["x"] == 0
+    assert r.snapshot()["y"]["count"] == 0
+    c.inc()                                    # the OLD handle still records
+    h.observe(2.0)
+    assert r.snapshot()["x"] == 1
+    assert r.snapshot()["y"]["count"] == 1
+
+
+def test_disabled_registry_is_noop():
+    r = Registry(enabled=False)
+    c = r.counter("c")
+    g = r.gauge("g")
+    h = r.histogram("h")
+    s = r.span("s")
+    c.inc(10)
+    g.set(3.0)
+    h.observe(1.0)
+    with s:
+        pass
+    assert r.snapshot() == {"c": 0, "g": 0.0,
+                            "h": {"count": 0, "sum": 0.0, "min": None,
+                                  "max": None, "avg": None, "buckets": {}},
+                            "s": {"count": 0, "sum": 0.0, "min": None,
+                                  "max": None, "avg": None, "buckets": {}}}
+    r.enable(True)
+    c.inc()                                    # same handle goes live
+    assert r.snapshot()["c"] == 1
+
+
+def test_histogram_power_of_two_buckets():
+    r = Registry(enabled=True)
+    h = r.histogram("h")
+    # bucket e holds 2^(e-1) <= |v| < 2^e; zero gets bucket 0
+    for v, e in [(0.0, 0), (1.0, 1), (1.5, 1), (2.0, 2), (3.99, 2),
+                 (4.0, 3), (0.5, 0), (0.25, -1), (-2.5, 2)]:
+        assert h.bucket_of(v) == e, (v, e)
+        h.observe(v)
+    snap = h.snapshot()
+    assert snap["count"] == 9
+    assert snap["min"] == -2.5 and snap["max"] == 4.0
+    assert snap["buckets"] == {"-1": 1, "0": 2, "1": 2, "2": 3, "3": 1}
+    assert snap["avg"] == pytest.approx(snap["sum"] / 9)
+
+
+def test_span_nesting_and_threads():
+    r = Registry(enabled=True)
+    s = r.span("s")
+    with s:                                    # nested reuse of ONE handle
+        with s:
+            pass
+    assert s.snapshot()["count"] == 2
+
+    def worker():
+        with s:
+            pass
+
+    ts = [threading.Thread(target=worker) for _ in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert s.snapshot()["count"] == 6
+    assert s.snapshot()["min"] >= 0.0
+
+
+def test_span_enable_mid_flight_is_safe():
+    r = Registry(enabled=True)
+    s = r.span("s")
+    r.enable(False)
+    with s:                                    # start missed (disabled) ...
+        r.enable(True)                         # ... enabled before exit
+    assert s.snapshot()["count"] == 0          # no start -> nothing recorded
+
+
+# ---------------------------------------------------------------------------
+# IS-health closed forms
+# ---------------------------------------------------------------------------
+def test_ess_closed_forms():
+    assert ess(np.ones(8)) == pytest.approx(8.0)         # flat -> b
+    w = np.zeros(8)
+    w[0] = 1.0
+    assert ess(w) == pytest.approx(1.0)                  # one atom -> 1
+    w = np.array([1.0, 3.0])
+    assert ess(w) == pytest.approx(16.0 / 10.0)          # (Σw)²/Σw²
+    assert ess([]) == 0.0
+
+
+def test_variance_gain_closed_forms():
+    assert variance_gain(1.0) == 0.0
+    assert variance_gain(0.5) == 0.0                     # clamped below 1
+    assert variance_gain(2.0) == pytest.approx(0.75)     # 1 - 1/4
+    assert variance_gain(10.0) == pytest.approx(0.99)
+
+
+def test_speedup_estimate_matches_paper_criterion():
+    # §3.3: guaranteed speedup iff B + 3b < 3τb  <=>  estimate > 1
+    b, ratio = 32, 3
+    B = ratio * b
+    tau_break_even = (B + 3 * b) / (3 * b)               # = 2 here
+    assert speedup_estimate(tau_break_even, B, b) == pytest.approx(1.0)
+    assert speedup_estimate(tau_break_even + 0.5, B, b) > 1.0
+    assert speedup_estimate(tau_break_even - 0.5, B, b) < 1.0
+    # store-backed schemes pay no scoring pass: B=0 -> estimate = τ
+    assert speedup_estimate(1.7, 0, b) == pytest.approx(1.7)
+
+
+# ---------------------------------------------------------------------------
+# sinks
+# ---------------------------------------------------------------------------
+def test_jsonl_sink_round_trip(tmp_path):
+    sink = JsonlSink(str(tmp_path), proc=0)
+    recs = [{"event": "step", "step": i, "ts": 1.5, "proc": 0,
+             "metrics": {"loop.steps": i, "h": {"count": 1, "sum": 0.5}}}
+            for i in range(3)]
+    for rec in recs:
+        sink.write(rec)
+    sink.close()
+    got = [json.loads(l) for l in open(sink.path)]
+    assert got == recs
+
+
+def test_jsonl_sink_rotation(tmp_path):
+    sink = JsonlSink(str(tmp_path), proc=0, rotate_mb=1e-9)  # floor 64KiB
+    big = {"event": "step", "step": 0, "ts": 0.0, "proc": 0,
+           "metrics": {"pad": "x" * 70_000}}
+    sink.write(big)
+    first = sink.path
+    sink.write(big)                            # over the floor -> new file
+    assert sink.path != first
+    sink.close()
+    gens = sorted(tmp_path.glob("obs-p0.*.jsonl"))
+    assert len(gens) >= 2
+    # every record is intact across the rotation boundary
+    recs = [json.loads(l) for f in gens for l in open(f)]
+    assert recs == [big, big]
+
+
+def test_make_sink_dispatch(tmp_path):
+    cfg = ObsConfig(enabled=True, dir=str(tmp_path))
+    assert make_sink(cfg, proc=0).__class__.__name__ == "JsonlSink"
+    import dataclasses
+    for name, cls in [("console", "ConsoleSink"),
+                      ("tensorboard", "TensorBoardSink"),
+                      ("none", "Sink")]:
+        c = dataclasses.replace(cfg, sink=name)
+        assert make_sink(c, proc=0).__class__.__name__ == cls
+    with pytest.raises(ValueError):
+        make_sink(dataclasses.replace(cfg, sink="bogus"), proc=0)
+
+
+def test_tensorboard_sink_writes_tfrecords(tmp_path):
+    cfg = ObsConfig(enabled=True, sink="tensorboard", dir=str(tmp_path))
+    sink = make_sink(cfg, proc=0)
+    sink.write({"event": "step", "step": 3, "ts": 123.0, "proc": 0,
+                "metrics": {"loop.steps": 4, "health.tau": 1.5,
+                            "loop.step_s": {"count": 4, "sum": 0.4,
+                                            "min": 0.1, "max": 0.1,
+                                            "avg": 0.1, "buckets": {}}}})
+    sink.close()
+    data = open(sink.path, "rb").read()
+    # TFRecord framing: len(8) + crc(4) + payload + crc(4); first record
+    # is the "brain.Event:2" file-version header
+    n = int.from_bytes(data[:8], "little")
+    assert b"brain.Event:2" in data[12:12 + n]
+    assert len(data) > 12 + n + 4              # scalar events follow
+
+
+# ---------------------------------------------------------------------------
+# hook exception isolation (the emit() satellite)
+# ---------------------------------------------------------------------------
+def test_hook_exceptions_are_isolated(capsys):
+    class Bomb(Hook):
+        def on_step_end(self, loop, step, metrics):
+            raise RuntimeError("boom")
+
+    run = _run(steps=4, obs_cfg=ObsConfig(enabled=True, sink="none"))
+    obs.reset()
+    exp = Experiment(run, source=_source(run))
+    state, hist = exp.fit(steps=4, hooks=[Bomb()])
+    assert len(hist) == 4                      # the run survived
+    assert obs.get_registry().counter("loop.hook_errors").value == 4
+    err = capsys.readouterr().err
+    assert err.count("Bomb.on_step_end raised RuntimeError") == 1  # once
+
+
+def test_retry_votes_are_not_isolated():
+    class BadVoter(Hook):
+        def on_step_timed(self, loop, step, attempt, dt):
+            raise RuntimeError("votes are control flow")
+
+    run = _run(steps=2)
+    exp = Experiment(run, source=_source(run))
+    with pytest.raises(RuntimeError, match="control flow"):
+        exp.fit(steps=2, hooks=[BadVoter()])
+
+
+def test_logging_hook_survives_missing_keys(capsys):
+    from repro.api.hooks import LoggingHook
+    h = LoggingHook(every=1)
+    h.on_step_end(None, 0, {"tau": 1.2})       # no loss, no dt: no KeyError
+    out = capsys.readouterr().out
+    assert "loss nan" in out and "dt 0.00s" in out
+    h.on_step_end(None, 1, {"loss": 0.5, "dt": 0.1, "variance_gain": 0.75,
+                            "speedup_est": 1.5})
+    assert "vgain 0.75 spd 1.50x" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# the TrainLoop smoke: documented metric names end-to-end
+# ---------------------------------------------------------------------------
+def test_trainloop_emits_documented_metrics(tmp_path):
+    # presample leg: pipelined data plane -> plane.* spans fire
+    run = _run(steps=6, obs_cfg=ObsConfig(enabled=True, dir=str(tmp_path),
+                                          flush_every=2))
+    obs.reset()
+    exp = Experiment(run, source=_source(run))
+    state, hist = exp.fit()
+    # history leg: store/collectives/health layers (same process registry)
+    run2 = _run(scheme="history", steps=6,
+                obs_cfg=ObsConfig(enabled=True, dir=str(tmp_path),
+                                  flush_every=2))
+    exp2 = Experiment(run2, source=_source(run2, n=64))
+    exp2.fit()
+    snap = obs.snapshot()
+    for name in ("loop.dispatch", "loop.drain_feedback", "loop.step_s",
+                 "plane.plan", "plane.gather"):
+        assert snap[name]["count"] > 0, name
+    for name in ("loop.steps", "plane.batches", "store.invalidations",
+                 "collectives.allreduce_stats.calls"):
+        assert snap[name] > 0, name
+    assert snap["health.tau"] >= 0.0
+    assert "health.variance_gain" in snap and "health.speedup_est" in snap
+    # the health layer enriched the step metrics dict
+    assert "variance_gain" in hist[-1] and "speedup_est" in hist[-1]
+    assert hist[-1]["attempts"] == 1
+    assert hist[-1]["dt_total"] == pytest.approx(hist[-1]["dt"])
+    # and the sink wrote schema-shaped records
+    files = sorted(tmp_path.glob("obs-p0.*.jsonl"))
+    assert files
+    recs = [json.loads(l) for f in files for l in open(f)]
+    events = {r["event"] for r in recs}
+    assert {"loop_start", "step", "loop_end"} <= events
+    for r in recs:
+        assert set(r) == {"event", "step", "ts", "proc", "metrics"}
+        assert isinstance(r["metrics"], dict)
+    stepped = [r for r in recs if r["event"] == "step"]
+    assert all("step.loss" in r["metrics"] for r in stepped)
+    assert any("step.variance_gain" in r["metrics"] for r in stepped)
+
+
+def test_obs_disabled_run_emits_nothing(tmp_path):
+    run = _run(steps=3, obs_cfg=ObsConfig(enabled=False, dir=str(tmp_path)))
+    exp = Experiment(run, source=_source(run))
+    exp.fit()
+    assert not obs.enabled()
+    assert list(tmp_path.glob("*.jsonl")) == []
+    # nothing recorded while disabled
+    assert obs.get_registry().counter("loop.steps").value == 0
+
+
+def test_obs_config_round_trip_and_cli():
+    from repro.api.config import apply_overrides, from_dict, to_dict
+    run = _run(obs_cfg=ObsConfig(enabled=True, sink="console",
+                                 flush_every=3))
+    assert from_dict(to_dict(run)) == run      # lossless with obs nested
+    run2 = apply_overrides(run, {"obs.enabled": "false",
+                                 "obs.rotate_mb": "8"})
+    assert run2.obs.enabled is False and run2.obs.rotate_mb == 8.0
