@@ -1,0 +1,185 @@
+"""Fused device presample benchmark (the PR-7 tentpole's perf evidence).
+
+End-to-end training step wall-clock with Algorithm 1's presample scheme,
+comparing the two engine-backed implementations over ratio × batch:
+
+* ``host``  — ``presample_host``: the candidate pool is assembled INLINE
+  in ``begin`` (the selection plan depends on engine scores, so the
+  architecture cannot buffer ahead), and the selected b-row batch is
+  re-gathered on host and re-uploaded every step;
+* ``fused`` — ``presample_fused``: candidate plans are pure cursor math,
+  so the ``DataPlane`` pre-gathers + uploads B-row pools depth-ahead on
+  worker threads (the finalize protocol); the pool is scored where it
+  lands, only the (B,) score vector comes down, and the b winners are
+  gathered ON DEVICE.
+
+The workload models the regime the fused data path exists for: candidate
+gathers carry a seeded bimodal latency — a ``spike_p`` chance of a stall
+sized to the pool (``spike_ms_per_row``·B: a remote-corpus fetch of B
+rows / page-cache miss storm), else ~instant. Identical schedule for
+both modes (keyed on the gathered ids; the candidate plans are
+identical). Stalls SLEEP with the GIL released — the
+``benchmarks/data_plane.py`` methodology — so the comparison measures
+pipelining, not single-core CPU contention. A CONSTANT latency would
+not separate the paths (both hide one gather behind the async in-flight
+update); what the host path structurally cannot do is absorb a spike
+TALLER than one update, which the fused plane's depth-3 pool buffer
+soaks up and refills during quiet gathers. A ``spike_p=0`` control at
+ratio 3 records the compute-bound interpret-mode floor, where the two
+paths tie to noise on this 1-core CPU.
+
+Each (mode, ratio, b) run also snapshots the transfer counters — the
+byte-level side of the claim: the fused train path re-uploads only the
+(b,) index + weight vectors (``engine.h2d_bytes``) instead of the full
+b-row batch (``loop.h2d_bytes``), and the plans stay bitwise identical
+(signature streams asserted equal per config).
+
+Stats are interquartile means over per-step wall-clock (callback to
+callback, first 5 steps dropped to shed compile) — regenerate only on an
+idle machine. Artifact: benchmarks/artifacts/BENCH_fused.json.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, iqm, save_json
+
+
+class _SpikySource:
+    """A source whose gathers carry seeded bimodal latency (sleep, GIL
+    released) — the remote-read disturbance both modes see identically,
+    since their candidate plans (and so gathered ids) are identical."""
+
+    def __init__(self, inner, spike_p: float, spike_ms: float):
+        self.inner = inner
+        self.spike_p, self.spike_ms = float(spike_p), float(spike_ms)
+        self.n = inner.n
+        self.host_id, self.n_hosts = inner.host_id, inner.n_hosts
+
+    def global_indices(self, state, size):
+        return self.inner.global_indices(state, size)
+
+    def local_indices(self, state, size):
+        return self.inner.local_indices(state, size)
+
+    def gather(self, indices, epoch=0):
+        if self.spike_p:
+            rng = np.random.default_rng(np.random.SeedSequence(
+                [int(np.asarray(indices)[0]), int(epoch), 777]))
+            if rng.uniform() < self.spike_p:
+                time.sleep(self.spike_ms / 1e3)
+        return self.inner.gather(indices, epoch=epoch)
+
+    def batch(self, state, size):
+        batch = self.gather(self.local_indices(state, size),
+                            epoch=state.epoch)
+        return batch, state.advance(size, self.n)
+
+
+def _run_mode(mode: str, ratio: int, b: int, steps: int, spike_p: float,
+              spike_ms: float, obs_dir: str, seq_len=16):
+    from repro import obs
+    from repro.api import Experiment
+    from repro.api.hooks import Hook
+    from repro.configs import get_config
+    from repro.configs.base import (DataConfig, ISConfig, ObsConfig,
+                                    OptimConfig, RunConfig, SamplerConfig,
+                                    ShapeConfig)
+    from repro.data.pipeline import SyntheticLM
+
+    run = RunConfig(
+        model=get_config("lm-tiny"),
+        shape=ShapeConfig("bench", seq_len=seq_len, global_batch=b,
+                          kind="train"),
+        optim=OptimConfig(name="adamw", lr=1e-3, weight_decay=0.0),
+        # tau_th ~1 keeps the IS branch hot so every step pays the full
+        # B-row pool assembly + scoring + race-WOR selection
+        imp=ISConfig(enabled=True, presample_ratio=ratio, tau_th=1.0001,
+                     presample_impl=mode),
+        sampler=SamplerConfig(scheme="presample",
+                              host_score=(mode == "host")),
+        data=DataConfig(prefetch_depth=3, device_put=True),
+        obs=ObsConfig(enabled=True, dir=obs_dir),
+        remat=False)
+    src = _SpikySource(SyntheticLM(run.model.vocab_size, seq_len,
+                                   n_examples=1 << 14, seed=3, host_id=0,
+                                   n_hosts=1), spike_p, spike_ms)
+
+    class _Rec(Hook):
+        def __init__(self):
+            self.sigs = []
+
+        def on_step_start(self, loop, step, batch, meta):
+            self.sigs.append(meta.signature())
+
+    rec, stamps = _Rec(), []
+    exp = Experiment(run, source=src)
+    obs.reset()                      # isolate this run's counters
+    exp.fit(hooks=[rec], callback=lambda i, m: stamps.append(
+        time.perf_counter()), steps=steps)
+    snap = obs.snapshot()
+    dts = np.diff(np.asarray(stamps))[5:]
+    return {"mode": mode, "ratio": ratio, "b": b, "steps": steps,
+            "spike_p": spike_p, "spike_ms": spike_ms,
+            "ms_per_step": iqm(dts) * 1e3,
+            "ms_per_step_p50": float(np.median(dts) * 1e3),
+            "ms_per_step_mean": float(np.mean(dts) * 1e3),
+            # the transfer ledger, per step: pool H2D (worker or engine),
+            # train-path H2D (full batch vs index+weights), score D2H
+            "pool_h2d_B": (snap.get("plane.device_put_bytes", 0)
+                           + snap.get("engine.h2d_bytes", 0)) / steps,
+            "trainpath_h2d_B": (snap.get("loop.h2d_bytes", 0) / steps
+                                if mode == "host"
+                                else snap.get("engine.h2d_bytes", 0) / steps),
+            "score_d2h_B": snap.get("sampler.d2h_bytes", 0) / steps,
+            "device_put_skipped": snap.get("plane.device_put_skipped", 0),
+            "plan_sigs": rec.sigs}
+
+
+def bench_fused_presample(ratios=(2, 3, 5), bs=(256, 1024), steps=18,
+                          spike_p=0.45, spike_ms_per_row=0.85):
+    """host_score vs fused presample sweep → BENCH_fused.json."""
+    from repro import obs
+    from repro.configs.base import ObsConfig
+
+    out = {}
+    with tempfile.TemporaryDirectory() as tmp:
+        for b in bs:
+            for ratio in ratios:
+                spike_ms = spike_ms_per_row * ratio * b
+                host = _run_mode("host", ratio, b, steps, spike_p,
+                                 spike_ms, tmp)
+                fused = _run_mode("fused", ratio, b, steps, spike_p,
+                                  spike_ms, tmp)
+                assert host.pop("plan_sigs") == fused.pop("plan_sigs"), (
+                    f"ratio{ratio}.b{b}: fused plans diverged from host")
+                out[f"ratio{ratio}.b{b}.host"] = host
+                out[f"ratio{ratio}.b{b}.fused"] = fused
+                speed = host["ms_per_step"] / fused["ms_per_step"]
+                shrink = (host["trainpath_h2d_B"]
+                          / max(fused["trainpath_h2d_B"], 1.0))
+                emit(f"fused.ratio{ratio}.b{b}.host.ms_per_step",
+                     round(host["ms_per_step"], 2))
+                emit(f"fused.ratio{ratio}.b{b}.fused.ms_per_step",
+                     round(fused["ms_per_step"], 2),
+                     f"host/fused={speed:.3f} "
+                     f"trainpath_h2d_shrink={shrink:.1f}x "
+                     f"plans_identical=True")
+        # spike_p=0 control at ratio 3: the compute-bound floor
+        # (interpret kernels on CPU — no latency to absorb, the paths
+        # tie to noise on one core)
+        for b in bs:
+            host = _run_mode("host", 3, b, steps, 0.0, 0.0, tmp)
+            fused = _run_mode("fused", 3, b, steps, 0.0, 0.0, tmp)
+            assert host.pop("plan_sigs") == fused.pop("plan_sigs")
+            out[f"control_quiet.b{b}.host"] = host
+            out[f"control_quiet.b{b}.fused"] = fused
+            emit(f"fused.control_quiet.b{b}.ms_per_step", None,
+                 f"host={host['ms_per_step']:.1f} "
+                 f"fused={fused['ms_per_step']:.1f}")
+    obs.configure(ObsConfig())       # leave the process registry as found
+    save_json("BENCH_fused", out)
+    return out

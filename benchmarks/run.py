@@ -16,13 +16,14 @@ import traceback
 
 def main() -> None:
     from benchmarks import paper_figures as pf
-    from benchmarks import (data_plane, obs_overhead, roofline,
-                            sampler_compare, scoring_overhead,
+    from benchmarks import (data_plane, fused_presample, obs_overhead,
+                            roofline, sampler_compare, scoring_overhead,
                             selection_scale, svrg_compare)
 
     suites = {
         "sampler": sampler_compare.sampler_compare,
         "pipeline": data_plane.bench_data_plane,
+        "fused": fused_presample.bench_fused_presample,
         "selection": selection_scale.bench_selection_scale,
         "obs": obs_overhead.bench_obs_overhead,
         "fig1": pf.fig1_variance_reduction,

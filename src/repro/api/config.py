@@ -265,7 +265,12 @@ def _prod(model: ModelConfig) -> RunConfig:
     return RunConfig(
         model=model,
         optim=OptimConfig(name="adamw", lr=3e-4),
-        imp=ISConfig(enabled=True, presample_ratio=3),
+        # fused presample: pool stays device-resident (Pallas chain on
+        # TPU, interpret composition elsewhere) and the DataPlane
+        # pipelines the B-row candidate assembly — same plans as the
+        # host path, less host<->device traffic
+        imp=ISConfig(enabled=True, presample_ratio=3,
+                     presample_impl="fused"),
         # production runs are observable by default: JSONL telemetry
         # (loop spans, data-plane stages, collective/store counters,
         # IS-health gauges) every 10 accepted steps

@@ -206,11 +206,23 @@ class ISConfig:
     overlap_scoring: bool = True
     # store-backed selection plane (history / selective): "gather" rebuilds
     # the full O(n) global score vector per plan (exact PR-4 semantics,
-    # bitwise identical at any host count); "sharded" (default) selects
-    # from score shards — Gumbel/exponential top-k candidate exchange +
-    # O(1) sufficient-stat collectives, O(n/H + b·H) per plan instead of
-    # O(n). See repro.sampler.selection.
-    selection_impl: str = "sharded"
+    # bitwise identical at any host count); "sharded" selects from score
+    # shards — Gumbel/exponential top-k candidate exchange + O(1)
+    # sufficient-stat collectives, O(n/H + b·H) per plan instead of O(n).
+    # "auto" (default) picks from the measured H/n crossover in
+    # BENCH_selection.json: gather below n ≈ 24·b·H (and always at H=1,
+    # where the strided gather is an identity), sharded above it. See
+    # repro.sampler.selection.resolve_selection_impl.
+    selection_impl: str = "auto"
+    # presample execution path: "step" runs Algorithm 1 inside the jitted
+    # train step (score+resample on device, b·ratio rows shipped every
+    # step); "host" is the engine-backed host path (sampler.host_score's
+    # spelling as a first-class knob); "fused" keeps the candidate pool
+    # device-resident — the engine scores it in place and the selected
+    # rows are gathered ON DEVICE (repro.kernels.fused_presample), so
+    # only the B-float score vector crosses the host boundary. "auto"
+    # defers to sampler.host_score ("host" when set, else "step").
+    presample_impl: str = "auto"
 
     def resolved_tau_th(self, b: int) -> float:
         if self.tau_th > 0:

@@ -277,6 +277,13 @@ class DataPlane:
         self.sampler = sampler
         self.depth = max(int(depth), 1)
         self.pipelined = bool(getattr(sampler, "plan_is_pure", False))
+        # finalize protocol: a pipelined sampler that carves its selection
+        # out of pre-gathered candidate pools (fused presample). The plane
+        # pre-plans / pre-gathers / uploads the POOL on its workers; the
+        # sampler finalises (score → select → on-device gather) at
+        # begin/finish time so scoring still overlaps the update.
+        self.finalize = (self.pipelined and
+                         callable(getattr(sampler, "begin_finalize", None)))
         if device_put is True:
             device_put = jax.device_put
         self._device_put = device_put or None
@@ -307,6 +314,8 @@ class DataPlane:
         self._g_depth = obs.gauge("plane.queue_depth")
         self._c_stalls = obs.counter("plane.credit_stalls")
         self._c_batches = obs.counter("plane.batches")
+        self._c_put_skipped = obs.counter("plane.device_put_skipped")
+        self._c_put_bytes = obs.counter("plane.device_put_bytes")
 
     # -- the loop-facing two-phase handshake ----------------------------------
     def begin(self, pstate, step: int, params=None):
@@ -314,12 +323,28 @@ class DataPlane:
             return self.sampler.begin(pstate, step, params=params)
         if not self._started:
             self.start(pstate, step)
+        if self.finalize:
+            # pop the pre-gathered candidate pool NOW so the sampler can
+            # dispatch its scoring pass behind the in-flight update
+            pool, cplan, cursor = self.next()
+            return self.sampler.begin_finalize(cplan, pool, cursor,
+                                               params=params)
         return {"step": step}
 
     def finish(self, handle, params=None):
         if not self.pipelined:
             return self.sampler.finish(handle, params=params)
-        batch, plan, cursor = self.next()
+        if self.finalize:
+            batch, plan, cursor = self.sampler.finish_finalize(
+                handle, params=params)
+            if self._device_put is not None:
+                # the finalized batch skips the worker's H2D stage; run it
+                # through the same gate so an on-device batch records its
+                # skip (and a host fallback batch still gets transferred)
+                with self._sp_device_put:
+                    batch = self._put_batch(batch)
+        else:
+            batch, plan, cursor = self.next()
         self.sampler.notify_consumed(plan)
         return batch, plan, cursor
 
@@ -453,10 +478,26 @@ class DataPlane:
             if item[0] == "ok":
                 try:
                     with self._sp_device_put:
-                        item = ("ok", self._device_put(item[1])) + item[2:]
+                        item = ("ok", self._put_batch(item[1])) + item[2:]
                 except BaseException as e:
                     item = ("err", e)
             self._out_q.put(item)
+
+    def _put_batch(self, batch):
+        """The H2D stage, with receipts: an already-device batch passes
+        through untouched (``plane.device_put_skipped`` proves the skip);
+        host batches are charged by size to ``plane.device_put_bytes`` —
+        together the two counters are the transfer side of the fused-path
+        benchmark's evidence."""
+        if (isinstance(batch, dict) and batch
+                and all(isinstance(v, jax.Array) for v in batch.values())):
+            self._c_put_skipped.inc()
+            return batch
+        if isinstance(batch, dict):
+            self._c_put_bytes.inc(sum(
+                np.asarray(v).nbytes for v in batch.values()
+                if not isinstance(v, jax.Array)))
+        return self._device_put(batch)
 
 
 class Prefetcher:

@@ -1,0 +1,110 @@
+"""jit'd public wrapper for the fused select→score→gather presample op.
+
+``fused_presample`` is the whole device side of Algorithm 1's presample
+step as ONE jitted program: blockwise CE scoring of the candidate pool
+(the ``ce_score`` Pallas stage), per-row score reduction + race-key
+generation (this package's Pallas stages), the partial top-(b+1)
+(``lax.top_k``, same jit — the ``topk_keys`` idiom) and the on-device
+row gather of the b winners. On TPU every stage is a Pallas kernel;
+elsewhere (this CPU container) the kernel bodies run in interpret mode.
+Nothing pool-sized crosses the host boundary: callers that keep the τ
+controller on host (``FusedPresampleSampler``) pull only the (B,) score
+vector down and push the (b,) selection up.
+
+Selection semantics are the race-WOR + Horvitz–Thompson math of
+``selection.presample_race_select`` (the host f64 twin used for plan
+bookkeeping): identical uint32 hashes, f32 float tail — candidate sets
+agree, key bytes do not (the documented ``topk_keys`` contract).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ce_score.ce_score import ce_score_pallas
+from repro.kernels.fused_presample.fused_presample import (pool_keys_pallas,
+                                                           row_score_pallas)
+
+
+def _on_tpu():
+    return jax.default_backend() == "tpu"
+
+
+def _ctx_u32(ctx):
+    """``selection.hash_context`` values span the full uint32 range —
+    coerce OUTSIDE the jit boundary (a bare Python int ≥ 2³¹ would
+    overflow the default int32 abstraction)."""
+    return jnp.asarray(np.uint32(int(ctx) & 0xFFFFFFFF))
+
+
+def select_pool(scores, ctx, *, k, block_t=1024):
+    return _select_pool(scores, _ctx_u32(ctx), k=k, block_t=block_t)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_t"))
+def _select_pool(scores, ctx, *, k, block_t=1024):
+    """Race-WOR top-k over one candidate pool's fresh (B,) scores →
+    (idx, probs, weights, threshold), all device arrays (f32 keys).
+
+    The selection half of ``fused_presample``, exposed on its own so the
+    parity tests can drive the kernel selection and the numpy twin
+    (``selection.presample_race_select``) with identical score bytes.
+    ``k == B`` is the degenerate ratio-1 pool: everything is selected
+    with the exact-mean weights 1/B (π = 1, threshold +inf)."""
+    B = scores.shape[0]
+    scores = scores.astype(jnp.float32)
+    total = jnp.maximum(jnp.sum(scores), jnp.float32(1e-20))
+    g = scores / total
+    if k >= B:
+        return (jnp.arange(B, dtype=jnp.int32), g,
+                jnp.full((B,), 1.0 / max(B, 1), jnp.float32),
+                jnp.float32(jnp.inf))
+    r = pool_keys_pallas(scores, jnp.asarray(ctx, jnp.uint32).reshape(1),
+                         (1.0 / total).reshape(1), block_t=block_t,
+                         interpret=not _on_tpu())
+    neg, idx = jax.lax.top_k(-r, k + 1)      # ascending keys; ties → low idx
+    thr = -neg[k]
+    idx = idx[:k]
+    probs = g[idx]
+    # HT weights off the (k+1)-th key: π = 1 − exp(−g·τ*), w = 1/(B·π)
+    pi = -jnp.expm1(-probs * thr)
+    w = 1.0 / (B * jnp.maximum(pi, jnp.float32(1e-30)))
+    return idx, probs, w, thr
+
+
+def fused_presample(logits, labels, rows, ctx, *, k, block_b=128,
+                    block_t=128, block_v=2048):
+    return _fused_presample(logits, labels, rows, _ctx_u32(ctx), k=k,
+                            block_b=block_b, block_t=block_t,
+                            block_v=block_v)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_b", "block_t",
+                                             "block_v"))
+def _fused_presample(logits, labels, rows, ctx, *, k, block_b=128,
+                     block_t=128, block_v=2048):
+    """One device program for the presample step's data side.
+
+    logits: (B, T, V) pool logits; labels: (B, T) targets (< 0 =
+    unsupervised, masked out of the score like ``LM.sample_stats``);
+    rows: dict of (B, ...) pool arrays to gather the winners from; ctx:
+    the plan's ``selection.hash_context`` uint32; k: rows to select.
+
+    Returns (sel_rows, idx, weights, scores): the k winning rows (dict,
+    device), their pool indices, HT weights, and the full (B,) score
+    vector (the caller's ``ScoreStore`` feedback — the only pool-sized
+    thing worth pulling to host).
+    """
+    mask = labels >= 0
+    _, g2 = ce_score_pallas(
+        logits.reshape(-1, logits.shape[-1]),
+        jnp.maximum(labels.reshape(-1), 0).astype(jnp.int32),
+        block_t=block_t, block_v=block_v, interpret=not _on_tpu())
+    scores = row_score_pallas(g2.reshape(labels.shape), mask,
+                              block_b=block_b, interpret=not _on_tpu())
+    idx, _, w, _ = _select_pool(scores, ctx, k=k)
+    sel = {name: jnp.take(v, idx, axis=0) for name, v in rows.items()}
+    return sel, idx, w, scores

@@ -1,0 +1,56 @@
+"""Pure-jnp oracle for the fused presample op: the UNFUSED
+``ce_score ∘ top-k ∘ gather`` composition.
+
+Each stage is the independent reference formulation — ``ce_score_ref``
+for the token stats (direct logsumexp, not the kernel's online softmax),
+a plain masked ``jnp`` row reduction, the shared ``pool_keys_math`` for
+the race keys (the uint32 hash must be bit-identical by definition, like
+``topk_keys/ref.py``), a stable argsort for the bottom-(k+1), and
+``jnp.take`` for the gather. Parity contract vs ``ops.fused_presample``
+(interpret mode): selection indices, gathered rows and weights are
+bitwise; scores agree to the ce_score kernel-vs-ref tolerance (the
+online-softmax accumulation order differs from the direct formulation
+by final ulps).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ce_score.ref import ce_score_ref
+from repro.kernels.fused_presample.fused_presample import pool_keys_math
+
+
+def select_pool_ref(scores, ctx, *, k):
+    """Oracle for ``ops.select_pool``: same key math, selection by stable
+    ascending argsort instead of the fused ``lax.top_k``."""
+    B = scores.shape[0]
+    scores = scores.astype(jnp.float32)
+    total = jnp.maximum(jnp.sum(scores), jnp.float32(1e-20))
+    g = scores / total
+    if k >= B:
+        return (jnp.arange(B, dtype=jnp.int32), g,
+                jnp.full((B,), 1.0 / max(B, 1), jnp.float32),
+                jnp.float32(jnp.inf))
+    r = pool_keys_math(scores, jnp.arange(B, dtype=jnp.uint32),
+                       jnp.asarray(np.uint32(int(ctx) & 0xFFFFFFFF)),
+                       1.0 / total)
+    order = jnp.argsort(r, stable=True)       # ties → low index, like top_k
+    idx = order[:k].astype(jnp.int32)
+    thr = r[order[k]]
+    probs = g[idx]
+    pi = -jnp.expm1(-probs * thr)
+    w = 1.0 / (B * jnp.maximum(pi, jnp.float32(1e-30)))
+    return idx, probs, w, thr
+
+
+def fused_presample_ref(logits, labels, rows, ctx, *, k):
+    """Oracle for ``ops.fused_presample`` (same return contract)."""
+    mask = labels >= 0
+    _, g2 = ce_score_ref(logits.astype(jnp.float32),
+                         jnp.maximum(labels, 0).astype(jnp.int32))
+    s = jnp.sum(g2 * mask.astype(jnp.float32), axis=-1)
+    scores = jnp.sqrt(jnp.maximum(s, 1e-20)).astype(jnp.float32)
+    idx, _, w, _ = select_pool_ref(scores, ctx, k=k)
+    sel = {name: jnp.take(v, idx, axis=0) for name, v in rows.items()}
+    return sel, idx, w, scores

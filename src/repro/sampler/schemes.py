@@ -38,6 +38,11 @@ Schemes:
   reuses the already-materialised candidate rows via ``plan.src_rows``.
   The ``ScoreStore`` is refreshed out-of-band with ALL B candidate
   scores every step (``HostPresampleSampler``).
+* ``presample`` + ``imp.presample_impl="fused"`` — the host path's twin
+  with the candidate pool kept device-resident: the engine scores it in
+  place and the winners are gathered on-chip; only the (B,) score vector
+  and the (b,) selection cross the host boundary, and the plans are
+  bitwise identical to the host path's (``FusedPresampleSampler``).
 * ``history`` — dataset-level importance sampling from the persistent
   score memory: draw b GLOBAL ids ∝ the smoothed/sharpened GLOBAL store
   distribution, attach unbiased weights 1/(n·pᵢ), zero scoring overhead.
@@ -67,6 +72,7 @@ from __future__ import annotations
 import jax
 import numpy as np
 
+from repro import obs
 from repro.data.pipeline import PipelineState
 from repro.data.plan import BatchPlan
 from repro.sampler import selection
@@ -96,7 +102,12 @@ class Sampler:
         self.assembler = assembler or Assembler(source)
         self._epoch = np.zeros((), np.int64)
         self.engine = None       # repro.scoring.ScoreEngine (bind_engine)
-        self.impl = self.icfg.selection_impl   # "gather" | "sharded"
+        # "auto" resolves from the measured BENCH_selection crossover;
+        # the counter records the resolved impl once per run for the logs
+        self.impl = selection.resolve_selection_impl(
+            self.icfg.selection_impl, n=source.n, b=self.b,
+            n_hosts=self.n_hosts)
+        obs.counter(f"sampler.selection_impl.{self.impl}").inc()
         # simulated multi-host runs inject these; None → the production
         # multihost_utils collectives (identity when n_hosts == 1)
         self.gather_fn = None       # strided store-shard gather
@@ -252,11 +263,14 @@ class HostPresampleSampler(Sampler):
     (forward-only, ``score_dtype``, no remat — launched in ``begin`` so
     it can overlap the previous update), all-gather the row-sharded
     scores, τ-gate on a host-side EMA mirroring the on-device controller,
-    and either resample b ∝ Ĝ with weights 1/(B·gᵢ) (IS phase) or take
-    the first b with unit weights (uniform phase). The selection plan
-    records ``src_rows`` so the assembler reuses the already-materialised
-    candidate rows. ALL B candidate scores refresh the ``ScoreStore``
-    out-of-band, so the memory warms ratio× faster than training alone.
+    and either draw the b-of-B race-WOR sample ∝ Ĝ with the
+    Horvitz–Thompson unbiasedness weights (IS phase — hash-keyed, shared
+    with the fused device selection kernel: ``selection.
+    presample_race_select``) or take the first b with unit weights
+    (uniform phase). The selection plan records ``src_rows`` so the
+    assembler reuses the already-materialised candidate rows. ALL B
+    candidate scores refresh the ``ScoreStore`` out-of-band, so the
+    memory warms ratio× faster than training alone.
 
     Candidate scoring is always a uniform (sequential) draw, so — unlike
     the host-chosen score-memory schemes — every step refreshes τ. The
@@ -266,6 +280,7 @@ class HostPresampleSampler(Sampler):
 
     scheme = "presample_host"
     plan_is_pure = False     # the selection plan needs engine scores
+    SALT = 4211              # the scheme's shared-PRNG / hash salt
 
     def __init__(self, run_cfg, source, assembler=None):
         super().__init__(run_cfg, source, assembler)
@@ -307,11 +322,26 @@ class HostPresampleSampler(Sampler):
                     "presample_host needs params to score: pass them to "
                     "begin() (overlapped) or finish() (synchronous)")
             fut = self.engine.score(params, handle["cands"])
-        local = np.asarray(jax.device_get(fut[1]), np.float32)
         cplan = handle["cplan"]
         # every host scored only its candidate slice; the gathered vector
         # (identity single-host) is what makes selection globally agreed
-        scores = self._gather_rows(local, cplan.n_rows)
+        scores = self._gather_rows(self._pull_scores(fut), cplan.n_rows)
+        plan = self._select_plan(cplan, scores, handle["step"])
+        batch = self._materialize(handle, cplan, plan)
+        return batch, plan, handle["nxt"]
+
+    def _pull_scores(self, fut) -> np.ndarray:
+        """Block on the score pass and bring THIS host's (B/H,) score
+        shard down — the one pool-sized D2H transfer either presample
+        path makes (the counter is the fused benchmark's evidence)."""
+        local = np.asarray(jax.device_get(fut[1]), np.float32)
+        obs.counter("sampler.d2h_bytes").inc(local.nbytes)
+        return local
+
+    def _select_plan(self, cplan, scores, step) -> BatchPlan:
+        """Gathered (B,) fresh scores -> the step's selection plan. The
+        ONE selection both the host and fused paths run, on identical
+        score bytes — which is what makes their plans bitwise equal."""
         # out-of-band refresh: every candidate's fresh score enters the
         # memory, trained on or not
         self.store.update(cplan.gids, scores)
@@ -325,23 +355,21 @@ class HostPresampleSampler(Sampler):
             + (1.0 - self.icfg.ema) * tau, np.float64)
         if not self.active:
             rows = np.arange(self.b, dtype=np.int64)
-            plan = BatchPlan(step=cplan.step, epoch=cplan.epoch,
+            return BatchPlan(step=cplan.step, epoch=cplan.epoch,
                              gids=cplan.gids[:self.b], src_rows=rows,
                              weights=np.ones((self.b,), np.float32))
-        else:
-            rng = np.random.default_rng(np.random.SeedSequence(
-                [self.seed, 4211, int(handle["step"])]))
-            idx = rng.choice(self.B, size=self.b, replace=True, p=g)
-            plan = BatchPlan(
-                step=cplan.step, epoch=cplan.epoch, gids=cplan.gids[idx],
-                probs=g[idx], src_rows=idx,
-                # the paper's unbiasedness weights wᵢ = 1/(B·gᵢ)
-                weights=(1.0 / (self.B * np.maximum(g[idx], 1e-20))
-                         ).astype(np.float32),
-                is_flag=max(float(self.tau_ema), 1.0))
-        batch = self.assembler.assemble(plan,
-                                        parent=(cplan, handle["cands"]))
-        return batch, plan, handle["nxt"]
+        ctx = selection.hash_context(self.seed, self.SALT, int(step))
+        idx, g, w, _thr = selection.presample_race_select(
+            scores, self.b, ctx=ctx)
+        return BatchPlan(step=cplan.step, epoch=cplan.epoch,
+                         gids=cplan.gids[idx], probs=g[idx], src_rows=idx,
+                         weights=w, is_flag=max(float(self.tau_ema), 1.0))
+
+    def _materialize(self, handle, cplan, plan):
+        """Selection plan -> device-feedable batch; the host path reuses
+        the already-materialised candidate rows on host."""
+        return self.assembler.assemble(plan,
+                                       parent=(cplan, handle["cands"]))
 
     def next_batch(self, pstate: PipelineState, step: int, params=None):
         return self.finish(self.begin(pstate, step, params), params)
@@ -360,6 +388,93 @@ class HostPresampleSampler(Sampler):
         super().load_state_dict(d)
         self.tau_ema = np.asarray(d.get("tau_ema", 0.0),
                                   np.float64).reshape(())
+
+
+class FusedPresampleSampler(HostPresampleSampler):
+    """Algorithm 1 with the candidate pool DEVICE-RESIDENT end to end
+    (``imp.presample_impl="fused"`` — repro.kernels.fused_presample).
+
+    Same planning, τ controller, selection (``_select_plan``) and
+    checkpoint state as the host path — the plans are bitwise identical
+    by construction — but the data moves differently:
+
+    * the pool is uploaded ONCE (``engine.score_select`` keeps the device
+      refs; under a pipelined ``DataPlane`` the upload itself happens on
+      the plane's device-put worker, off the critical path);
+    * only the (B,) score vector comes down (τ/selection/ScoreStore live
+      on host — checkpointed f64 state);
+    * the winning rows are gathered ON DEVICE (``engine.take_rows``) —
+      never re-uploaded from host.
+
+    Single-host, its candidate plans are pure cursor math, so the plane
+    pre-plans AND pre-gathers the expensive B-row pools on worker threads
+    (the ``begin_finalize``/``finish_finalize`` protocol — the host path
+    assembles B rows synchronously inside ``begin``). Multi-host it
+    degrades to the parent host path wholesale (row-sharded pools need
+    the all-gathered selection anyway), keeping plan equality trivial.
+    """
+
+    scheme = "presample_fused"
+
+    def __init__(self, run_cfg, source, assembler=None):
+        super().__init__(run_cfg, source, assembler)
+        self.plan_is_pure = (self.n_hosts == 1)
+
+    @property
+    def fetch_size(self) -> int:
+        return self.B
+
+    def plan(self, pstate: PipelineState, step: int):
+        # what the DataPlane pre-plans/pre-gathers is the candidate POOL;
+        # selection is carved out of it at finalize time
+        return self.candidate_plan(pstate, step)
+
+    def begin(self, pstate: PipelineState, step: int, params=None):
+        if self.n_hosts > 1:
+            return super().begin(pstate, step, params)
+        self._tick_epoch(pstate.epoch)
+        cplan, nxt = self.candidate_plan(pstate, step)
+        cands = self.assembler.assemble(cplan)
+        return self.begin_finalize(cplan, cands, nxt, params=params)
+
+    # -- the DataPlane finalize protocol --------------------------------------
+    def begin_finalize(self, cplan, pool, cursor, params=None):
+        """Phase 1 over an already-materialised candidate pool: push it up
+        and dispatch the (async) score pass so it runs behind whatever
+        update is in flight. ``pool`` may already be device arrays (the
+        plane's device-put worker) — then the upload here is free."""
+        handle = {"step": cplan.step, "cplan": cplan, "cands": pool,
+                  "nxt": cursor, "fut": None, "dev": None}
+        if self.overlap and params is not None and self.engine is not None:
+            sel = self.engine.score_select(params, pool)
+            handle["dev"], handle["fut"] = sel["pool"], sel["fut"]
+        return handle
+
+    def finish(self, handle, params=None):
+        if "dev" not in handle:              # parent-path handle (multi-host)
+            return super().finish(handle, params)
+        if handle["fut"] is None:            # synchronous path (overlap off)
+            if self.engine is None:
+                raise RuntimeError(
+                    "presample_fused scores through the decoupled engine — "
+                    "call bind_engine(ScoreEngine(...)) first")
+            if params is None:
+                raise RuntimeError(
+                    "presample_fused needs params to score: pass them to "
+                    "begin() (overlapped) or finish() (synchronous)")
+            sel = self.engine.score_select(params, handle["cands"])
+            handle["dev"], handle["fut"] = sel["pool"], sel["fut"]
+        return super().finish(handle, params)
+
+    finish_finalize = finish
+
+    def _materialize(self, handle, cplan, plan):
+        if handle.get("dev") is None:
+            return super()._materialize(handle, cplan, plan)
+        # on-device gather out of the resident pool: the b winning rows
+        # never cross the host boundary
+        return self.engine.take_rows({"pool": handle["dev"]},
+                                     plan.src_rows, plan.weights)
 
 
 class HistorySampler(Sampler):
@@ -566,23 +681,34 @@ class SelectiveSampler(Sampler):
 
 SCHEMES = {c.scheme: c for c in
            (UniformSampler, PresampleSampler, HostPresampleSampler,
-            HistorySampler, SelectiveSampler)}
+            FusedPresampleSampler, HistorySampler, SelectiveSampler)}
 
 
 def make_sampler(run_cfg, source, assembler=None) -> Sampler:
-    if run_cfg.imp.selection_impl not in ("gather", "sharded"):
+    if run_cfg.imp.selection_impl not in ("auto", "gather", "sharded"):
         raise ValueError(
             f"unknown imp.selection_impl {run_cfg.imp.selection_impl!r}; "
-            f"have ('gather', 'sharded')")
+            f"have ('auto', 'gather', 'sharded')")
+    pimpl = run_cfg.imp.presample_impl
+    if pimpl not in ("auto", "step", "host", "fused"):
+        raise ValueError(
+            f"unknown imp.presample_impl {pimpl!r}; "
+            f"have ('auto', 'step', 'host', 'fused')")
     scheme = run_cfg.sampler.scheme
-    if scheme == "presample" and run_cfg.sampler.host_score:
-        # engine-backed host-side Algorithm 1 (scoring off the update path)
-        scheme = "presample_host"
+    if scheme == "presample":
+        # presample execution routing: "auto" keeps the legacy behaviour
+        # (the host_score flag picks the engine-backed host path over the
+        # in-step device path); "host"/"fused"/"step" force theirs
+        if pimpl == "auto":
+            pimpl = "host" if run_cfg.sampler.host_score else "step"
+        scheme = {"step": "presample", "host": "presample_host",
+                  "fused": "presample_fused"}[pimpl]
     if scheme not in SCHEMES:
         raise ValueError(f"unknown sampler scheme {scheme!r}; "
                          f"have {sorted(SCHEMES)}")
     if not run_cfg.imp.enabled and scheme in ("history", "selective",
-                                              "presample_host"):
+                                              "presample_host",
+                                              "presample_fused"):
         # imp.enabled=False is the global IS kill-switch; score-memory /
         # host-side selection IS importance sampling, so fall back to
         # uniform (on-device presample handles the switch itself via its

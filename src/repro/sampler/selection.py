@@ -249,6 +249,58 @@ def ht_weights(probs, threshold: float, n: int) -> np.ndarray:
     return (1.0 / (n * np.maximum(pi, 1e-300))).astype(np.float32)
 
 
+def presample_race_select(scores, k: int, *, ctx: int):
+    """Race-WOR selection of k of B presample candidates ∝ their fresh
+    scores — the ONE host selection both presample paths (``host`` and
+    ``fused``) share, which is what makes their plans bitwise identical.
+
+    Pool-local twin of the sharded store selection above: normalise the
+    candidate scores to the paper's ĝ, key every pool row with the
+    deterministic exponential race key r = −log(u(row, ctx))/g (ids here
+    are pool positions 0..B−1, not global ids — the candidate plan maps
+    them back), take the k smallest keys, and weight by the (k+1)-th-key
+    Horvitz–Thompson threshold — the WOR analogue of the paper's
+    wᵢ = 1/(B·gᵢ). The degenerate k == B pool (ratio 1) selects
+    everything with the exact-mean weights 1/B (πᵢ = 1).
+
+    Returns (idx, g, weights, threshold): pool row indices (int64, race
+    order), the full normalised f64 score vector, f32 HT weights, and
+    the f64 threshold (+inf when degenerate). The device twin is
+    ``repro.kernels.fused_presample`` (f32 keys — candidate sets agree,
+    key bytes do not, same contract as ``topk_keys``).
+    """
+    s = np.asarray(scores, np.float64).reshape(-1)
+    B = s.size
+    g = s / max(s.sum(), 1e-20)
+    k = int(k)
+    if k >= B:
+        return (np.arange(B, dtype=np.int64), g,
+                np.full((B,), 1.0 / max(B, 1), np.float32), float("inf"))
+    u = hash_uniform(np.arange(B, dtype=np.int64), ctx)
+    r = -np.log(u) / np.maximum(g, 1e-20)
+    order = np.lexsort((np.arange(B), r))
+    idx = order[:k].astype(np.int64)
+    thr = float(r[order[k]])
+    return idx, g, ht_weights(g[idx], thr, B), thr
+
+
+def resolve_selection_impl(impl: str, *, n: int, b: int,
+                           n_hosts: int) -> str:
+    """Resolve ``imp.selection_impl="auto"`` from the measured crossover.
+
+    BENCH_selection.json (b=64, H ∈ {1,8,32}, n ∈ {1e4,1e5,1e6}): the
+    O(n) gather wins whenever the strided gather is cheap relative to the
+    O(b·H) candidate exchange — always at H=1 (the gather is an identity
+    there), and at small n/H. The sharded path wins once n ≳ 24·b·H
+    (gather 1.4–21× slower across the measured grid). An explicit
+    "gather"/"sharded" still forces either path."""
+    if impl != "auto":
+        return impl
+    if n_hosts <= 1:
+        return "gather"
+    return "sharded" if n >= 24 * b * n_hosts else "gather"
+
+
 def sample_sharded(store, dist: GlobalDist, k: int, *, seed: int, salt: int,
                    step: int, exchange=None, n_hosts: int = 1,
                    use_kernel=None):

@@ -48,6 +48,9 @@ class ScoreEngine:
         sd = getattr(icfg, "score_dtype", None)
         self.score_dtype = None if sd in (None, "", "none") else sd
         self._jitted = {}       # batch structure -> jitted fn
+        self._take = jax.jit(
+            lambda pool, idx: {k: jnp.take(v, idx, axis=0)
+                               for k, v in pool.items()})
 
     # -- the score function itself (pure; dryrun lowers this AOT) -----------
     def fwd(self, params, batch):
@@ -92,8 +95,48 @@ class ScoreEngine:
         # the span covers dispatch cost only, not compute — the pass is
         # async; a fat span here means host-side tracing/transfer overhead
         with obs.span("engine.dispatch"):
-            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            batch = self._to_device(batch)
             return self._fn(batch)(params, batch)
+
+    def _to_device(self, batch):
+        """jnp.asarray every value, charging anything that actually crosses
+        the host boundary to ``engine.h2d_bytes`` (already-device arrays are
+        free — that counter difference is the fused path's transfer claim)."""
+        h2d = sum(np.asarray(v).nbytes for v in batch.values()
+                  if not isinstance(v, jax.Array))
+        if h2d:
+            obs.counter("engine.h2d_bytes").inc(h2d)
+        return {k: jnp.asarray(v) for k, v in batch.items()}
+
+    # -- fused presample entries ---------------------------------------------
+    def score_select(self, params, batch):
+        """Device-resident scoring for the fused presample path: push the
+        candidate pool up ONCE, dispatch the score pass on it, and keep the
+        device refs so the winners can later be gathered on-chip
+        (``take_rows``) instead of re-uploaded from host. Returns
+        ``{"pool": device batch, "fut": (loss_ps, scores)}`` — same async
+        non-blocking contract as ``score``."""
+        pool = self._to_device(batch)
+        obs.counter("engine.dispatches").inc()
+        with obs.span("engine.dispatch"):
+            fut = self._fn(pool)(params, pool)
+        return {"pool": pool, "fut": fut}
+
+    def take_rows(self, handle, idx, weights=None):
+        """On-device row gather of the selection out of a ``score_select``
+        pool: only the (b,) index vector (and optional per-row weights)
+        cross the host boundary; the rows themselves never left the chip."""
+        obs.counter("engine.row_gathers").inc()
+        with obs.span("engine.take_rows"):
+            idx = np.ascontiguousarray(np.asarray(idx, np.int32))
+            h2d = idx.nbytes + (0 if weights is None
+                                else np.asarray(weights).nbytes)
+            obs.counter("engine.h2d_bytes").inc(h2d)
+            batch = dict(self._take(handle["pool"], jnp.asarray(idx)))
+            if weights is not None:
+                batch["weights"] = jnp.asarray(
+                    np.asarray(weights, np.float32))
+            return batch
 
     def score_host(self, params, batch):
         """Blocking convenience: numpy (loss_ps, scores)."""

@@ -1,14 +1,20 @@
 """CI telemetry-schema smoke: train with ``obs.enabled=true`` and
 validate the emitted JSONL against the documented record schema.
 
-Two 20-step legs share one process (and therefore one registry):
+Three 20-step legs share one process (and therefore one registry):
 
 * a **presample** leg on the pipelined data plane — covers the loop
   spans and the plane stage spans;
 * a **history** leg on a tiny source with a sharpened distribution so
   the τ-gate actually opens — covers the store and collectives counters
   and puts real signal into the IS-health gauges (ESS, τ margin, the
-  §3.3 variance-gain/speedup estimates).
+  §3.3 variance-gain/speedup estimates). ``selection_impl`` is forced to
+  ``sharded``: the required allreduce counters belong to that path, and
+  the ``auto`` default resolves to ``gather`` at a single host;
+* a **fused-presample** leg (``imp.presample_impl=fused``, interpret-mode
+  kernels on CPU) — covers the fused data plane: ``engine.row_gathers``
+  (on-device selection gathers), ``sampler.d2h_bytes`` (the score pull),
+  and the plane's device-put skip counter.
 
 Every record of every emitted file must match the schema from
 ``repro.obs.sinks`` (also in the README's Observability section), and
@@ -36,6 +42,10 @@ REQUIRED_COUNTERS = ["loop.steps", "plane.batches",
                      "store.invalidations"]
 REQUIRED_GAUGES = ["health.tau", "health.tau_margin", "health.is_active",
                    "health.variance_gain", "health.speedup_est"]
+# the fused presample leg's plane: on-device row gathers, the score-pull
+# D2H bytes, and the device-put skip (pool already on device)
+REQUIRED_FUSED = ["engine.row_gathers", "sampler.d2h_bytes",
+                  "plane.device_put_skipped"]
 REQUIRED_STEP = ["step.loss", "step.dt", "step.attempts", "step.dt_total",
                  "step.variance_gain", "step.speedup_est"]
 
@@ -69,12 +79,17 @@ def main():
     run2 = build_run(arch="lm-tiny", preset="smoke", overrides={
         **common, "sampler.scheme": "history", "sampler.tau_th": "1.001",
         "sampler.min_coverage": "0.2", "sampler.smoothing": "0.02",
-        "sampler.temperature": "0.3"})
+        "sampler.temperature": "0.3", "imp.selection_impl": "sharded"})
     src = repro.SyntheticLM(run2.model.vocab_size, run2.shape.seq_len,
                             n_examples=64, seed=0)
     _, hist = repro.Experiment(run2, source=src).fit()
     assert any(h.get("sampler_active") for h in hist), \
         "history gate never opened: the health leg carries no IS signal"
+    # leg 3: fused device presample (interpret-mode kernel composition on
+    # CPU — same ops the TPU path runs as Pallas programs)
+    run3 = build_run(arch="lm-tiny", preset="smoke", overrides={
+        **common, "imp.presample_impl": "fused", "imp.tau_th": "1.0001"})
+    repro.Experiment(run3, source="lm").fit()
 
     import glob
     files = sorted(glob.glob(f"{tmp}/obs-p*.jsonl"))
@@ -92,6 +107,8 @@ def main():
         assert last.get(name, 0) > 0, f"counter {name} dead"
     for name in REQUIRED_GAUGES:
         assert name in last, f"gauge {name} missing"
+    for name in REQUIRED_FUSED:
+        assert last.get(name, 0) > 0, f"fused-path counter {name} dead"
     assert last["health.variance_gain"] > 0, "variance gain never > 0"
     stepped = [r["metrics"] for r in recs if r["event"] == "step"]
     for name in REQUIRED_STEP:

@@ -1,0 +1,284 @@
+"""The fused device presample path (``imp.presample_impl="fused"``).
+
+Three layers, mirroring how the path is built:
+
+* the KERNEL op (``repro.kernels.fused_presample``) against its unfused
+  ``ce_score_ref ∘ argsort ∘ take`` oracle in interpret mode, including
+  the ragged edges (B % block ≠ 0, V % block_v ≠ 0, k = B degenerate
+  pool) and the selection stage driven with identical score bytes
+  (bitwise there — the float-tail caveat only applies across the
+  kernel/ref CE-scoring divide);
+* the SELECTION twin-ship: ``ops.select_pool`` (f32, on device) and
+  ``selection.presample_race_select`` (f64, host — what plans record)
+  agree on the candidate set for the same ctx (the documented
+  ``topk_keys`` f32-vs-f64 contract: sets agree, key bytes do not);
+* the PLUMBING end to end: fused vs host_score produce bitwise-identical
+  ``BatchPlan``s and identical losses; the fused plan cursor resumes
+  bitwise across DataPlane depths; the plane's device-put stage skips
+  (and counts the skip for) already-device batches.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.api import Experiment, Hook
+from repro.configs import get_config
+from repro.configs.base import (DataConfig, ISConfig, ObsConfig, OptimConfig,
+                                RunConfig, SamplerConfig, ShapeConfig)
+from repro.data.pipeline import DataPlane, PipelineState, SyntheticLM
+from repro.kernels.fused_presample import ops, ref
+from repro.sampler import make_sampler, selection
+
+
+# ---------------------------------------------------------------------------
+# the fused op vs its unfused oracle (interpret mode)
+# ---------------------------------------------------------------------------
+def _pool(rng, B, T, V, frac_masked=0.2):
+    logits = jnp.asarray(rng.normal(size=(B, T, V)).astype(np.float32))
+    labels = rng.integers(0, V, size=(B, T))
+    labels[rng.random(size=(B, T)) < frac_masked] = -1
+    rows = {"tokens": jnp.asarray(
+                rng.integers(0, V, size=(B, T)).astype(np.int32)),
+            "labels": jnp.asarray(labels.astype(np.int32))}
+    return logits, jnp.asarray(labels.astype(np.int32)), rows
+
+
+@pytest.mark.parametrize("B,T,V,k", [
+    (24, 8, 64, 8),       # aligned-ish small case
+    (37, 13, 97, 8),      # B % block_b != 0 AND V % block_v != 0
+    (130, 7, 50, 48),     # B > one row-block with a ragged tail
+])
+def test_fused_op_matches_unfused_composition(B, T, V, k):
+    rng = np.random.default_rng(B + k)
+    logits, labels, rows = _pool(rng, B, T, V)
+    ctx = selection.hash_context(123, 4211, 7)
+    sel, idx, w, scores = ops.fused_presample(logits, labels, rows, ctx,
+                                              k=k, block_b=16, block_v=32)
+    sel_r, idx_r, w_r, scores_r = ref.fused_presample_ref(
+        logits, labels, rows, ctx, k=k)
+    # CE scoring: online-softmax kernel vs direct-lse ref — allclose, not
+    # bitwise (the documented ce_score contract)
+    np.testing.assert_allclose(np.asarray(scores), np.asarray(scores_r),
+                               rtol=1e-5, atol=1e-6)
+    # selection + gather: same winners, exact take (weights inherit the
+    # scores' final-ulp divergence through g = s/Σs, so tight-allclose)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(idx_r))
+    np.testing.assert_allclose(np.asarray(w), np.asarray(w_r), rtol=1e-5)
+    for name in rows:
+        np.testing.assert_array_equal(np.asarray(sel[name]),
+                                      np.asarray(sel_r[name]))
+    # the winners really are the pool rows the indices name
+    for name in rows:
+        np.testing.assert_array_equal(
+            np.asarray(sel[name]),
+            np.asarray(rows[name])[np.asarray(idx)])
+
+
+def test_select_pool_bitwise_vs_ref_on_identical_scores():
+    """Selection stage fed IDENTICAL score bytes: kernel race keys +
+    ``lax.top_k`` vs shared-math ref keys + stable argsort must agree
+    bitwise — indices, probs, weights, threshold."""
+    rng = np.random.default_rng(3)
+    for B, k in [(64, 16), (100, 31), (1024, 256), (16, 16)]:
+        scores = jnp.asarray(rng.uniform(0.01, 5.0, B).astype(np.float32))
+        ctx = selection.hash_context(9, 4211, B)
+        got = ops.select_pool(scores, ctx, k=k, block_t=32)
+        want = ref.select_pool_ref(scores, ctx, k=k)
+        for g, w_ in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w_))
+
+
+def test_select_pool_degenerate_k_equals_B():
+    scores = jnp.asarray(np.random.default_rng(0).uniform(
+        0.1, 2.0, 12).astype(np.float32))
+    idx, g, w, thr = ops.select_pool(scores, 1234, k=12)
+    np.testing.assert_array_equal(np.asarray(idx), np.arange(12))
+    np.testing.assert_allclose(np.asarray(w),
+                               np.full(12, 1.0 / 12, np.float32))
+    assert float(thr) == np.inf
+
+
+def test_select_pool_candidate_set_matches_host_twin():
+    """f32 device keys vs f64 host keys (what the plan records): the
+    SELECTED SET agrees — the ``topk_keys`` f32/f64 contract. Exact
+    index-order equality is not promised across the precision divide,
+    set equality is."""
+    rng = np.random.default_rng(11)
+    for step in range(20):
+        B, k = 96, 24
+        scores = rng.uniform(0.05, 4.0, B).astype(np.float32)
+        ctx = selection.hash_context(5, 4211, step)
+        dev_idx, _, _, _ = ops.select_pool(jnp.asarray(scores), ctx, k=k)
+        host_idx, _, _, _ = selection.presample_race_select(scores, k,
+                                                            ctx=ctx)
+        assert set(np.asarray(dev_idx).tolist()) == set(host_idx.tolist())
+
+
+# ---------------------------------------------------------------------------
+# plumbing: fused vs host plans, resume, device-put skip
+# ---------------------------------------------------------------------------
+class _PlanRec(Hook):
+    def __init__(self):
+        self.sigs, self.losses = [], []
+
+    def on_step_start(self, loop, step, batch, meta):
+        self.sigs.append(meta.signature())
+
+    def on_step_end(self, loop, step, metrics):
+        self.losses.append(metrics["loss"])
+
+
+def _fit(overrides, steps=12):
+    from repro.api.config import build_run
+    ov = {"steps": steps, "imp.tau_th": 1.0001, **overrides}
+    exp = Experiment(build_run(arch="lm-tiny", preset="smoke", overrides=ov))
+    rec = _PlanRec()
+    exp.fit(hooks=[rec])
+    return rec
+
+
+def test_fused_and_host_plans_bitwise_identical():
+    """Same seed, same steps: the fused path's ``BatchPlan`` stream (and
+    therefore the loss stream) is bitwise the host path's — selection is
+    the ONE shared ``_select_plan`` on identical score bytes."""
+    host = _fit({"sampler.host_score": "true"})
+    fused = _fit({"imp.presample_impl": "fused"})
+    assert len(host.sigs) == len(fused.sigs) == 12
+    assert host.sigs == fused.sigs
+    assert host.losses == fused.losses
+
+
+def test_fused_resume_bitwise_across_plane_depths(tmp_path):
+    """The fused scheme's plan cursor (candidate-pool cursor) is its only
+    durable pipeline state: a run checkpointed at depth 1 resumes at
+    depth 3 and reproduces the straight run bitwise — same contract as
+    ``test_fit_resume_bitwise_across_plane_depths``, on the fused path."""
+    def mk(ckpt, depth):
+        run = RunConfig(
+            model=get_config("lm-tiny"),
+            shape=ShapeConfig("t", seq_len=16, global_batch=8, kind="train"),
+            optim=OptimConfig(name="adamw", lr=1e-3),
+            imp=ISConfig(enabled=True, presample_ratio=2, tau_th=1.0001,
+                         presample_impl="fused"),
+            sampler=SamplerConfig(scheme="presample"),
+            data=DataConfig(prefetch_depth=depth),
+            ckpt_dir=str(ckpt), ckpt_every=4, remat=False)
+        src = SyntheticLM(run.model.vocab_size, 16, n_examples=64, seed=9,
+                          host_id=0, n_hosts=1)
+        return Experiment(run, source=src)
+
+    sa, ha = mk(tmp_path / "a", 3).fit(steps=6)
+    mk(tmp_path / "b", 1).fit(steps=3)            # interrupted at depth 1
+    sb, hb = mk(tmp_path / "b", 3).fit(steps=6)   # resumed at depth 3
+    assert [h["loss"] for h in ha][3:] == [h["loss"] for h in hb]
+    for x, y in zip(jax.tree_util.tree_leaves(sa["params"]),
+                    jax.tree_util.tree_leaves(sb["params"])):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_fused_sampler_routing_and_fallbacks():
+    def run_cfg(**imp_kw):
+        imp_kw.setdefault("enabled", True)
+        return RunConfig(
+            model=get_config("lm-tiny"),
+            shape=ShapeConfig("t", seq_len=16, global_batch=8, kind="train"),
+            optim=OptimConfig(name="adamw", lr=1e-3),
+            imp=ISConfig(presample_ratio=2, **imp_kw),
+            sampler=SamplerConfig(scheme="presample"), remat=False)
+
+    src = SyntheticLM(128, 16, n_examples=64, seed=7, host_id=0, n_hosts=1)
+    assert make_sampler(run_cfg(presample_impl="fused"),
+                        src).scheme == "presample_fused"
+    assert make_sampler(run_cfg(), src).scheme == "presample"
+    assert make_sampler(run_cfg(presample_impl="host"),
+                        src).scheme == "presample_host"
+    # the IS kill-switch covers the fused scheme too
+    assert make_sampler(run_cfg(enabled=False, presample_impl="fused"),
+                        src).scheme == "uniform"
+    with pytest.raises(ValueError, match="presample_impl"):
+        make_sampler(run_cfg(presample_impl="gpu"), src)
+    # multi-host: the fused sampler degrades to the parent host path
+    # (plans stay pure only single-host)
+    src8 = SyntheticLM(128, 16, n_examples=64, seed=7, host_id=0, n_hosts=8)
+    s8 = make_sampler(run_cfg(presample_impl="fused"), src8)
+    assert s8.scheme == "presample_fused" and not s8.plan_is_pure
+    s1 = make_sampler(run_cfg(presample_impl="fused"), src)
+    assert s1.plan_is_pure
+
+
+def test_dataplane_skips_device_put_for_device_batches():
+    """Satellite: the plane's H2D stage passes an already-device batch
+    through untouched and proves it via ``plane.device_put_skipped``
+    (host batches keep transferring and are charged by size)."""
+    run = RunConfig(
+        model=get_config("lm-tiny"),
+        shape=ShapeConfig("t", seq_len=16, global_batch=8, kind="train"),
+        optim=OptimConfig(name="adamw", lr=1e-3),
+        imp=ISConfig(enabled=True, presample_ratio=2),
+        sampler=SamplerConfig(scheme="uniform"),
+        obs=ObsConfig(enabled=True), remat=False)
+    obs.configure(run.obs)
+    obs.reset()
+    try:
+        src = SyntheticLM(run.model.vocab_size, 16, n_examples=64, seed=7,
+                          host_id=0, n_hosts=1)
+        sampler = make_sampler(run, src)
+        host_gather = sampler.assembler.assemble
+        sampler.assembler.assemble = (
+            lambda plan, **kw: {k: jnp.asarray(v) for k, v in
+                                host_gather(plan, **kw).items()})
+        plane = DataPlane(sampler, depth=2, device_put=True)
+        plane.start(PipelineState(), 0)
+        for _ in range(4):
+            batch, _, _ = plane.next()
+            assert all(isinstance(v, jax.Array) for v in batch.values())
+        plane.stop()
+        snap = obs.snapshot()
+        # >= consumed: the depth-2 plane legitimately pre-transfers ahead
+        skipped = snap["plane.device_put_skipped"]
+        assert skipped >= 4
+        assert snap.get("plane.device_put_bytes", 0) == 0
+
+        # control: host batches still go through device_put, with bytes
+        sampler2 = make_sampler(run, src)
+        plane2 = DataPlane(sampler2, depth=2, device_put=True)
+        plane2.start(PipelineState(), 0)
+        batch, _, _ = plane2.next()
+        assert all(isinstance(v, jax.Array) for v in batch.values())
+        plane2.stop()
+        snap = obs.snapshot()
+        assert snap["plane.device_put_bytes"] > 0
+        assert snap["plane.device_put_skipped"] == skipped   # unchanged
+    finally:
+        obs.configure(ObsConfig())
+
+
+def test_fused_transfer_counters_shrink_vs_host(tmp_path):
+    """The transfer claim, in counters: per accepted step the fused path
+    moves no train-path batch H2D (``loop.h2d_bytes`` = 0 — rows are
+    gathered on device) while the host path re-uploads its selected
+    batch every step; both pull the same (B,) score vector D2H."""
+    from repro.api.config import build_run
+
+    def counters(extra):
+        ov = {"steps": 8, "imp.tau_th": 1.0001, "obs.enabled": "true",
+              "obs.dir": str(tmp_path), **extra}
+        exp = Experiment(build_run(arch="lm-tiny", preset="smoke",
+                                   overrides=ov))
+        obs.reset()           # isolate this leg from the process registry
+        exp.fit()
+        snap = obs.snapshot()
+        obs.configure(ObsConfig())
+        return snap
+
+    host = counters({"sampler.host_score": "true"})
+    fused = counters({"imp.presample_impl": "fused"})
+    assert host["loop.h2d_bytes"] > 0
+    assert fused.get("loop.h2d_bytes", 0) == 0
+    assert fused["engine.row_gathers"] == 8
+    # both paths pull the same B-float score vector per step
+    assert fused["sampler.d2h_bytes"] == host["sampler.d2h_bytes"] > 0

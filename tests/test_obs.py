@@ -2,6 +2,7 @@
 maths (buckets, spans, ESS, §3.3 variance gain), sink round-trips, hook
 exception isolation, and the TrainLoop smoke pinning the documented
 metric names."""
+import dataclasses
 import json
 import math
 import threading
@@ -289,10 +290,15 @@ def test_trainloop_emits_documented_metrics(tmp_path):
     obs.reset()
     exp = Experiment(run, source=_source(run))
     state, hist = exp.fit()
-    # history leg: store/collectives/health layers (same process registry)
+    # history leg: store/collectives/health layers (same process registry).
+    # selection_impl is forced to "sharded": the assert below pins the
+    # sharded path's stats-allreduce counters, which the "auto" default
+    # (→ "gather" at a single host) would never touch.
     run2 = _run(scheme="history", steps=6,
                 obs_cfg=ObsConfig(enabled=True, dir=str(tmp_path),
                                   flush_every=2))
+    run2 = dataclasses.replace(
+        run2, imp=dataclasses.replace(run2.imp, selection_impl="sharded"))
     exp2 = Experiment(run2, source=_source(run2, n=64))
     exp2.fit()
     snap = obs.snapshot()

@@ -513,6 +513,37 @@ def test_sharded_ht_weights_unbiased_mc():
     assert np.mean(ests) == pytest.approx(x.mean(), abs=max(4 * se, 1e-3))
 
 
+def test_presample_race_ht_weights_unbiased_mc():
+    """The presample paths' shared b-of-B selection
+    (``selection.presample_race_select`` — host AND fused) keeps the
+    weighted-mean estimator unbiased: E[Σ wᵢ·xᵢ] = x̄ over the candidate
+    pool, same property as the sharded history race above."""
+    B, k, trials = 192, 24, 2500
+    rng = np.random.default_rng(6)
+    x = rng.standard_normal(B)
+    scores = rng.uniform(0.05, 6.0, B).astype(np.float32)
+    ests = []
+    for t in range(trials):
+        ctx = selection.hash_context(1, 4211, t)
+        idx, _, w, _ = selection.presample_race_select(scores, k, ctx=ctx)
+        assert len(np.unique(idx)) == k          # WOR: distinct rows
+        ests.append(float((w * x[idx]).sum()))
+    se = np.std(ests) / np.sqrt(trials)
+    assert np.mean(ests) == pytest.approx(x.mean(), abs=max(4 * se, 1e-3))
+
+
+def test_presample_race_degenerate_pool_is_exact():
+    """k ≥ B (ratio-1 pool): everything is selected once with weights
+    1/B, so the estimator is EXACTLY the pool mean."""
+    B = 16
+    scores = np.random.default_rng(0).uniform(0.1, 2.0, B).astype(np.float32)
+    idx, g, w, thr = selection.presample_race_select(
+        scores, B, ctx=selection.hash_context(1, 4211, 0))
+    np.testing.assert_array_equal(idx, np.arange(B))
+    np.testing.assert_allclose(w, np.full(B, 1.0 / B, np.float32))
+    assert thr == np.inf
+
+
 def test_sharded_history_resume_replans_identically():
     """Sharded plans are pure functions of (store state, step): restoring
     the store and replaying the same step reproduces the plan bitwise —
