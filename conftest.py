@@ -1,0 +1,8 @@
+"""Root pytest configuration.
+
+The repro-lint fixture corpus contains deliberately broken modules —
+including files named ``test_*.py`` that exercise RL004's parity-test
+detection. They are linter INPUT, not tests, and must never be
+collected (they import modules that only exist inside their corpus).
+"""
+collect_ignore = ["tools/repro_lint/fixtures"]

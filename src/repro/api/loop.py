@@ -50,6 +50,7 @@ import jax
 import numpy as np
 
 from repro import obs
+from repro.distributed import collectives
 
 EVENTS = ("loop_start", "step_start", "step_timed", "retry", "step_end",
           "scores_ready", "checkpoint", "loop_end")
@@ -109,8 +110,14 @@ class TrainLoop:
         # list, not generator: every hook observes every attempt.
         # Deliberately NOT exception-isolated — retry votes are control
         # flow, not observation (see emit()).
-        return any([h.on_step_timed(self, step, attempt, dt)
-                    for h in self.hooks])
+        local = any([h.on_step_timed(self, step, attempt, dt)
+                     for h in self.hooks])
+        # The local vote is derived from this host's wall-clock
+        # (StragglerHook), so acting on it alone would re-dispatch the
+        # jitted step — and its collectives — on this host only: the
+        # lockstep deadlock. OR-reduce so every host takes the same
+        # branch (identity in single-process runs).
+        return collectives.allreduce_any(local)
 
     # -- score feedback (deferred, off the dispatch critical path) ------------
     def drain_feedback(self) -> None:

@@ -229,6 +229,10 @@ def gather_host_scores(local_scores, *, host_id=None, n_hosts=None,
     if local.size != expect:
         raise ValueError(f"host {host_id}/{n_hosts} shard has {local.size} "
                          f"slots, expected {expect} for n={n_global}")
+    # repro-lint: disable=RL002 -- deliberate fail-fast: a mis-sized shard
+    # means the plan sharding itself diverged, so aborting THIS host loudly
+    # beats feeding the gather garbage; peers are bounded by the KV-barrier
+    # timeout rather than hanging forever
     shards = _process_allgather(pad_shard(local, n_global, n_hosts))
     return interleave_shards(shards, n_global)
 
@@ -306,6 +310,26 @@ def allreduce_stats(local_stats, *, n_hosts=None):
         return local.copy()
     _require_multiprocess("allreduce_stats", n_hosts)
     return _process_allgather(local).sum(axis=0)
+
+
+def allreduce_any(flag, *, n_hosts=None) -> bool:
+    """Global OR of one per-host boolean — the lockstep vote primitive.
+
+    A host-local decision that re-dispatches device work (the straggler
+    retry vote is THE case: it is derived from this host's wall-clock)
+    must never steer control flow ahead of collectives on its own: if
+    host 3 retries a step the others accepted, host 3 re-enters the
+    jitted step's collectives alone and the fleet deadlocks. OR-reducing
+    the votes makes the decision identical everywhere — all hosts retry,
+    or none do. One bool per step; identity single-process.
+    """
+    local = np.asarray([bool(flag)])
+    _note_collective("allreduce_any", local)
+    n_hosts = jax.process_count() if n_hosts is None else int(n_hosts)
+    if n_hosts == 1:
+        return bool(flag)
+    _require_multiprocess("allreduce_any", n_hosts)
+    return bool(_process_allgather(local).any())
 
 
 def exchange_topk(candidates, *, k_each: int, n_hosts=None):

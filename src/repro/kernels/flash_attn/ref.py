@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 
 
-def attention_ref(q, k, v, *, causal=True, window=0, q_offset=0, scale=None):
+def flash_attention_ref(q, k, v, *, causal=True, window=0, q_offset=0, scale=None):
     """q: (B, sq, d); k, v: (B, skv, d). B folds batch×heads."""
     B, sq, d = q.shape
     skv = k.shape[1]

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 from repro.kernels.topk_keys.topk_keys import race_keys_math
 
 
-def race_keys_ref(scores, seen, gids_u32, ctx: int, *, fill_pow, total,
+def topk_race_keys_ref(scores, seen, gids_u32, ctx: int, *, fill_pow, total,
                   n_global, smoothing=0.1, inv_temp=1.0):
     """scores (n_local,) / seen (n_local,) / gids_u32 (n_local,) → race
     keys (n_local,) f32. ``total``/``fill_pow`` are the reduced global

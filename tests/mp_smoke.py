@@ -65,6 +65,11 @@ def _worker(process_id: int, port: int) -> int:
     red = coll.allreduce_stats(np.array([1.0 + h, 10.0, 100.0, 0.5]))
     np.testing.assert_allclose(red, [3.0, 20.0, 200.0, 1.0])
 
+    # 4b. retry-vote OR-reduce: host 1 votes, BOTH hosts must see True;
+    # nobody votes -> False everywhere
+    assert coll.allreduce_any(h == 1) is True
+    assert coll.allreduce_any(False) is False
+
     # 5. candidate-block exchange (host-major concat)
     blk = {"gid": np.arange(3, dtype=np.int64) + 100 * h,
            "key": np.full(3, float(h), np.float64)}

@@ -16,9 +16,12 @@ Three 20-step legs share one process (and therefore one registry):
   (on-device selection gathers), ``sampler.d2h_bytes`` (the score pull),
   and the plane's device-put skip counter.
 
-Every record of every emitted file must match the schema from
-``repro.obs.sinks`` (also in the README's Observability section), and
-the union of records must show all four instrumented layers live.
+Every record of every emitted file must match the record shape, every
+metric NAME must resolve against the declared schema
+(``repro.obs.schema.SCHEMA`` — the same table the README section is
+generated from and the repro-lint RL005 rule enforces statically), with
+the value shape matching the declared kind, and the union of records
+must show all four instrumented layers live.
 
 Run: ``PYTHONPATH=src python tests/obs_schema_check.py``
 """
@@ -28,6 +31,7 @@ import tempfile
 
 import repro
 from repro.api.config import build_run
+from repro.obs import schema
 
 RECORD_KEYS = {"event", "step", "ts", "proc", "metrics"}
 EVENTS = {"loop_start", "step", "loop_end"}
@@ -59,11 +63,19 @@ def check_record(rec):
     assert isinstance(rec["metrics"], dict)
     for name, v in rec["metrics"].items():
         assert isinstance(name, str) and name, name
+        entry = schema.match(name)
+        assert entry is not None, \
+            f"metric '{name}' is not in repro.obs.schema.SCHEMA"
+        kind = entry[1]
         if isinstance(v, dict):                    # histogram/span snapshot
+            assert kind in ("histogram", "span", "record"), \
+                f"'{name}' declared {kind} but emitted a snapshot dict"
             assert set(v) == HIST_KEYS, (name, sorted(v))
             assert isinstance(v["count"], int)
             assert isinstance(v["buckets"], dict)
         else:
+            assert kind in ("counter", "gauge", "record"), \
+                f"'{name}' declared {kind} but emitted a scalar"
             assert isinstance(v, (int, float)), (name, v)
 
 

@@ -168,6 +168,57 @@ def test_retry_event_and_monitor_swap():
             assert h["dt_total"] > h["dt"]
 
 
+def test_retry_vote_is_globally_reduced(monkeypatch):
+    """The retry decision must flow through ``collectives.allreduce_any``
+    so all hosts take the same branch (a host-local wall-clock vote that
+    re-dispatched the jitted step alone would deadlock its collectives).
+    Simulate being the NON-straggler host: no local hook votes, but the
+    OR-reduce reports some other host did — this host must retry too."""
+    from repro.api import loop as loop_mod
+
+    votes = []
+
+    def fake_any(flag, *, n_hosts=None):
+        votes.append(bool(flag))
+        return len(votes) == 2      # "another host" voted on attempt 2
+
+    monkeypatch.setattr(loop_mod.collectives, "allreduce_any", fake_any)
+
+    class Retries(Hook):
+        def __init__(self):
+            self.retries = []
+
+        def on_retry(self, loop, step, attempt, dt):
+            self.retries.append((step, attempt))
+
+    rec = Retries()
+    run = _run(steps=3)
+    exp = Experiment(run, source=_source(run))
+    _, hist = exp.fit(steps=3, hooks=[rec])
+    # every attempt's local vote went through the reduce, all False...
+    assert votes and not any(votes)
+    # ...yet the global True forced a retry on this host
+    assert rec.retries == [(1, 0)]
+    assert [h["attempts"] for h in hist] == [1, 2, 1]
+
+
+def test_allreduce_any_or_semantics(monkeypatch):
+    """Single-process identity, and multi-host OR over the gathered
+    votes (gather injected — same seam the plan tests use)."""
+    from repro.distributed import collectives as coll
+
+    assert coll.allreduce_any(True) is True
+    assert coll.allreduce_any(False) is False
+
+    monkeypatch.setattr(coll, "_require_multiprocess", lambda *a: None)
+    for votes, want in [((False, False), False), ((False, True), True),
+                        ((True, True), True)]:
+        monkeypatch.setattr(
+            coll, "_process_allgather",
+            lambda v, _votes=votes: np.array([[b] for b in _votes]))
+        assert coll.allreduce_any(votes[0], n_hosts=2) is want
+
+
 def test_logging_hook_prints(capsys):
     run = _run(steps=3)
     Experiment(run, source=_source(run)).fit(

@@ -9,9 +9,9 @@ from hypothesis import given, settings, strategies as st
 from repro.kernels.ce_score.ops import ce_score
 from repro.kernels.ce_score.ref import ce_score_ref
 from repro.kernels.flash_attn.ops import flash_attention
-from repro.kernels.flash_attn.ref import attention_ref
+from repro.kernels.flash_attn.ref import flash_attention_ref
 from repro.kernels.topk_keys.ops import topk_race_keys
-from repro.kernels.topk_keys.ref import race_keys_ref
+from repro.kernels.topk_keys.ref import topk_race_keys_ref
 from repro.sampler import selection
 
 
@@ -125,7 +125,7 @@ def test_topk_race_keys_matches_ref(n, block):
                                  n_global=dist.n, smoothing=0.1,
                                  inv_temp=2.0, block_t=block)
     gids = np.arange(n, dtype=np.uint32) * 4 + 1
-    r = np.asarray(race_keys_ref(sc, seen, gids, ctx,
+    r = np.asarray(topk_race_keys_ref(sc, seen, gids, ctx,
                                  fill_pow=dist.fill_pow, total=dist.total,
                                  n_global=dist.n, smoothing=0.1,
                                  inv_temp=2.0))
@@ -180,7 +180,7 @@ def test_topk_race_keys_uniforms_match_host_hash():
     stats = selection.shard_stats(sc, seen, 1.0)
     dist = selection.GlobalDist(stats, n, 0.0, 1.0)
     # with p uniform (= 1/n), key = -log(u)·n  →  u = exp(-key/n)
-    keys = np.asarray(race_keys_ref(sc, seen, gids.astype(np.uint32), ctx,
+    keys = np.asarray(topk_race_keys_ref(sc, seen, gids.astype(np.uint32), ctx,
                                     fill_pow=dist.fill_pow,
                                     total=dist.total, n_global=n,
                                     smoothing=0.0, inv_temp=1.0))
@@ -218,7 +218,7 @@ def test_flash_attention_matches_ref(s, hq, hkv, hd, bq, bk, window, dtype, tol)
     o = flash_attention(q, k, v, window=window, block_q=bq, block_k=bk)
     qf, kf, vf = _fold(q.astype(jnp.float32), k.astype(jnp.float32),
                        v.astype(jnp.float32))
-    oref = attention_ref(qf, kf, vf, causal=True, window=window)
+    oref = flash_attention_ref(qf, kf, vf, causal=True, window=window)
     oref = oref.reshape(2, hkv, hq // hkv, s, hd).transpose(0, 3, 1, 2, 4) \
                .reshape(2, s, hq, hd)
     np.testing.assert_allclose(np.asarray(o, np.float32), np.asarray(oref),
@@ -234,7 +234,7 @@ def test_flash_attention_decode_offset():
     v = jnp.asarray(rng.randn(1, S, 2, 16).astype(np.float32))
     o = flash_attention(q, k, v, q_offset=S - 1, block_q=8, block_k=16)
     qf, kf, vf = _fold(q, k, v)
-    oref = attention_ref(qf, kf, vf, causal=True, q_offset=S - 1)
+    oref = flash_attention_ref(qf, kf, vf, causal=True, q_offset=S - 1)
     np.testing.assert_allclose(np.asarray(o).ravel(), np.asarray(oref).ravel(),
                                rtol=2e-4, atol=2e-4)
 

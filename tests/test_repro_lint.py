@@ -1,0 +1,148 @@
+"""repro-lint: golden fixture corpus, suppression mechanics, and the
+lint-clean-on-HEAD gate.
+
+The linter is stdlib-only by design (it must run on a bare Python in
+the ``analysis`` CI job), so these tests import it directly — no jax
+involved anywhere in the module.
+"""
+import json
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT))
+
+from tools.repro_lint.engine import run                       # noqa: E402
+from tools.repro_lint.project import Project                  # noqa: E402
+from tools.repro_lint.registry import LintConfig, all_rules   # noqa: E402
+from tools.repro_lint.selftest import corpus_results          # noqa: E402
+
+FIXTURES = ROOT / "tools" / "repro_lint" / "fixtures"
+
+
+def _src_project():
+    project = Project()
+    project.add_tree(ROOT / "src", lint=True)
+    project.add_tree(ROOT / "tests", lint=False)
+    return project
+
+
+# -- the golden finding set ---------------------------------------------------
+def test_fixture_corpus_matches_golden():
+    """Every rule's seeded-violation corpus yields EXACTLY the golden
+    (rule, file, line) set — over- and under-reporting both fail."""
+    golden = json.loads((FIXTURES / "GOLDEN.json").read_text())
+    got = corpus_results(FIXTURES)
+    assert got == golden
+
+
+def test_every_rule_has_all_three_corpora():
+    """violation / clean / suppressed exist for each registered rule,
+    and each behaves as its name demands."""
+    got = corpus_results(FIXTURES)
+    for cls in all_rules():
+        rid = cls.id.lower()
+        v = got[f"{rid}/violation"]
+        assert v["findings"], f"{cls.id}: seeded violations not detected"
+        assert all(f[0] == cls.id for f in v["findings"])
+        c = got[f"{rid}/clean"]
+        assert c == {"findings": [], "suppressed": 0}, \
+            f"{cls.id}: false positives on the clean corpus"
+        s = got[f"{rid}/suppressed"]
+        assert s["findings"] == [] and s["suppressed"] > 0, \
+            f"{cls.id}: suppression mechanics broken"
+
+
+# -- suppression semantics ----------------------------------------------------
+def test_bare_suppression_is_itself_a_finding(tmp_path):
+    """A directive with no justification is reported as RL000."""
+    mod = tmp_path / "src" / "m.py"
+    mod.parent.mkdir()
+    mod.write_text("import time\n\n"
+                   "# repro-lint: disable=RL001\n"
+                   "T0 = time.time()\n")
+    project = Project()
+    project.add_tree(tmp_path / "src", lint=True)
+    active, suppressed = run(project, LintConfig())
+    assert [f.rule for f in active] == ["RL000"]
+    assert len(suppressed) == 1         # the RL001 is still silenced
+
+
+def test_wrapped_justification_comment_block(tmp_path):
+    """The directive may sit anywhere in the contiguous comment block
+    above the flagged line (wrapped justifications)."""
+    mod = tmp_path / "src" / "m.py"
+    mod.parent.mkdir()
+    mod.write_text("import time\n\n"
+                   "# repro-lint: disable=RL001 -- three lines of\n"
+                   "# carefully argued justification for why this\n"
+                   "# clock can never reach the plan bytes\n"
+                   "T0 = time.time()\n")
+    project = Project()
+    project.add_tree(tmp_path / "src", lint=True)
+    active, suppressed = run(project, LintConfig())
+    assert active == []
+    assert len(suppressed) == 1
+    assert "carefully argued" not in suppressed[0].justification  # 1st line
+    assert suppressed[0].justification.startswith("three lines")
+
+
+# -- the gate on HEAD ---------------------------------------------------------
+def test_src_tree_is_lint_clean():
+    """``python -m tools.repro_lint src/`` must exit 0: zero
+    unsuppressed findings, and every suppression carries a reason."""
+    active, suppressed = run(_src_project(), LintConfig())
+    assert active == [], "\n".join(
+        f"{f.location()}: {f.rule}: {f.message}" for f in active)
+    for f in suppressed:
+        assert f.justification, f"{f.location()}: bare suppression"
+
+
+def test_cli_runs_clean_on_head():
+    """The exact command CI runs, end to end through the CLI."""
+    r = subprocess.run(
+        [sys.executable, "-m", "tools.repro_lint", "src/",
+         "--refs", "tests"],
+        cwd=ROOT, capture_output=True, text=True, timeout=120)
+    assert r.returncode == 0, f"{r.stdout}\n{r.stderr}"
+    assert "0 findings" in r.stdout
+
+
+# -- documentation meta-tests -------------------------------------------------
+def test_every_rule_id_documented_in_readme():
+    readme = (ROOT / "README.md").read_text()
+    for cls in all_rules():
+        assert cls.id in readme, f"{cls.id} missing from README"
+    assert "RL000" in readme
+
+
+def test_readme_obs_table_matches_schema():
+    """The README Observability table is generated from
+    ``repro.obs.schema`` — regenerate on schema changes (the BEGIN
+    marker names the command)."""
+    sys.path.insert(0, str(ROOT / "src"))
+    try:
+        from repro.obs import schema
+    finally:
+        sys.path.pop(0)
+    readme = (ROOT / "README.md").read_text()
+    m = re.search(r"<!-- BEGIN OBS SCHEMA[^>]*-->\n(.*?)\n<!-- END OBS "
+                  r"SCHEMA -->", readme, re.S)
+    assert m, "README obs-schema markers missing"
+    assert m.group(1) == schema.to_markdown()
+
+
+def test_schema_is_literal_eval_readable():
+    """The linter reads SCHEMA without importing — the assignment must
+    stay a pure literal."""
+    import ast
+    tree = ast.parse((ROOT / "src/repro/obs/schema.py").read_text())
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and any(
+                getattr(t, "id", "") == "SCHEMA" for t in node.targets):
+            rows = ast.literal_eval(node.value)
+            assert rows and all(len(r) == 3 for r in rows)
+            return
+    raise AssertionError("SCHEMA literal not found")

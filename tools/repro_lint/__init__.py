@@ -1,0 +1,19 @@
+"""repro-lint: AST/CFG static analysis enforcing this repo's invariants.
+
+stdlib-only (``ast`` + ``tokenize``) — it parses the tree, it never
+imports it, so the gate runs on a bare Python with no jax/numpy.
+
+Rules:
+
+* RL001 — nondeterminism in the plan path (import-graph scoped)
+* RL002 — lockstep-unsafe collective call sites (CFG dominance)
+* RL003 — side effects inside jit/pallas-traced functions
+* RL004 — kernel ops without oracle / parity test / interpret fallback
+* RL005 — obs metric names drifting from the documented schema
+* RL000 — a suppression directive with no justification
+
+Entry points: ``python -m tools.repro_lint src/`` (CLI), or
+``tools.repro_lint.engine.run`` (tests)."""
+from tools.repro_lint.engine import run            # noqa: F401
+from tools.repro_lint.project import Project       # noqa: F401
+from tools.repro_lint.registry import LintConfig   # noqa: F401

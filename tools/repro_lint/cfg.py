@@ -1,0 +1,331 @@
+"""Per-function control-flow graphs with dominance analysis.
+
+Small, statement-granular CFGs good enough for the lockstep questions
+RL002 asks: *is this call control-dependent on a branch whose outcome
+can differ across hosts?* Blocks hold whole statements; ``if`` /
+``while`` / ``for`` ends a block and records its test as the branch
+condition; ``return`` / ``raise`` edges to the exit block; a ``try``
+body conservatively edges into each handler (any statement may raise).
+
+The classic definitions:
+
+* B **dominates** N if every entry->N path passes through B.
+* N **post-dominates** B if every B->exit path passes through N.
+* N is **control-dependent** on branch B iff B has a successor S with
+  N post-dominating S, while N does NOT post-dominate B itself — i.e.
+  one arm of B always reaches N and another can bypass it. That is
+  precisely the shape where hosts disagreeing on B's condition execute
+  N a different number of times — the lockstep-deadlock shape when N
+  is a collective.
+
+``control_deps`` closes the relation transitively (a branch guarding
+the guard still decides whether N runs).
+"""
+from __future__ import annotations
+
+import ast
+import itertools
+
+
+class Block:
+    __slots__ = ("id", "stmts", "succ", "pred", "test", "in_handler")
+
+    def __init__(self, bid):
+        self.id = bid
+        self.stmts = []
+        self.succ = set()
+        self.pred = set()
+        self.test = None        # branch condition expr (If/While/For iter)
+        self.in_handler = False
+
+    def link(self, other):
+        self.succ.add(other)
+        other.pred.add(self)
+
+    def __repr__(self):
+        return f"B{self.id}({len(self.stmts)} stmts)"
+
+
+class CFG:
+    """CFG over one statement list (a function body, a module body, or a
+    class body — nested function/class bodies get their own CFGs)."""
+
+    def __init__(self, body):
+        self._ids = itertools.count()
+        self.entry = self._new()
+        self.exit = self._new()
+        self.block_of = {}          # id(stmt) -> Block
+        self.blocks = [self.entry, self.exit]
+        first = self._new()
+        self.entry.link(first)
+        end = self._emit(body, first, loops=[], in_handler=False)
+        if end is not None:
+            end.link(self.exit)
+        self._prune()
+        self._dom = None
+        self._pdom = None
+
+    # -- construction -------------------------------------------------------
+    def _new(self):
+        b = Block(next(self._ids))
+        if hasattr(self, "blocks"):
+            self.blocks.append(b)
+        return b
+
+    @staticmethod
+    def _shallow_walk(node):
+        """Walk without descending into nested scope BODIES (they run
+        elsewhere, or not at all, so their calls are not this block's).
+        A scope statement itself still belongs to the block, and its
+        header parts — decorators, default values, bases — execute
+        there, so those are walked."""
+        stack = [node]
+        while stack:
+            n = stack.pop()
+            yield n
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                stack.extend(n.decorator_list)
+                stack.extend(d for d in n.args.defaults + n.args.kw_defaults
+                             if d is not None)
+            elif isinstance(n, ast.ClassDef):
+                stack.extend(n.decorator_list)
+                stack.extend(n.bases)
+                stack.extend(k.value for k in n.keywords)
+            elif isinstance(n, ast.Lambda):
+                stack.extend(d for d in n.args.defaults + n.args.kw_defaults
+                             if d is not None)
+            else:
+                stack.extend(ast.iter_child_nodes(n))
+
+    def _stmt(self, block, node, headers=None):
+        """Record ``node`` in ``block``. Compound statements pass
+        ``headers`` — only those expressions (test, iter, ...) execute in
+        this block; their bodies are mapped when emitted into their own
+        blocks."""
+        block.stmts.append(node)
+        self.block_of[id(node)] = block
+        for e in (headers if headers is not None else [node]):
+            for child in self._shallow_walk(e):
+                self.block_of.setdefault(id(child), block)
+
+    def _emit(self, stmts, cur, loops, in_handler):
+        """Lay ``stmts`` down from ``cur``; returns the block where
+        control continues, or None if every path terminated."""
+        for node in stmts:
+            if cur is None:
+                # unreachable code after return/raise/break — park it in
+                # a dead block so lookups still resolve
+                cur = self._new()
+            cur.in_handler = cur.in_handler or in_handler
+            if isinstance(node, ast.If):
+                self._stmt(cur, node, headers=[node.test])
+                cur.test = node.test
+                then_b, else_b = self._new(), self._new()
+                cur.link(then_b)
+                cur.link(else_b)
+                t_end = self._emit(node.body, then_b, loops, in_handler)
+                e_end = self._emit(node.orelse, else_b, loops, in_handler)
+                if t_end is None and e_end is None:
+                    cur = None
+                    continue
+                join = self._new()
+                for end in (t_end, e_end):
+                    if end is not None:
+                        end.link(join)
+                cur = join
+            elif isinstance(node, (ast.While, ast.For, ast.AsyncFor)):
+                header = self._new()
+                cur.link(header)
+                self._stmt(header, node,
+                           headers=([node.test] if isinstance(node, ast.While)
+                                    else [node.target, node.iter]))
+                header.test = (node.test if isinstance(node, ast.While)
+                               else node.iter)
+                body_b, after = self._new(), self._new()
+                header.link(body_b)
+                header.link(after)
+                b_end = self._emit(node.body, body_b,
+                                   loops + [(header, after)], in_handler)
+                if b_end is not None:
+                    b_end.link(header)
+                if node.orelse:
+                    o_end = self._emit(node.orelse, after, loops, in_handler)
+                    if o_end is None:
+                        cur = None
+                        continue
+                    after = o_end
+                cur = after
+            elif isinstance(node, (ast.Try, getattr(ast, "TryStar", ast.Try))):
+                self._stmt(cur, node, headers=[])
+                body_b = self._new()
+                cur.link(body_b)
+                b_end = self._emit(node.body, body_b, loops, in_handler)
+                ends = [] if b_end is None else [b_end]
+                for handler in node.handlers:
+                    h_b = self._new()
+                    h_b.in_handler = True
+                    # any statement in the try body may raise: edge from
+                    # both the try entry and the body end (conservative)
+                    body_b.link(h_b)
+                    if b_end is not None:
+                        b_end.link(h_b)
+                    self.block_of[id(handler)] = h_b
+                    h_end = self._emit(handler.body, h_b, loops, True)
+                    if h_end is not None:
+                        ends.append(h_end)
+                if node.orelse and b_end is not None:
+                    o_end = self._emit(node.orelse, ends.pop(0), loops,
+                                       in_handler)
+                    if o_end is not None:
+                        ends.insert(0, o_end)
+                if not ends:
+                    cur = None
+                    continue
+                join = self._new()
+                for end in ends:
+                    end.link(join)
+                if node.finalbody:
+                    f_end = self._emit(node.finalbody, join, loops,
+                                       in_handler)
+                    if f_end is None:
+                        cur = None
+                        continue
+                    join = f_end
+                cur = join
+            elif isinstance(node, (ast.Return, ast.Raise)):
+                self._stmt(cur, node)
+                cur.link(self.exit)
+                cur = None
+            elif isinstance(node, ast.Break):
+                self._stmt(cur, node)
+                if loops:
+                    cur.link(loops[-1][1])
+                cur = None
+            elif isinstance(node, ast.Continue):
+                self._stmt(cur, node)
+                if loops:
+                    cur.link(loops[-1][0])
+                cur = None
+            elif isinstance(node, (ast.With, ast.AsyncWith)):
+                self._stmt(cur, node, headers=list(node.items))
+                cur = self._emit(node.body, cur, loops, in_handler)
+            elif isinstance(node, ast.Match):
+                self._stmt(cur, node, headers=[node.subject])
+                cur.test = node.subject
+                ends = []
+                for case in node.cases:
+                    c_b = self._new()
+                    cur.link(c_b)
+                    c_end = self._emit(case.body, c_b, loops, in_handler)
+                    if c_end is not None:
+                        ends.append(c_end)
+                fall = self._new()          # no case matched
+                cur.link(fall)
+                ends.append(fall)
+                join = self._new()
+                for end in ends:
+                    end.link(join)
+                cur = join
+            else:
+                self._stmt(cur, node)
+        return cur
+
+    def _prune(self):
+        """Drop blocks unreachable from entry (dead code, empty joins)."""
+        seen = set()
+        stack = [self.entry]
+        while stack:
+            b = stack.pop()
+            if b in seen:
+                continue
+            seen.add(b)
+            stack.extend(b.succ - seen)
+        seen.add(self.exit)                 # exit always participates
+        self.blocks = [b for b in self.blocks if b in seen]
+        for b in self.blocks:
+            b.succ &= seen
+            b.pred &= seen
+
+    # -- dominance ----------------------------------------------------------
+    @staticmethod
+    def _dominators(blocks, entry, forward=True):
+        all_b = set(blocks)
+        dom = {b: ({b} if b is entry else set(all_b)) for b in blocks}
+        changed = True
+        while changed:
+            changed = False
+            for b in blocks:
+                if b is entry:
+                    continue
+                neigh = b.pred if forward else b.succ
+                reach = [dom[p] for p in neigh]
+                new = ({b} | set.intersection(*reach)) if reach else {b}
+                if new != dom[b]:
+                    dom[b] = new
+                    changed = True
+        return dom
+
+    def dominators(self):
+        if self._dom is None:
+            self._dom = self._dominators(self.blocks, self.entry, True)
+        return self._dom
+
+    def postdominators(self):
+        if self._pdom is None:
+            self._pdom = self._dominators(self.blocks, self.exit, False)
+        return self._pdom
+
+    # -- queries -------------------------------------------------------------
+    def block_for(self, node):
+        return self.block_of.get(id(node))
+
+    def control_deps(self, block) -> list:
+        """Branch blocks ``block`` is (transitively) control-dependent
+        on, each with its test expression."""
+        pdom = self.postdominators()
+        deps, frontier, seen = [], {block}, set()
+        while frontier:
+            nxt = set()
+            for n in frontier:
+                for b in self.blocks:
+                    if b.test is None or len(b.succ) < 2 or b in seen:
+                        continue
+                    if n in pdom[b]:        # n post-dominates the branch
+                        continue
+                    if any(n in pdom[s] or n is s for s in b.succ):
+                        seen.add(b)
+                        deps.append(b)
+                        nxt.add(b)
+            frontier = nxt
+        return deps
+
+
+def scopes(tree):
+    """Yield (scope_node, body) for every CFG-worthy statement list: the
+    module, each class body, each (async) function body."""
+    yield tree, tree.body
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node, node.body
+        elif isinstance(node, ast.ClassDef):
+            yield node, node.body
+
+
+class CFGCache:
+    """Per-module lazily built CFGs, shared by the rules."""
+
+    def __init__(self):
+        self._cache = {}
+
+    def for_module(self, module) -> dict:
+        """node-id -> (scope_node, CFG) covering every statement in the
+        module, built once."""
+        got = self._cache.get(module.name)
+        if got is None:
+            got = {}
+            for scope, body in scopes(module.tree):
+                cfg = CFG(body)
+                for nid in cfg.block_of:
+                    got.setdefault(nid, (scope, cfg))
+            self._cache[module.name] = got
+        return got

@@ -1,0 +1,125 @@
+"""repro-lint command line.
+
+::
+
+    python -m tools.repro_lint src/                # lint the tree
+    python -m tools.repro_lint src/ --format json  # machine-readable
+    python -m tools.repro_lint --list-rules        # what's enforced
+    python -m tools.repro_lint --selftest          # fixture corpus check
+
+Exit codes: 0 clean, 1 unsuppressed findings, 2 usage/internal error —
+so CI can distinguish "invariant violated" from "the linter broke".
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from tools.repro_lint.engine import run
+from tools.repro_lint.project import Project
+from tools.repro_lint.registry import LintConfig, all_rules
+
+FIXTURES = Path(__file__).resolve().parent / "fixtures"
+
+
+def _build_parser():
+    p = argparse.ArgumentParser(
+        prog="repro-lint",
+        description="static enforcement of the repo's determinism, "
+                    "collective-safety, jit-purity, kernel-discipline "
+                    "and obs-schema invariants")
+    p.add_argument("roots", nargs="*",
+                   help="lint roots (directories used as import roots, "
+                        "or single files)")
+    p.add_argument("--refs", action="append", default=None,
+                   metavar="DIR",
+                   help="reference corpus roots (consulted, not linted; "
+                        "default: tests/ when it exists)")
+    p.add_argument("--rules", default="",
+                   help="comma-separated rule ids to run (default: all)")
+    p.add_argument("--format", choices=("human", "json"), default="human")
+    p.add_argument("--show-suppressed", action="store_true",
+                   help="also print suppressed findings with their "
+                        "justifications")
+    p.add_argument("--list-rules", action="store_true")
+    p.add_argument("--selftest", action="store_true",
+                   help="run every rule against its seeded-violation "
+                        "fixture corpus and compare to the golden set")
+    p.add_argument("--update-golden", action="store_true",
+                   help="with --selftest: rewrite GOLDEN.json from the "
+                        "current results (after deliberate rule changes)")
+    return p
+
+
+def _list_rules() -> int:
+    for cls in all_rules():
+        doc = (sys.modules[cls.__module__].__doc__ or "").strip()
+        first = doc.splitlines()[0] if doc else ""
+        print(f"{cls.id}  {cls.title}")
+        if first:
+            print(f"       {first}")
+    return 0
+
+
+def _print_human(findings, suppressed, show_suppressed):
+    for f in findings:
+        print(f"{f.location()}: {f.rule}: {f.message}")
+    if show_suppressed:
+        for f in suppressed:
+            why = f.justification or "(no justification)"
+            print(f"{f.location()}: {f.rule}: suppressed — {why}")
+    n, s = len(findings), len(suppressed)
+    print(f"repro-lint: {n} finding{'s' if n != 1 else ''}"
+          f" ({s} suppressed)")
+
+
+def main(argv=None) -> int:
+    args = _build_parser().parse_args(argv)
+    if args.list_rules:
+        return _list_rules()
+    if args.selftest:
+        from tools.repro_lint.selftest import run_selftest
+        return run_selftest(FIXTURES, update_golden=args.update_golden)
+    if not args.roots:
+        print("repro-lint: no lint roots given (try: "
+              "python -m tools.repro_lint src/)", file=sys.stderr)
+        return 2
+
+    project = Project()
+    for root in args.roots:
+        if not Path(root).exists():
+            print(f"repro-lint: no such root: {root}", file=sys.stderr)
+            return 2
+        project.add_tree(root, lint=True)
+    refs = args.refs
+    if refs is None:
+        refs = ["tests"] if Path("tests").is_dir() else []
+    for root in refs:
+        if Path(root).exists():
+            project.add_tree(root, lint=False)
+
+    rule_ids = None
+    if args.rules:
+        rule_ids = {r.strip() for r in args.rules.split(",") if r.strip()}
+        known = {cls.id for cls in all_rules()} | {"RL000"}
+        bad = rule_ids - known
+        if bad:
+            print(f"repro-lint: unknown rule id(s): "
+                  f"{', '.join(sorted(bad))}", file=sys.stderr)
+            return 2
+
+    findings, suppressed = run(project, LintConfig(), rule_ids)
+    if args.format == "json":
+        out = [f.to_dict() for f in findings]
+        if args.show_suppressed:
+            out += [f.to_dict() for f in suppressed]
+        print(json.dumps(out, indent=2))
+    else:
+        _print_human(findings, suppressed, args.show_suppressed)
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,71 @@
+"""Run the rules, apply suppressions, shape the result.
+
+The engine is the only place suppression semantics live: a finding is
+suppressed when an inline ``# repro-lint: disable=RLxxx`` directive
+sits on the finding's line or the line directly above, or a
+``disable-file=`` directive names the rule anywhere in the file.
+Suppressed findings stay in the result (marked) so ``--show-suppressed``
+and the audit trail work; findings in reference-corpus modules are
+dropped outright.
+
+A directive with NO justification text is itself reported (rule id
+``RL000``): silencing an invariant without recording why is exactly
+the drift this tool exists to prevent.
+"""
+from __future__ import annotations
+
+from tools.repro_lint.registry import (Context, Finding, LintConfig,
+                                       all_rules)
+
+
+def _suppression_for(module, finding):
+    for s in module.file_suppressions:
+        if finding.rule in s.rules:
+            return s
+    # the flagged line itself, then upward through the contiguous
+    # comment block above it (wrapped justifications span lines)
+    lines = [finding.line]
+    ln = finding.line - 1
+    while ln in module.comment_lines:
+        lines.append(ln)
+        ln -= 1
+    for line in lines:
+        for s in module.line_suppressions.get(line, []):
+            if finding.rule in s.rules:
+                return s
+    return None
+
+
+def run(project, config=None, rule_ids=None):
+    """Lint ``project``; returns (findings, suppressed) lists of
+    ``Finding``. ``rule_ids`` restricts to a subset (ids like RL001)."""
+    ctx = Context(project, config or LintConfig())
+    active, suppressed = [], []
+    for cls in all_rules():
+        if rule_ids and cls.id not in rule_ids:
+            continue
+        for f in cls().check(ctx):
+            module = ctx.project.get(f.module)
+            if module is None or not module.lint:
+                continue
+            s = _suppression_for(module, f)
+            if s is not None:
+                f.suppressed = True
+                f.justification = s.justification
+                suppressed.append(f)
+            else:
+                active.append(f)
+    # bare directives: every suppression in a lint module needs a reason
+    for module in ctx.project.lint_modules():
+        sups = list(module.file_suppressions) + [
+            s for group in module.line_suppressions.values() for s in group]
+        for s in sups:
+            if not s.justification:
+                active.append(Finding(
+                    rule="RL000", path=str(module.path), line=s.line,
+                    col=1, module=module.name,
+                    message=f"suppression of {', '.join(sorted(s.rules))} "
+                            f"has no justification — add one after the "
+                            f"rule list (`-- why`)"))
+    key = lambda f: (f.path, f.line, f.col, f.rule)   # noqa: E731
+    return sorted(active, key=key), sorted(suppressed, key=key)

@@ -1,0 +1,10 @@
+"""The same plan logic written with the allowed determinism idioms."""
+import numpy as np
+
+
+def make_plan(ids, seed):
+    rng = np.random.default_rng(seed)   # seeded constructor: allowed
+    noise = rng.random(4)
+    chosen = {i for i in ids if i % 2}
+    order = sorted(chosen)              # sorted(): hash order gone
+    return noise, order

@@ -1,0 +1,15 @@
+"""The rl001 violations again, each silenced WITH a justification."""
+import os
+import time
+
+
+def make_plan(ids):
+    # repro-lint: disable=RL001 -- fixture: timestamp labels the artifact
+    # file name only, never the plan bytes
+    t = time.time()
+    tz = os.environ.get("TZ", "utc")  # repro-lint: disable=RL001 -- fixture: display tz
+    chosen = {i for i in ids if i % 2}
+    # repro-lint: disable=RL001 -- fixture: feeds an unordered membership
+    # check, not an ordered draw
+    order = [i for i in chosen]
+    return t, tz, order

@@ -1,0 +1,16 @@
+"""Seeded RL001 violations: one of every nondeterminism class."""
+import os
+import random
+import time
+
+import numpy as np
+
+
+def make_plan(ids):
+    t = time.time()                     # wall-clock
+    jitter = random.random()            # global-state stdlib RNG
+    noise = np.random.rand(4)           # global-state numpy RNG
+    tz = os.environ.get("TZ", "utc")    # environment read
+    chosen = {i for i in ids if i % 2}
+    order = [i for i in chosen]         # set-hash iteration order
+    return t, jitter, noise, tz, order

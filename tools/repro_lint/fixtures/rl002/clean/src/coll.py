@@ -1,0 +1,12 @@
+"""Lockstep-safe shapes: branching on host-UNIFORM values is fine."""
+
+
+def sync(local_scores, n_hosts, allreduce_stats):
+    if n_hosts == 1:                 # uniform by construction: every host
+        return local_scores.copy()   # takes the same branch
+    return allreduce_stats(local_scores)
+
+
+def always(local_scores, exchange_topk):
+    blk = exchange_topk(local_scores, k_each=4)   # unconditional
+    return blk

@@ -1,0 +1,9 @@
+"""A host-divergent collective, silenced WITH a justification."""
+
+
+def sync(local_scores, process_index, allreduce_stats):
+    if process_index == 0:
+        # repro-lint: disable=RL002 -- fixture: host 0 is the sole writer
+        # by protocol; peers block on the KV barrier with a bounded timeout
+        allreduce_stats(local_scores)
+    return local_scores

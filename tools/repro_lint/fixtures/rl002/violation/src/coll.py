@@ -1,0 +1,13 @@
+"""Seeded RL002 violations: host-divergent control ahead of collectives."""
+
+
+def sync(local_scores, process_index, allreduce_stats, exchange_topk):
+    if process_index == 0:
+        allreduce_stats(local_scores)           # only host 0 rendezvouses
+    try:
+        blk = exchange_topk(local_scores, k_each=4)
+    except ValueError:
+        blk = exchange_topk(local_scores, k_each=2)   # per-host recovery
+    if len(local_scores) > 0:                   # shard sizes differ per host
+        return exchange_topk(blk, k_each=4)
+    return None

@@ -1,0 +1,21 @@
+"""Pure traced functions: effects live OUTSIDE the jit boundary."""
+import functools
+import time
+
+import jax
+from repro import obs
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def step(x, k):
+    return x * k
+
+
+def run(x):
+    t0 = time.time()             # host code: clocks are fine here
+    y = step(x, 2)
+    obs.counter("step.calls").inc()   # record AROUND the jit, not inside
+    return y, time.time() - t0
+
+
+out = step(1.0, 2)               # hashable static arg

@@ -1,0 +1,10 @@
+"""A traced-side-effect, silenced WITH a justification."""
+import jax
+
+
+@jax.jit
+def step(x):
+    # repro-lint: disable=RL003 -- fixture: deliberate one-shot trace
+    # marker; jax.debug.print is overkill for this probe
+    print("tracing")
+    return x * 2

@@ -1,0 +1,34 @@
+"""Seeded RL003 violations: side effects inside traced functions."""
+import functools
+import time
+
+import jax
+from repro import obs
+
+STATE = {}
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def step(x, cfg):
+    print("tracing", x)          # I/O: fires once per compile
+    t0 = time.time()             # trace-time constant baked in
+    return x * t0
+
+
+@jax.jit
+def bump(x):
+    global STATE                 # host-state mutation at trace time
+    STATE = x
+    return x
+
+
+class Trainer:
+    def make(self):
+        def inner(x):
+            self.calls = 1                        # host-state mutation
+            obs.counter("step.calls").inc()       # telemetry at trace time
+            return x
+        return jax.jit(inner)
+
+
+out = step(1.0, [1, 2])          # unhashable literal at a static position

@@ -1,0 +1,7 @@
+"""Parity test referencing BOTH the op and its oracle."""
+from kernels.foo.ops import scale
+from kernels.foo.ref import scale_ref
+
+
+def test_parity():
+    assert scale(3.0) == scale_ref(3.0)

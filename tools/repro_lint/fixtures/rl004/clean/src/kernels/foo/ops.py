@@ -1,0 +1,14 @@
+"""The disciplined kernel layout: oracle + parity test + fallback."""
+from mylib import pallas_call
+
+
+def _on_tpu():
+    return False
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def scale(x):
+    return pallas_call(_kernel, grid=(1,), interpret=not _on_tpu())(x)

@@ -1,0 +1,5 @@
+"""Pure oracle twin of the ops module."""
+
+
+def scale_ref(x):
+    return x * 2.0

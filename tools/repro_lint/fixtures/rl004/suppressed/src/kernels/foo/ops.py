@@ -1,0 +1,12 @@
+"""An undisciplined op, silenced WITH a justification."""
+from mylib import pallas_call
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+# repro-lint: disable=RL004 -- fixture: vendored reference kernel; its
+# oracle and parity suite live in the upstream repo
+def scale(x):
+    return pallas_call(_kernel, grid=(1,))(x)

@@ -1,0 +1,11 @@
+"""A kernel op missing all three discipline legs."""
+from mylib import pallas_call
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def scale(x):
+    # no interpret= fallback anywhere on this op's call path
+    return pallas_call(_kernel, grid=(1,))(x)

@@ -1,0 +1,5 @@
+"""Oracle module whose function does NOT match the op name."""
+
+
+def wrong_ref(x):
+    return x * 2.0

@@ -1,0 +1,8 @@
+"""Instrument calls in exact agreement with the schema."""
+from mylib import obs
+
+
+def serve(n, worker):
+    obs.counter("app.requests").inc()
+    obs.gauge("app.latency").set(n)
+    obs.counter(f"app.worker.{worker}.restarts").inc()   # dynamic family

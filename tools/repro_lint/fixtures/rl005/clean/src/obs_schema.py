@@ -1,0 +1,7 @@
+"""Schema exactly covering what the code records (one dynamic family)."""
+
+SCHEMA = (
+    ("app.requests", "counter", "requests served"),
+    ("app.latency", "gauge", "last response latency"),
+    ("app.worker.*.restarts", "counter", "restarts per worker"),
+)

@@ -1,0 +1,9 @@
+"""Undocumented metric, silenced WITH a justification."""
+from mylib import obs
+
+
+def serve(n):
+    obs.counter("app.requests").inc()
+    # repro-lint: disable=RL005 -- fixture: scratch metric behind a debug
+    # flag, intentionally kept out of the public schema
+    obs.gauge("app.latency").set(n)

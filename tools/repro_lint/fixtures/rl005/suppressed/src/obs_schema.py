@@ -1,0 +1,8 @@
+"""Phantom schema entry, silenced WITH a justification."""
+
+SCHEMA = (
+    ("app.requests", "counter", "requests served"),
+    # repro-lint: disable=RL005 -- fixture: reserved name; the exporter
+    # that records it ships next release
+    ("app.phantom", "gauge", "reserved for the next release"),
+)

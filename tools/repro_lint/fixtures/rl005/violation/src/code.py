@@ -1,0 +1,8 @@
+"""Instrument calls that drift from the schema both ways."""
+from mylib import obs
+
+
+def serve(n):
+    obs.counter("app.requests").inc()    # documented: fine
+    obs.gauge("app.latency").set(n)      # undocumented metric
+    obs.gauge("app.requests").set(n)     # kind drift: schema says counter

@@ -1,0 +1,6 @@
+"""Schema with a phantom entry (documented, never recorded)."""
+
+SCHEMA = (
+    ("app.requests", "counter", "requests served"),
+    ("app.phantom", "gauge", "documented but never recorded"),
+)

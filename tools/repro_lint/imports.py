@@ -1,0 +1,81 @@
+"""Import-graph builder.
+
+Edges are module -> module over the modules the ``Project`` actually
+loaded (external packages — jax, numpy — are ignored: the graph exists
+to answer "which of OUR modules are reachable from the plan path", not
+to model the world). Imports at any nesting depth count: the sampler's
+lazy in-function ``from repro.distributed.collectives import ...`` is
+an edge like any other, because the code still runs at plan time.
+
+One deliberate exception: imports inside a module-level ``__getattr__``
+(the PEP 562 lazy-export idiom, e.g. ``repro.obs``'s) are NOT edges.
+That hook fires on attribute ACCESS, never on import — so code that
+only imports the package (the plan path records metrics through the
+eagerly-defined functions) cannot execute them. Modules exposed that
+way still get linted whenever something reaches them eagerly.
+"""
+from __future__ import annotations
+
+import ast
+
+
+def _pep562_walk(tree):
+    """``ast.walk`` skipping the bodies of module-level ``__getattr__``
+    functions (their imports run on attribute access, not import)."""
+    stack = [tree]
+    while stack:
+        n = stack.pop()
+        yield n
+        for c in ast.iter_child_nodes(n):
+            if isinstance(c, ast.FunctionDef) and c.name == "__getattr__" \
+                    and n is tree:
+                continue
+            stack.append(c)
+
+
+class ImportGraph:
+    def __init__(self, project):
+        self.project = project
+        self.edges = {}
+        known = set(project.modules)
+        for name, mod in project.modules.items():
+            deps = set()
+            for node in _pep562_walk(mod.tree):
+                if isinstance(node, ast.Import):
+                    for a in node.names:
+                        deps.update(self._known_prefixes(a.name, known))
+                elif isinstance(node, ast.ImportFrom):
+                    base = mod.resolve_from(node)
+                    deps.update(self._known_prefixes(base, known))
+                    for a in node.names:
+                        # `from pkg import mod` — the name may itself be
+                        # a module of ours
+                        cand = f"{base}.{a.name}" if base else a.name
+                        if cand in known:
+                            deps.add(cand)
+            deps.discard(name)
+            self.edges[name] = deps
+
+    @staticmethod
+    def _known_prefixes(dotted, known):
+        """Every loaded module a dotted import touches (importing
+        ``a.b.c`` executes packages ``a`` and ``a.b`` too)."""
+        parts = dotted.split(".")
+        hits = set()
+        for i in range(1, len(parts) + 1):
+            prefix = ".".join(parts[:i])
+            if prefix in known:
+                hits.add(prefix)
+        return hits
+
+    def reachable(self, roots) -> set:
+        """Transitive import closure of ``roots`` (including them)."""
+        seen = set()
+        stack = [r for r in roots if r in self.edges]
+        while stack:
+            cur = stack.pop()
+            if cur in seen:
+                continue
+            seen.add(cur)
+            stack.extend(self.edges.get(cur, ()) - seen)
+        return seen

@@ -1,0 +1,194 @@
+"""Source loading for repro-lint: modules, parent maps, suppressions.
+
+A ``Project`` is a set of parsed modules gathered from one or more
+roots. Roots given to the CLI are *lint* roots (findings are reported
+there); ``--refs`` roots (``tests/`` by default) are loaded as a
+*reference* corpus — rules may consult them (RL004 looks for parity
+tests there) but findings inside them are dropped.
+
+Module names are the dotted path relative to the root, so
+``src/repro/data/plan.py`` loaded from root ``src`` is
+``repro.data.plan`` — which is what the import-graph builder matches
+``import`` statements against.
+
+Suppressions
+------------
+Inline directives silence specific findings::
+
+    x = time.time()  # repro-lint: disable=RL001 -- sink timestamp only
+
+The directive may sit on the flagged line or in the contiguous comment
+block directly above it (so a justification can wrap over several
+comment lines). A file-level form near the top of a file silences a rule for
+the whole file::
+
+    # repro-lint: disable-file=RL001 -- telemetry clocks never feed plans
+
+Every directive MUST carry a justification (free text after the rule
+list); a bare directive is itself a finding (RL000) — a silenced
+invariant with no recorded reason is exactly the drift this tool
+exists to prevent.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import re
+import tokenize
+from pathlib import Path
+
+DIRECTIVE_RE = re.compile(
+    r"#\s*repro-lint:\s*(disable(?:-file)?)\s*=\s*"
+    r"(RL\d{3}(?:\s*,\s*RL\d{3})*)\s*(.*)$")
+
+
+@dataclasses.dataclass
+class Suppression:
+    line: int                 # line the directive appears on
+    rules: frozenset          # rule ids it silences
+    justification: str        # required free text after the rule list
+    file_level: bool
+
+
+def _parse_directives(source: str):
+    """(directives, comment_lines) in ``source`` (via tokenize, so
+    strings containing the directive text are not misread as comments)."""
+    out = []
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+        comments = [(t.start[0], t.string) for t in tokens
+                    if t.type == tokenize.COMMENT]
+    except tokenize.TokenizeError:
+        return out, set()
+    for line, text in comments:
+        m = DIRECTIVE_RE.search(text)
+        if not m:
+            continue
+        kind, rules, rest = m.groups()
+        just = rest.strip().lstrip("-—:;, ").strip()
+        out.append(Suppression(
+            line=line,
+            rules=frozenset(r.strip() for r in rules.split(",")),
+            justification=just,
+            file_level=(kind == "disable-file")))
+    return out, {line for line, _ in comments}
+
+
+class Module:
+    """One parsed source file."""
+
+    def __init__(self, path: Path, name: str, source: str, lint: bool):
+        self.path = path
+        self.name = name
+        self.source = source
+        self.lint = lint
+        self.tree = ast.parse(source, filename=str(path))
+        self.parents = {}
+        for parent in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(parent):
+                self.parents[child] = parent
+        sups, self.comment_lines = _parse_directives(source)
+        self.file_suppressions = [s for s in sups if s.file_level]
+        self.line_suppressions = {}
+        for s in sups:
+            if not s.file_level:
+                self.line_suppressions.setdefault(s.line, []).append(s)
+        self._import_origins = None
+
+    # -- parent/ancestor helpers (rules do lexical queries with these) -----
+    def ancestors(self, node):
+        while node in self.parents:
+            node = self.parents[node]
+            yield node
+
+    # -- imported-name resolution ------------------------------------------
+    @property
+    def import_origins(self) -> dict:
+        """Local name -> dotted origin for every import in the module
+        (any nesting depth — lazy in-function imports count).
+        ``import numpy as np`` -> {"np": "numpy"};
+        ``from os import environ`` -> {"environ": "os.environ"}."""
+        if self._import_origins is None:
+            org = {}
+            for node in ast.walk(self.tree):
+                if isinstance(node, ast.Import):
+                    for a in node.names:
+                        org[a.asname or a.name.split(".")[0]] = (
+                            a.name if a.asname else a.name.split(".")[0])
+                elif isinstance(node, ast.ImportFrom):
+                    base = self.resolve_from(node)
+                    for a in node.names:
+                        if a.name == "*":
+                            continue
+                        org[a.asname or a.name] = f"{base}.{a.name}"
+            self._import_origins = org
+        return self._import_origins
+
+    def resolve_from(self, node: ast.ImportFrom) -> str:
+        """Absolute dotted base of a (possibly relative) ``from`` import."""
+        if not node.level:
+            return node.module or ""
+        pkg = self.name.split(".")
+        # level 1 = current package (drop the module segment), 2 = parent...
+        base = pkg[:len(pkg) - node.level]
+        if node.module:
+            base = base + node.module.split(".")
+        return ".".join(base)
+
+    def qualname(self, node):
+        """Dotted origin of a Name/Attribute chain, e.g. ``np.random.rand``
+        -> ``numpy.random.rand``. None when the base is not an imported
+        name (locals, attributes on self, ...)."""
+        parts = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        base = self.import_origins.get(node.id)
+        if base is None:
+            return None
+        return ".".join([base] + list(reversed(parts)))
+
+
+class Project:
+    """All modules repro-lint can see, keyed by dotted name."""
+
+    def __init__(self):
+        self.modules = {}
+
+    def add_tree(self, root, lint: bool = True) -> int:
+        """Load every ``*.py`` under ``root`` (a directory used as the
+        import root, or a single file). Returns files loaded."""
+        root = Path(root)
+        files = [root] if root.is_file() else sorted(
+            p for p in root.rglob("*.py") if "__pycache__" not in p.parts)
+        base = root.parent if root.is_file() else root
+        n = 0
+        for p in files:
+            rel = p.relative_to(base).with_suffix("")
+            parts = list(rel.parts)
+            if parts[-1] == "__init__":
+                parts = parts[:-1]
+            name = ".".join(parts) if parts else base.name
+            try:
+                source = p.read_text()
+                mod = Module(p, name, source, lint)
+            except (SyntaxError, UnicodeDecodeError) as e:
+                raise SystemExit(f"repro-lint: cannot parse {p}: {e}")
+            self.modules[name] = mod
+            n += 1
+        return n
+
+    def __contains__(self, name):
+        return name in self.modules
+
+    def get(self, name):
+        return self.modules.get(name)
+
+    def lint_modules(self):
+        return [m for m in self.modules.values() if m.lint]
+
+    def all_modules(self):
+        return list(self.modules.values())

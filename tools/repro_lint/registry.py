@@ -1,0 +1,103 @@
+"""Rule plugin registry, findings, and the shared analysis context.
+
+A rule is a class with an ``id`` (``RLxxx``), a one-line ``title``, a
+``doc`` explaining the invariant, and a ``check(ctx)`` generator of
+``Finding``\\ s. Registering is one decorator::
+
+    @register
+    class MyRule(Rule):
+        id = "RL042"
+        title = "no frobnication on the plan path"
+
+        def check(self, ctx):
+            ...
+            yield self.finding(module, node, "don't frobnicate")
+
+Rules see the whole project through ``ctx`` (modules, import graph,
+CFG cache, config) and decide their own scope; the engine applies
+suppressions and drops findings in reference-only modules afterwards.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str
+    path: str                 # path as given (relative when root was)
+    line: int
+    col: int
+    message: str
+    module: str = ""
+    suppressed: bool = False
+    justification: str = ""
+
+    def location(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}"
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class LintConfig:
+    """Knobs the CLI / tests feed the rules. Defaults encode THIS repo's
+    invariants; fixture corpora override them."""
+    # RL001: modules whose import-closure is the plan path. When none of
+    # these exist in the project (fixture corpora, ad-hoc trees) every
+    # linted module is in scope.
+    plan_roots: tuple = ("repro.data.plan", "repro.sampler.selection",
+                        "repro.sampler.schemes")
+    # RL005: module holding the SCHEMA literal (path override for
+    # fixture corpora whose schema lives elsewhere).
+    schema_module: str = "repro.obs.schema"
+    schema_path: str = ""
+
+
+class Rule:
+    id = "RL000"
+    title = ""
+
+    def check(self, ctx):
+        raise NotImplementedError
+
+    def finding(self, module, node, message) -> Finding:
+        return Finding(rule=self.id, path=str(module.path),
+                       line=getattr(node, "lineno", 1),
+                       col=getattr(node, "col_offset", 0) + 1,
+                       message=message, module=module.name)
+
+
+RULES = {}
+
+
+def register(cls):
+    if cls.id in RULES:
+        raise ValueError(f"duplicate rule id {cls.id}")
+    RULES[cls.id] = cls
+    return cls
+
+
+def all_rules():
+    """Registered rule classes, id-sorted (imports the rule modules on
+    first use so registration is a side effect of package import)."""
+    from tools.repro_lint import rules as _rules  # noqa: F401
+    return [RULES[k] for k in sorted(RULES)]
+
+
+class Context:
+    """Everything a rule may consult, built once per run."""
+
+    def __init__(self, project, config=None):
+        from tools.repro_lint.cfg import CFGCache
+        from tools.repro_lint.imports import ImportGraph
+        self.project = project
+        self.config = config or LintConfig()
+        self.imports = ImportGraph(project)
+        self.cfgs = CFGCache()
+
+    def cfg_at(self, module, node):
+        """(scope, CFG) owning ``node`` in ``module`` (None if the node
+        fell outside every scope — e.g. decorators of nested scopes)."""
+        return self.cfgs.for_module(module).get(id(node))

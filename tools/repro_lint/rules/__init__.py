@@ -1,0 +1,9 @@
+"""Rule plugins. Importing this package registers every rule — adding a
+rule is: drop a module here, import it below, done."""
+from tools.repro_lint.rules import (  # noqa: F401
+    rl001_determinism,
+    rl002_collectives,
+    rl003_jit_purity,
+    rl004_kernels,
+    rl005_obs_schema,
+)

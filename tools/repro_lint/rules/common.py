@@ -1,0 +1,160 @@
+"""Shared detectors: nondeterminism sources, set-iteration, call shapes.
+
+These answer "what does this expression DO" questions for RL001 and
+RL003, via each module's import-origin map — so ``np.random.rand`` is
+recognised whatever numpy was imported as, and ``self.time()`` is not
+mistaken for the stdlib clock.
+"""
+from __future__ import annotations
+
+import ast
+
+# wall-clock reads — anything keyed on "when did this host run it"
+CLOCK_CALLS = {
+    "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns", "time.process_time",
+    "time.process_time_ns", "time.clock_gettime",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.datetime.today", "datetime.date.today",
+}
+
+# numpy.random attributes that are fine: explicitly seeded constructors
+# and key-derivation types — everything ELSE on numpy.random touches the
+# hidden global RandomState.
+NP_RANDOM_OK = {
+    "default_rng", "SeedSequence", "Generator", "RandomState",
+    "BitGenerator", "PCG64", "PCG64DXSM", "Philox", "MT19937", "SFC64",
+}
+
+# stdlib `random` attributes that are fine (seeded instances).
+PY_RANDOM_OK = {"Random"}
+
+
+def nondeterminism(module, call: ast.Call):
+    """If ``call`` reads a nondeterminism source, a short reason string;
+    else None."""
+    qn = module.qualname(call.func)
+    if qn is None:
+        return None
+    if qn in CLOCK_CALLS:
+        return f"wall-clock read ({qn})"
+    parts = qn.split(".")
+    if parts[0] == "random" and len(parts) == 2 \
+            and parts[1] not in PY_RANDOM_OK:
+        return f"global-state RNG ({qn})"
+    if parts[0] == "numpy" and len(parts) >= 3 and parts[1] == "random" \
+            and parts[2] not in NP_RANDOM_OK:
+        return f"global-state RNG ({qn})"
+    if qn == "os.getenv":
+        return "environment read (os.getenv)"
+    if qn == "uuid.uuid1" or qn == "uuid.uuid4":
+        return f"nondeterministic id ({qn})"
+    return None
+
+
+def environ_read(module, node):
+    """True for ``os.environ[...]`` / ``os.environ.get(...)`` access."""
+    if isinstance(node, ast.Subscript):
+        return module.qualname(node.value) == "os.environ"
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+        if node.func.attr in ("get", "__getitem__"):
+            return module.qualname(node.func.value) == "os.environ"
+    return False
+
+
+# -- set-order-dependent iteration ------------------------------------------
+_SET_METHODS = {"union", "intersection", "difference",
+                "symmetric_difference"}
+
+
+def _is_set_expr(module, node, local_sets):
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        f = node.func
+        if isinstance(f, ast.Name) and f.id in ("set", "frozenset"):
+            return True
+        if isinstance(f, ast.Attribute) and f.attr in _SET_METHODS \
+                and _is_set_expr(module, f.value, local_sets):
+            return True
+    if isinstance(node, ast.Name) and node.id in local_sets:
+        return True
+    if isinstance(node, ast.BinOp) \
+            and isinstance(node.op, (ast.BitOr, ast.BitAnd, ast.Sub,
+                                     ast.BitXor)) \
+            and (_is_set_expr(module, node.left, local_sets)
+                 or _is_set_expr(module, node.right, local_sets)):
+        return True
+    return False
+
+
+def shallow_walk(node):
+    """``ast.walk`` that does not descend into nested scopes — their
+    bodies belong to their own scope's scan. The scope statement itself
+    is still yielded (so a ``def`` line can anchor findings), whether it
+    is the starting node or a child."""
+    stack = [node]
+    while stack:
+        n = stack.pop()
+        yield n
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                          ast.Lambda, ast.ClassDef)):
+            continue
+        stack.extend(ast.iter_child_nodes(n))
+
+
+def set_iterations(module, scope_body):
+    """Yield (node, reason) for iteration whose ORDER depends on set
+    hashing within one scope body. ``sorted(s)`` is fine — order no
+    longer depends on the set; ``for x in s`` / ``list(s)`` are not.
+    Tracks names assigned set-valued expressions in the same scope
+    (single level, no flow sensitivity — good enough to catch the
+    pattern, cheap enough to run everywhere)."""
+    local_sets = set()
+    for stmt in scope_body:
+        for node in shallow_walk(stmt):
+            if isinstance(node, ast.Assign) \
+                    and _is_set_expr(module, node.value, local_sets):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        local_sets.add(t.id)
+    for stmt in scope_body:
+        for node in shallow_walk(stmt):
+            iters = []
+            if isinstance(node, (ast.For, ast.AsyncFor)):
+                iters.append(node.iter)
+            elif isinstance(node, (ast.ListComp, ast.GeneratorExp,
+                                   ast.DictComp, ast.SetComp)):
+                iters.extend(g.iter for g in node.generators)
+            elif isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Name) \
+                    and node.func.id in ("list", "tuple", "enumerate",
+                                         "iter", "zip", "map") \
+                    and node.args:
+                iters.append(node.args[0])
+            for it in iters:
+                if _is_set_expr(module, it, local_sets):
+                    yield it, "iteration order depends on set hashing"
+
+
+# -- call-shape helpers -------------------------------------------------------
+def terminal_name(func) -> str:
+    """The last identifier of a call target: ``collectives.exchange_topk``
+    -> ``exchange_topk``; ``self.allgather_rows`` -> ``allgather_rows``."""
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return ""
+
+
+def names_in(expr):
+    """Every identifier mentioned in an expression: Name ids and
+    Attribute attrs (``self.host_id`` yields ``self`` and ``host_id``)."""
+    out = set()
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Name):
+            out.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            out.add(node.attr)
+    return out

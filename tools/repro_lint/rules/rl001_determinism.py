@@ -1,0 +1,63 @@
+"""RL001 — nondeterminism on the plan path.
+
+The estimator is unbiased only if every host derives the SAME
+``BatchPlan`` from the same PRNG (ROADMAP: selection plane, PR 4-5). A
+wall-clock read, a global-RNG draw, an ``os.environ`` lookup, or
+iteration over an unordered set anywhere in the plan path can make one
+host's plan bytes differ from another's — a silent per-host mixture
+bias no runtime test reliably catches.
+
+Scope: every module reachable (import graph, lazy in-function imports
+included) from the plan roots — ``repro.data.plan``,
+``repro.sampler.selection``, ``repro.sampler.schemes``. When no root
+module exists in the linted tree (fixture corpora), every linted module
+is in scope.
+
+Allowed and therefore NOT flagged: explicitly seeded RNG construction
+(``np.random.default_rng`` / ``SeedSequence`` / generator types),
+``sorted(...)`` over sets (order no longer depends on hashing).
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.repro_lint.registry import Rule, register
+from tools.repro_lint.rules import common
+
+
+@register
+class Determinism(Rule):
+    id = "RL001"
+    title = "nondeterminism in the plan path"
+
+    def scope(self, ctx):
+        roots = [r for r in ctx.config.plan_roots if r in ctx.project]
+        if not roots:
+            return [m.name for m in ctx.project.lint_modules()]
+        return ctx.imports.reachable(roots)
+
+    def check(self, ctx):
+        for name in sorted(self.scope(ctx)):
+            module = ctx.project.get(name)
+            if module is None or not module.lint:
+                continue
+            yield from self.check_module(module)
+
+    def check_module(self, module):
+        suffix = f" in plan-path module '{module.name}'"
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.Call):
+                why = common.nondeterminism(module, node)
+                if why:
+                    yield self.finding(module, node, why + suffix)
+            if common.environ_read(module, node):
+                yield self.finding(
+                    module, node,
+                    "environment read (os.environ)" + suffix)
+        for scope in ast.walk(module.tree):
+            body = getattr(scope, "body", None)
+            if not isinstance(scope, (ast.Module, ast.FunctionDef,
+                                      ast.AsyncFunctionDef, ast.ClassDef)):
+                continue
+            for it, why in common.set_iterations(module, body):
+                yield self.finding(module, it, why + suffix)

@@ -1,0 +1,138 @@
+"""RL002 — collective call sites must be lockstep-safe.
+
+Every ``repro.distributed.collectives`` call is an SPMD rendezvous:
+ALL hosts must reach it, in the same order, or the fast ones hang in
+the barrier until timeout (the classic lockstep deadlock — the shape
+Alain et al.'s distributed-IS deployment dies on). Statically that
+means a collective call site must not be:
+
+* **control-dependent on a host-dependent branch** — a condition
+  reading ``process_index`` / ``host_id`` / a local shard's size can
+  evaluate differently per host, so one arm's hosts enter the
+  collective while the other arm's hosts don't (found via CFG
+  control-dependence, which also covers early-``return`` /
+  conditional-``raise`` arms);
+* **inside an ``except`` handler** — exceptions fire per-host (an I/O
+  error, a local OOM), so a collective in the recovery arm runs on the
+  failing host only.
+
+Uniform-by-construction values (``n_hosts``, ``process_count``, config)
+are NOT host-dependent: branching on them is how the single-process
+identity paths work, and those stay unflagged.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.repro_lint.registry import Rule, register
+from tools.repro_lint.rules import common
+
+# the production collectives (repro.distributed.collectives exports) +
+# the cross-process primitives they ride
+COLLECTIVES = {
+    "gather_host_scores", "allgather_rows", "exchange_rows",
+    "exchange_topk", "allreduce_stats", "allreduce_any",
+    "ring_allreduce_compressed", "_process_allgather", "_kv_allgather",
+}
+
+# identifiers whose value differs across hosts when they appear in a
+# branch condition
+HOST_DEPENDENT = {"process_index", "host_id", "local_rank", "shard_id"}
+
+# names that look like host-LOCAL data: their sizes/shapes differ across
+# hosts when n % H != 0 (branching on them is the uneven-shard deadlock)
+_LOCALISH = ("local", "shard", "contrib")
+
+
+@register
+class CollectiveSafety(Rule):
+    id = "RL002"
+    title = "collective call sites must be lockstep-safe"
+
+    def check(self, ctx):
+        for module in ctx.project.lint_modules():
+            yield from self.check_module(module, ctx)
+
+    # -- detection ----------------------------------------------------------
+    def _collective_aliases(self, module, scope_node):
+        """Names bound to a collective inside one scope — catches the
+        injectable-collective idiom ``gather = gather_fn or
+        gather_host_scores`` the sampler/assembler use."""
+        aliases = {}
+        body = getattr(scope_node, "body", [])
+        for stmt in body if isinstance(body, list) else []:
+            for node in common.shallow_walk(stmt):
+                if not isinstance(node, ast.Assign):
+                    continue
+                val = node.value
+                cands = (val.values if isinstance(val, ast.BoolOp)
+                         else [val])
+                hit = next((common.terminal_name(c) for c in cands
+                            if isinstance(c, (ast.Name, ast.Attribute))
+                            and common.terminal_name(c) in COLLECTIVES),
+                           None)
+                if hit:
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            aliases[t.id] = hit
+        return aliases
+
+    def _is_host_dependent(self, test) -> bool:
+        names = common.names_in(test)
+        if names & HOST_DEPENDENT:
+            return True
+        # local shard sizes: len(local)/local.size/local.shape comparisons
+        for node in ast.walk(test):
+            target = None
+            if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                    and node.func.id == "len" and node.args:
+                target = node.args[0]
+            elif isinstance(node, ast.Attribute) \
+                    and node.attr in ("size", "shape", "nbytes"):
+                target = node.value
+            if target is not None:
+                base = common.names_in(target)
+                if any(any(tok in n for tok in _LOCALISH) for n in base):
+                    return True
+        return False
+
+    def check_module(self, module, ctx):
+        alias_cache = {}
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = common.terminal_name(node.func)
+            located = ctx.cfg_at(module, node)
+            if located is None:
+                continue
+            scope, cfg = located
+            if name not in COLLECTIVES:
+                if id(scope) not in alias_cache:
+                    alias_cache[id(scope)] = self._collective_aliases(
+                        module, scope)
+                target = alias_cache[id(scope)].get(name) \
+                    if isinstance(node.func, ast.Name) else None
+                if target is None:
+                    continue
+                name = f"{name} (= {target})"
+            block = cfg.block_for(node)
+            if block is None:
+                continue
+            if block.in_handler:
+                yield self.finding(
+                    module, node,
+                    f"collective '{name}' inside an except handler — "
+                    f"exceptions fire per-host, so only the failing host "
+                    f"runs it (lockstep deadlock)")
+                continue
+            for branch in cfg.control_deps(block):
+                if branch.test is not None \
+                        and self._is_host_dependent(branch.test):
+                    cond = ast.unparse(branch.test)
+                    yield self.finding(
+                        module, node,
+                        f"collective '{name}' is control-dependent on "
+                        f"host-dependent branch `{cond}` (line "
+                        f"{branch.test.lineno}) — hosts can disagree and "
+                        f"deadlock in the rendezvous")
+                    break

@@ -1,0 +1,171 @@
+"""RL003 — functions handed to ``jax.jit`` / ``pallas_call`` must be pure.
+
+A traced function's Python body runs ONCE per compile, not once per
+step. Side effects inside it therefore misbehave silently:
+
+* **host-state mutation** (``global``, ``self.x = ...``) happens at
+  trace time only — the mutation "works" on step 1 and never again;
+* **obs record calls** fire at trace time, so the telemetry plane sees
+  one sample per compile instead of one per step (and retraces under
+  ``donate_argnums`` double-count it);
+* **I/O** (``print`` / ``open`` / ``input``) prints tracers once, then
+  goes quiet — the classic "my debug print disappeared" trap;
+* **wall-clock / global-RNG reads** bake a trace-time constant into the
+  compiled program — every subsequent step reuses step-1's "now";
+* **unhashable static args** (list/dict/set literals at a
+  ``static_argnums`` position) raise at call time — flagged statically
+  so the failure is caught before a device run.
+
+Traced functions are found three ways: ``@jax.jit`` (or
+``@functools.partial(jax.jit, ...)``) decorators, ``jax.jit(f)`` wrap
+sites whose argument names a function defined in the same module, and
+``pl.pallas_call(kernel, ...)`` kernel arguments.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.repro_lint.registry import Rule, register
+from tools.repro_lint.rules import common
+
+_IO_CALLS = {"print", "input", "open", "breakpoint"}
+
+
+def _is_jit_name(module, expr) -> bool:
+    qn = module.qualname(expr)
+    return qn in ("jax.jit", "jax.pjit", "jax.experimental.pjit.pjit") \
+        or common.terminal_name(expr) in ("jit", "pjit")
+
+
+def _is_pallas_call(module, expr) -> bool:
+    qn = module.qualname(expr)
+    return (qn is not None and qn.endswith("pallas_call")) \
+        or common.terminal_name(expr) == "pallas_call"
+
+
+def _jit_decorator(module, dec):
+    """True if ``dec`` marks the function as traced: ``@jax.jit`` or
+    ``@functools.partial(jax.jit, ...)`` (returns the partial Call for
+    static-arg inspection, or True for the bare form)."""
+    if _is_jit_name(module, dec):
+        return True
+    if isinstance(dec, ast.Call):
+        if _is_jit_name(module, dec.func):
+            return dec
+        if common.terminal_name(dec.func) == "partial" and dec.args \
+                and _is_jit_name(module, dec.args[0]):
+            return dec
+    return None
+
+
+@register
+class JitPurity(Rule):
+    id = "RL003"
+    title = "side effects inside jit/pallas-traced functions"
+
+    def check(self, ctx):
+        for module in ctx.project.lint_modules():
+            yield from self.check_module(module)
+
+    # -- traced-function discovery -------------------------------------------
+    def _traced(self, module):
+        """{id(FunctionDef): how} for every function that gets traced,
+        plus {fn_name: static_argnums tuple} for wrap sites."""
+        defs = {}
+        for node in ast.walk(module.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs.setdefault(node.name, node)
+        traced, statics = {}, {}
+        for node in ast.walk(module.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    how = _jit_decorator(module, dec)
+                    if how is not None:
+                        traced[id(node)] = (node, "jit")
+                        if isinstance(how, ast.Call):
+                            statics[node.name] = _static_argnums(how)
+            elif isinstance(node, ast.Call):
+                target = None
+                if _is_jit_name(module, node.func) and node.args:
+                    target, how = node.args[0], "jit"
+                    if isinstance(target, ast.Name):
+                        statics[target.id] = _static_argnums(node)
+                elif _is_pallas_call(module, node.func) and node.args:
+                    target, how = node.args[0], "pallas_call"
+                if isinstance(target, ast.Name) and target.id in defs:
+                    fn = defs[target.id]
+                    traced[id(fn)] = (fn, how)
+        return list(traced.values()), statics
+
+    # -- body checks ---------------------------------------------------------
+    def _impure(self, module, fn, how):
+        ctx = f" inside {how}-traced '{fn.name}' (runs at trace time only)"
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Global):
+                yield node, "global-state mutation (`global`)" + ctx
+            elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    if isinstance(t, ast.Attribute) \
+                            and isinstance(t.value, ast.Name) \
+                            and t.value.id == "self":
+                        yield (node, f"host-state mutation "
+                               f"(self.{t.attr} = ...)" + ctx)
+            elif isinstance(node, ast.Call):
+                name = common.terminal_name(node.func)
+                qn = module.qualname(node.func)
+                if isinstance(node.func, ast.Name) and name in _IO_CALLS:
+                    yield node, f"I/O call ({name})" + ctx
+                elif qn is not None and (qn.startswith("repro.obs")
+                                         or qn.split(".")[0] == "obs"):
+                    yield node, f"obs record call ({qn})" + ctx
+                else:
+                    why = common.nondeterminism(module, node)
+                    if why:
+                        yield node, why + " bakes a trace-time constant" + ctx
+
+    def _bad_static_args(self, module, statics):
+        """Calls of a jitted name passing an unhashable literal at a
+        ``static_argnums`` position."""
+        unhashable = (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                      ast.DictComp, ast.SetComp)
+        for node in ast.walk(module.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)):
+                continue
+            nums = statics.get(node.func.id)
+            if not nums:
+                continue
+            for pos in nums:
+                if pos < len(node.args) \
+                        and isinstance(node.args[pos], unhashable):
+                    yield (node.args[pos],
+                           f"unhashable literal at static_argnums "
+                           f"position {pos} of jitted '{node.func.id}' — "
+                           f"raises at call time")
+
+    def check_module(self, module):
+        traced, statics = self._traced(module)
+        for fn, how in traced:
+            for node, msg in self._impure(module, fn, how):
+                yield self.finding(module, node, msg)
+        for node, msg in self._bad_static_args(module, statics):
+            yield self.finding(module, node, msg)
+
+
+def _static_argnums(call: ast.Call):
+    """The ``static_argnums`` positions of a jit call, as ints (empty
+    when absent or not statically evaluable)."""
+    for kw in call.keywords:
+        if kw.arg == "static_argnums":
+            try:
+                val = ast.literal_eval(kw.value)
+            except (ValueError, SyntaxError):
+                return ()
+            if isinstance(val, int):
+                return (val,)
+            if isinstance(val, (tuple, list)) \
+                    and all(isinstance(v, int) for v in val):
+                return tuple(val)
+    return ()

@@ -1,0 +1,122 @@
+"""RL004 — kernel discipline: op ⇔ oracle ⇔ parity test ⇔ fallback.
+
+Every public op in a ``…kernels.<k>.ops`` module is a Pallas fast path
+whose correctness is only checkable against a slow oracle. The repo
+convention (ce_score sets the pattern) is a closed loop:
+
+* ``ref.py`` in the same kernel package defines ``<op>_ref`` — the
+  pure-jnp oracle;
+* a parity test (reference corpus, ``tests/`` by default) references
+  BOTH names — drift in either breaks the test, not production;
+* the op reaches a ``pallas_call(..., interpret=...)`` fallback so the
+  kernel runs (slowly) on hosts without the target accelerator — the
+  CI container included.
+
+A missing leg means an unverifiable kernel: exactly the "fast but
+wrong importance scores" failure mode the paper's variance-reduction
+claims are most sensitive to, since a biased score kernel silently
+skews every sampled batch.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from tools.repro_lint.registry import Rule, register
+from tools.repro_lint.rules import common
+
+
+def _top_level_defs(tree):
+    return {n.name: n for n in tree.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+def _identifiers(module) -> set:
+    """Every identifier a module mentions — Name ids, Attribute attrs,
+    and imported names — for "does this test reference op AND oracle"."""
+    out = set()
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.Name):
+            out.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            out.add(node.attr)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            for a in node.names:
+                out.add((a.asname or a.name).split(".")[-1])
+    return out
+
+
+@register
+class KernelDiscipline(Rule):
+    id = "RL004"
+    title = "kernel op without oracle / parity test / interpret fallback"
+
+    def check(self, ctx):
+        refs = [m for m in ctx.project.all_modules() if not m.lint]
+        ref_ids = [(_identifiers(m), m) for m in refs]
+        for module in ctx.project.lint_modules():
+            if "kernels" not in module.name.split(".") \
+                    or not module.name.endswith(".ops"):
+                continue
+            yield from self.check_ops_module(ctx, module, ref_ids)
+
+    def check_ops_module(self, ctx, module, ref_ids):
+        ref_name = re.sub(r"\.ops$", ".ref", module.name)
+        ref_mod = ctx.project.get(ref_name)
+        oracle_defs = _top_level_defs(ref_mod.tree) if ref_mod else {}
+        defs = _top_level_defs(module.tree)
+        interp = self._interpret_reach(module, defs)
+        for name, fn in defs.items():
+            if name.startswith("_"):
+                continue
+            oracle = f"{name}_ref"
+            if ref_mod is None:
+                yield self.finding(
+                    module, fn,
+                    f"kernel op '{name}' has no sibling ref module "
+                    f"('{ref_name}' not found) — no oracle to verify "
+                    f"against")
+            elif oracle not in oracle_defs:
+                yield self.finding(
+                    module, fn,
+                    f"kernel op '{name}' has no oracle '{oracle}' in "
+                    f"{ref_mod.path.name} — parity is unverifiable")
+            if name not in interp:
+                yield self.finding(
+                    module, fn,
+                    f"kernel op '{name}' never reaches an "
+                    f"'interpret=' fallback — it cannot run on hosts "
+                    f"without the target accelerator")
+            if ref_ids and not any(
+                    name in ids and oracle in ids for ids, _ in ref_ids):
+                yield self.finding(
+                    module, fn,
+                    f"no parity test references both '{name}' and "
+                    f"'{oracle}' — oracle and op can drift apart "
+                    f"silently")
+
+    @staticmethod
+    def _interpret_reach(module, defs) -> set:
+        """Names of top-level functions that (transitively, through
+        same-module calls) make a call carrying an ``interpret=``
+        keyword."""
+        direct, calls = set(), {}
+        for name, fn in defs.items():
+            calls[name] = set()
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                if any(kw.arg == "interpret" for kw in node.keywords):
+                    direct.add(name)
+                callee = common.terminal_name(node.func)
+                if callee in defs:
+                    calls[name].add(callee)
+        reach = set(direct)
+        changed = True
+        while changed:
+            changed = False
+            for name in defs:
+                if name not in reach and calls[name] & reach:
+                    reach.add(name)
+                    changed = True
+        return reach

@@ -1,0 +1,160 @@
+"""RL005 — obs metric names and the documented schema must not drift.
+
+``repro.obs.schema.SCHEMA`` is the single source of truth for every
+metric name the telemetry plane emits (README table and the runtime
+schema check both derive from it). Two drift directions, both flagged:
+
+* **code → schema**: an instrument call (``obs.counter("x")`` /
+  ``gauge`` / ``histogram`` / ``span``) whose name literal matches no
+  schema entry — an undocumented metric nobody's dashboards know about;
+  a name that matches but with the WRONG kind is the nastier variant
+  (a counter dashboarded as a gauge reads as monotone garbage).
+* **schema → code**: a non-``record`` schema entry no instrument call
+  ever records — documentation for a metric that does not exist.
+
+Dynamic families are compared as patterns: an f-string name
+(``f"collectives.{name}.calls"``) and a concat (``"health." + n``)
+become ``*`` wildcards, matched against the schema's own ``*``
+entries. Pure-variable names (the registry's internal plumbing) are
+skipped — the literal at the REAL call site is what gets checked.
+
+The schema is read with ``ast.literal_eval`` — never imported — so
+this rule runs on a bare Python with no jax/numpy present.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+
+from tools.repro_lint.registry import Rule, register
+
+_KINDS = {"counter", "gauge", "histogram", "span"}
+
+
+def _name_pattern(arg):
+    """A metric-name pattern from a call's first argument: str literal
+    as-is, f-string / str-concat with ``*`` at dynamic slots, None when
+    the name is a pure variable (nothing static to check)."""
+    if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+        return arg.value
+    if isinstance(arg, ast.JoinedStr):
+        parts = []
+        for v in arg.values:
+            if isinstance(v, ast.Constant):
+                parts.append(str(v.value))
+            else:
+                parts.append("*")
+        pat = "".join(parts)
+        return pat if pat.strip("*") else None
+    if isinstance(arg, ast.BinOp) and isinstance(arg.op, ast.Add):
+        left = _name_pattern(arg.left)
+        right = _name_pattern(arg.right)
+        pat = (left or "*") + (right or "*")
+        return pat if pat.strip("*") else None
+    return None
+
+
+def _rx(pattern: str):
+    return re.compile("".join(".+" if c == "*" else re.escape(c)
+                              for c in pattern))
+
+
+def _covers(pattern: str, name: str) -> bool:
+    """Pattern/name match where EITHER side may hold ``*`` wildcards
+    (``health.*`` covers ``health.ess``; ``collectives.*.calls`` covers
+    itself)."""
+    return (_rx(pattern).fullmatch(name) is not None
+            or _rx(name).fullmatch(pattern) is not None)
+
+
+@register
+class ObsSchemaDrift(Rule):
+    id = "RL005"
+    title = "obs metric names drifting from the documented schema"
+
+    # -- schema loading ------------------------------------------------------
+    def _schema(self, ctx):
+        """(entries, anchor_module, {name: elt-node}) from the SCHEMA
+        literal, or None when the project has no schema (non-obs
+        corpora — the rule then has nothing to enforce)."""
+        module = ctx.project.get(ctx.config.schema_module)
+        if module is None and ctx.config.schema_path:
+            from tools.repro_lint.project import Module
+            p = Path(ctx.config.schema_path)
+            module = Module(p, "<schema>", p.read_text(), lint=False)
+        if module is None:
+            return None
+        for node in module.tree.body:
+            if isinstance(node, ast.Assign) \
+                    and any(isinstance(t, ast.Name) and t.id == "SCHEMA"
+                            for t in node.targets) \
+                    and isinstance(node.value, (ast.Tuple, ast.List)):
+                entries, anchors = [], {}
+                for elt in node.value.elts:
+                    try:
+                        row = ast.literal_eval(elt)
+                    except ValueError:
+                        continue
+                    if isinstance(row, tuple) and len(row) >= 2:
+                        entries.append(row)
+                        anchors[row[0]] = elt
+                return entries, module, anchors
+        return None
+
+    # -- instrument-call collection ------------------------------------------
+    def _recorded(self, ctx):
+        """[(pattern, kind, module, node)] for every instrument call with
+        a statically-known (or pattern-known) name in the lint tree."""
+        out = []
+        for module in ctx.project.lint_modules():
+            for node in ast.walk(module.tree):
+                if not (isinstance(node, ast.Call) and node.args):
+                    continue
+                f = node.func
+                kind = (f.attr if isinstance(f, ast.Attribute)
+                        else f.id if isinstance(f, ast.Name) else "")
+                if kind not in _KINDS:
+                    continue
+                pat = _name_pattern(node.args[0])
+                if pat is not None:
+                    out.append((pat, kind, module, node))
+        return out
+
+    def check(self, ctx):
+        got = self._schema(ctx)
+        if got is None:
+            return
+        entries, schema_mod, anchors = got
+        recorded = self._recorded(ctx)
+
+        # code -> schema
+        for pat, kind, module, node in recorded:
+            hits = [e for e in entries if _covers(e[0], pat)
+                    or _covers(pat, e[0])]
+            if not hits:
+                yield self.finding(
+                    module, node,
+                    f"{kind} '{pat}' is not in the obs schema "
+                    f"({ctx.config.schema_module}.SCHEMA) — undocumented "
+                    f"metric")
+            elif not any(e[1] == kind for e in hits):
+                want = "/".join(sorted({e[1] for e in hits}))
+                yield self.finding(
+                    module, node,
+                    f"'{pat}' recorded as {kind} but the schema "
+                    f"declares it a {want} — kind drift")
+
+        # schema -> code
+        for entry in entries:
+            name, kind = entry[0], entry[1]
+            if kind == "record":
+                continue
+            if not any(k == kind and (_covers(p, name) or _covers(name, p))
+                       for p, k, _, _ in recorded):
+                anchor = anchors.get(name, schema_mod.tree)
+                yield self.finding(
+                    schema_mod, anchor,
+                    f"schema entry '{name}' ({kind}) is never recorded "
+                    f"by any instrument call — documented metric does "
+                    f"not exist")

@@ -1,0 +1,83 @@
+"""Fixture self-test: every rule proves itself on a seeded corpus.
+
+Each rule ships three corpora under ``fixtures/rlNNN/``:
+
+* ``violation/`` — seeded violations the rule MUST find;
+* ``clean/`` — the same logic written correctly; zero findings allowed
+  (false-positive guard);
+* ``suppressed/`` — the violations again, each silenced by a justified
+  inline directive; zero ACTIVE findings, nonzero suppressed
+  (suppression-mechanics guard).
+
+Each corpus holds a ``src/`` lint tree and an optional ``refs/``
+reference corpus (RL004's parity tests). Results are compared against
+``GOLDEN.json`` — the exact (rule, file, line) finding set — so a rule
+that silently starts over- or under-reporting fails CI even if the
+counts happen to match. Regenerate after deliberate rule changes with
+``python -m tools.repro_lint --selftest --update-golden``.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from tools.repro_lint.engine import run
+from tools.repro_lint.project import Project
+from tools.repro_lint.registry import LintConfig
+
+# per-rule config overrides (fixture trees are not this repo)
+CONFIGS = {"rl005": {"schema_module": "obs_schema"}}
+
+
+def corpus_results(fixtures: Path) -> dict:
+    out = {}
+    for rule_dir in sorted(p for p in fixtures.iterdir() if p.is_dir()):
+        rule_id = rule_dir.name.upper()
+        for corpus in sorted(p for p in rule_dir.iterdir() if p.is_dir()):
+            project = Project()
+            project.add_tree(corpus / "src", lint=True)
+            if (corpus / "refs").is_dir():
+                project.add_tree(corpus / "refs", lint=False)
+            cfg = LintConfig(**CONFIGS.get(rule_dir.name, {}))
+            active, suppressed = run(project, cfg, {rule_id, "RL000"})
+            out[f"{rule_dir.name}/{corpus.name}"] = {
+                "findings": [[f.rule, Path(f.path).name, f.line]
+                             for f in active],
+                "suppressed": len(suppressed),
+            }
+    return out
+
+
+def run_selftest(fixtures: Path, update_golden: bool = False) -> int:
+    golden_path = fixtures / "GOLDEN.json"
+    got = corpus_results(fixtures)
+    if update_golden:
+        golden_path.write_text(json.dumps(got, indent=2) + "\n")
+        print(f"repro-lint selftest: golden set rewritten "
+              f"({len(got)} corpora)")
+        return 0
+    golden = json.loads(golden_path.read_text())
+    ok = True
+    for key in sorted(set(golden) | set(got)):
+        if golden.get(key) != got.get(key):
+            ok = False
+            print(f"selftest MISMATCH {key}:\n"
+                  f"  golden: {golden.get(key)}\n"
+                  f"  got:    {got.get(key)}")
+    # structural invariants, independent of the snapshot
+    for key, res in got.items():
+        kind = key.split("/", 1)[1]
+        if kind == "violation" and not res["findings"]:
+            ok = False
+            print(f"selftest: {key} seeded violations NOT detected")
+        elif kind == "clean" and (res["findings"] or res["suppressed"]):
+            ok = False
+            print(f"selftest: {key} should be silent: {res}")
+        elif kind == "suppressed" and (res["findings"]
+                                       or not res["suppressed"]):
+            ok = False
+            print(f"selftest: {key} suppression mechanics broken: {res}")
+    n = len(got)
+    print(f"repro-lint selftest: {n} corpora "
+          f"{'OK' if ok else 'FAILED'}")
+    return 0 if ok else 1
