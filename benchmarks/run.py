@@ -5,6 +5,11 @@ One function per paper table/figure (+ the roofline report). Prints
 benchmarks/artifacts/. Training-loop suites run through the public
 ``repro.api`` facade — there is no benchmark-local trainer wiring.
 
+Suites in ``ARTIFACTS`` own a committed JSON artifact: after a suite
+"succeeds", the orchestrator verifies the file was actually (re)written
+this run and fails LOUDLY otherwise — a suite that silently returns
+without its artifact is how BENCH_*.json files go stale or missing.
+
 Subsets: ``python -m benchmarks.run fig1 fig3 roofline``
 """
 from __future__ import annotations
@@ -13,12 +18,24 @@ import sys
 import time
 import traceback
 
+# suite -> the artifact (benchmarks/artifacts/<name>.json) it must write
+ARTIFACTS = {
+    "sampler": "BENCH_sampler",
+    "pipeline": "BENCH_pipeline",
+    "fused": "BENCH_fused",
+    "selection": "BENCH_selection",
+    "obs": "BENCH_obs",
+    "scoring_overlap": "BENCH_scoring",
+    "score_prune": "BENCH_prune",
+}
+
 
 def main() -> None:
     from benchmarks import paper_figures as pf
     from benchmarks import (data_plane, fused_presample, obs_overhead,
-                            roofline, sampler_compare, scoring_overhead,
-                            selection_scale, svrg_compare)
+                            roofline, sampler_compare, score_prune,
+                            scoring_overhead, selection_scale, svrg_compare)
+    from benchmarks.common import ART
 
     suites = {
         "sampler": sampler_compare.sampler_compare,
@@ -35,6 +52,7 @@ def main() -> None:
         "tau": pf.tau_gate_behaviour,
         "scoring": scoring_overhead.scoring_overhead,
         "scoring_overlap": scoring_overhead.bench_scoring_overlap,
+        "score_prune": score_prune.bench_score_prune,
         "svrg": svrg_compare.svrg_compare,
         "roofline": lambda: roofline.render(emit=print),
     }
@@ -48,6 +66,13 @@ def main() -> None:
         t0 = time.time()
         try:
             suites[name]()
+            art = ARTIFACTS.get(name)
+            if art is not None:
+                path = ART / f"{art}.json"
+                if not path.exists() or path.stat().st_mtime < t0 - 1:
+                    raise RuntimeError(
+                        f"suite '{name}' completed without writing "
+                        f"{path} — artifact contract broken")
             print(f"{name}.elapsed_s,,{time.time() - t0:.1f}", flush=True)
         except Exception as e:
             failures += 1

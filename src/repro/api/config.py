@@ -269,8 +269,11 @@ def _prod(model: ModelConfig) -> RunConfig:
         # TPU, interpret composition elsewhere) and the DataPlane
         # pipelines the B-row candidate assembly — same plans as the
         # host path, less host<->device traffic
+        # survival-pruned scoring: rows that already lost the step's race
+        # stop being scored mid-pool (conservative — plans are unchanged
+        # within the mode; kernels.prune.* counters carry the receipt)
         imp=ISConfig(enabled=True, presample_ratio=3,
-                     presample_impl="fused"),
+                     presample_impl="fused", score_prune="conservative"),
         # production runs are observable by default: JSONL telemetry
         # (loop spans, data-plane stages, collective/store counters,
         # IS-health gauges) every 10 accepted steps

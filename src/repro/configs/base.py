@@ -223,6 +223,17 @@ class ISConfig:
     # only the B-float score vector crosses the host boundary. "auto"
     # defers to sampler.host_score ("host" when set, else "step").
     presample_impl: str = "auto"
+    # survival pruning of the presample scoring pass: "conservative"
+    # chunks the pool's CE over time-blocks and stops scoring rows whose
+    # race-key lower bound E_i/ŝ_i already exceeds the running (k+1)-th
+    # key upper bound — the surviving top-(b+1) is EXACTLY the unpruned
+    # one, so plans stay bitwise identical across the pruned / unpruned
+    # fused / host_score paths (which all switch to the survivor-closed
+    # plan math: raw race keys + HT-estimated τ̂, see
+    # selection.presample_race_select_raw). "off" (default) is the PR-7
+    # byte-exact full-scoring path. Saves ~(1−1/ratio) of scoring flops
+    # on concentrated pools (kernels.prune.* counters carry the receipt).
+    score_prune: str = "off"
 
     def resolved_tau_th(self, b: int) -> float:
         if self.tau_th > 0:

@@ -71,6 +71,130 @@ def _kernel(z_ref, labels_ref, ce_ref, g2_ref,
         g2_ref[...] = jnp.maximum(g2, 0.0)
 
 
+def _block_kernel(z_ref, labels_ref, alive_ref, ce_ref, g2_ref,
+                  m1_ref, s1_ref, m2_ref, s2_ref, zy_ref, *, bv, n_v):
+    """Row-blocked, survival-gated variant of ``_kernel``: grid
+    (B/bb, Tc/bt, V/bv), vocab minor so the (bb, bt) scratch streams the
+    same online-softmax recurrence per token — but every (bb, bt) tile
+    whose row block is fully dead is SKIPPED outright (no scratch init,
+    no update, no finalize). Outputs are per-ROW masked sums (not
+    per-token stats): ce/g2 accumulate across the t grid dim into a
+    revisited (bb,) output block."""
+    t_idx = pl.program_id(1)
+    v_idx = pl.program_id(2)
+
+    # the (bb,) output block is revisited across (t, v): zero it exactly
+    # once, on first visit — unconditionally, dead blocks included, so a
+    # fully-pruned row block reads back as 0.0 rather than garbage
+    @pl.when((t_idx == 0) & (v_idx == 0))
+    def _zero():
+        ce_ref[...] = jnp.zeros_like(ce_ref)
+        g2_ref[...] = jnp.zeros_like(g2_ref)
+
+    # the survival gate: one predicate for the whole tile. alive is
+    # constant across t/v within a call, so init/update/finalize agree.
+    any_alive = jnp.max(alive_ref[...]) > 0.0
+
+    @pl.when(any_alive & (v_idx == 0))
+    def _init():
+        m1_ref[...] = jnp.full_like(m1_ref, NEG)
+        s1_ref[...] = jnp.zeros_like(s1_ref)
+        m2_ref[...] = jnp.full_like(m2_ref, NEG)
+        s2_ref[...] = jnp.zeros_like(s2_ref)
+        zy_ref[...] = jnp.zeros_like(zy_ref)
+
+    @pl.when(any_alive)
+    def _update():
+        z = z_ref[...].astype(jnp.float32)             # (bb, bt, bv)
+        labels = labels_ref[...]                       # (bb, bt)
+
+        m1 = m1_ref[...]
+        mt = jnp.max(z, axis=-1)
+        m1n = jnp.maximum(m1, mt)
+        s1_ref[...] = s1_ref[...] * jnp.exp(m1 - m1n) + \
+            jnp.sum(jnp.exp(z - m1n[..., None]), axis=-1)
+        m1_ref[...] = m1n
+
+        z2 = 2.0 * z
+        m2 = m2_ref[...]
+        mt2 = jnp.max(z2, axis=-1)
+        m2n = jnp.maximum(m2, mt2)
+        s2_ref[...] = s2_ref[...] * jnp.exp(m2 - m2n) + \
+            jnp.sum(jnp.exp(z2 - m2n[..., None]), axis=-1)
+        m2_ref[...] = m2n
+
+        # label gather; labels < 0 (unsupervised/pad) match no column
+        cols = v_idx * bv + jax.lax.broadcasted_iota(jnp.int32, z.shape, 2)
+        match = cols == labels[..., None]
+        zy_ref[...] += jnp.sum(jnp.where(match, z, 0.0), axis=-1)
+
+    @pl.when(any_alive & (v_idx == n_v - 1))
+    def _finalize():
+        lse = m1_ref[...] + jnp.log(s1_ref[...])
+        lse2 = m2_ref[...] + jnp.log(jnp.maximum(s2_ref[...], 1e-30))
+        zy = zy_ref[...]
+        mask = (labels_ref[...] >= 0).astype(jnp.float32)
+        ce = (lse - zy) * mask
+        g2 = jnp.exp(lse2 - 2.0 * lse) - 2.0 * jnp.exp(zy - lse) + 1.0
+        g2 = jnp.maximum(g2, 0.0) * mask
+        ce_ref[...] += jnp.sum(ce, axis=-1)
+        g2_ref[...] += jnp.sum(g2, axis=-1)
+
+
+def ce_score_block_pallas(logits, labels, alive, *, block_b=8, block_t=128,
+                          block_v=2048, interpret=False):
+    """Survival-gated row-blocked CE+score chunk: logits (B, Tc, V),
+    labels (B, Tc) int32 (< 0 = unsupervised, masked out of the sums),
+    alive (B,) f32 survival mask → (ce_sum, g2_sum) f32 (B,), the MASKED
+    per-row sums over this time chunk. Row blocks whose alive lanes are
+    all zero skip every (bb, bt, bv) tile (their rows return 0.0).
+
+    Ragged shapes pad: vocab with NEG (no softmax mass), time/batch rows
+    with label −1 (masked), alive with 0 (pad row blocks skip)."""
+    B, Tc, V = logits.shape
+    bb = min(block_b, B)
+    bt = min(block_t, Tc)
+    bv = min(block_v, V)
+    Bp = -(-B // bb) * bb
+    Tp = -(-Tc // bt) * bt
+    Vp = -(-V // bv) * bv
+    if (Bp, Tp, Vp) != (B, Tc, V):
+        logits = jnp.pad(logits, ((0, Bp - B), (0, Tp - Tc), (0, Vp - V)),
+                         constant_values=NEG)
+        labels = jnp.pad(labels, ((0, Bp - B), (0, Tp - Tc)),
+                         constant_values=-1)
+        alive = jnp.pad(alive, (0, Bp - B))
+    n_v = Vp // bv
+
+    kernel = functools.partial(_block_kernel, bv=bv, n_v=n_v)
+    ce, g2 = pl.pallas_call(
+        kernel,
+        grid=(Bp // bb, Tp // bt, n_v),
+        in_specs=[
+            pl.BlockSpec((bb, bt, bv), lambda i, t, v: (i, t, v)),
+            pl.BlockSpec((bb, bt), lambda i, t, v: (i, t)),
+            pl.BlockSpec((bb,), lambda i, t, v: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb,), lambda i, t, v: (i,)),
+            pl.BlockSpec((bb,), lambda i, t, v: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp,), jnp.float32),
+            jax.ShapeDtypeStruct((Bp,), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bb, bt), jnp.float32),   # m1
+            pltpu.VMEM((bb, bt), jnp.float32),   # s1
+            pltpu.VMEM((bb, bt), jnp.float32),   # m2
+            pltpu.VMEM((bb, bt), jnp.float32),   # s2
+            pltpu.VMEM((bb, bt), jnp.float32),   # zy
+        ],
+        interpret=interpret,
+    )(logits, labels.astype(jnp.int32), alive.astype(jnp.float32))
+    return ce[:B], g2[:B]
+
+
 def ce_score_pallas(logits, labels, *, block_t=128, block_v=2048,
                     interpret=False):
     """logits: (T, V); labels: (T,) int32 → (ce, gnorm2) f32 (T,)."""

@@ -10,7 +10,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.ce_score.ce_score import ce_score_pallas
+from repro.kernels.ce_score.ce_score import (ce_score_block_pallas,
+                                             ce_score_pallas)
 
 
 def _on_tpu():
@@ -27,3 +28,17 @@ def ce_score(logits, labels, block_t=128, block_v=2048):
     ce, g2 = ce_score_pallas(z, y, block_t=block_t, block_v=block_v,
                              interpret=not _on_tpu())
     return ce.reshape(shape), g2.reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_t", "block_v"))
+def ce_score_block(logits, labels, alive, block_b=8, block_t=128,
+                   block_v=2048):
+    """Survival-gated chunk scoring: logits (B, Tc, V), labels (B, Tc)
+    (< 0 = unsupervised), alive (B,) survival mask → masked per-row
+    (ce_sum, g2_sum) f32 (B,) over this time chunk. Row blocks that are
+    fully dead skip every tile and return 0.0 — the block-sparse stage
+    the survival-pruned presample race resumes chunk by chunk."""
+    return ce_score_block_pallas(logits, labels.astype(jnp.int32),
+                                 alive.astype(jnp.float32),
+                                 block_b=block_b, block_t=block_t,
+                                 block_v=block_v, interpret=not _on_tpu())

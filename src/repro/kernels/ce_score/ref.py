@@ -19,3 +19,24 @@ def ce_score_ref(logits, labels):
     onehot = jax.nn.one_hot(labels, z.shape[-1], dtype=jnp.float32)
     gnorm2 = jnp.sum(jnp.square(p - onehot), axis=-1)
     return ce, gnorm2
+
+
+def ce_score_block_ref(logits, labels, alive, *, block_b=8):
+    """Oracle for ``ops.ce_score_block``: direct (non-streaming) per-token
+    stats via ``ce_score_ref``, masked per-row sums, with the kernel's
+    block-granular survival semantics reproduced exactly — a row whose
+    ``block_b``-sized row block is fully dead contributes 0.0 (the kernel
+    skips the whole tile), while a dead row sharing a block with a
+    survivor is still computed (tiles are all-or-nothing)."""
+    B = labels.shape[0]
+    ce, g2 = ce_score_ref(logits.astype(jnp.float32),
+                          jnp.maximum(labels, 0).astype(jnp.int32))
+    mask = (labels >= 0).astype(jnp.float32)
+    ce_sum = jnp.sum(ce * mask, axis=-1)
+    g2_sum = jnp.sum(g2 * mask, axis=-1)
+    bb = min(block_b, B)
+    nb = -(-B // bb)
+    a = jnp.pad(jnp.asarray(alive, jnp.float32), (0, nb * bb - B))
+    blk_live = jnp.max(a.reshape(nb, bb), axis=1) > 0.0
+    row_live = jnp.repeat(blk_live, bb)[:B]
+    return jnp.where(row_live, ce_sum, 0.0), jnp.where(row_live, g2_sum, 0.0)

@@ -72,6 +72,20 @@ def row_score_pallas(g2, mask, *, block_b=128, interpret=False):
     return s[:B]
 
 
+def pool_exponentials(n, ctx_u32):
+    """The race key's numerator, known BEFORE scoring: Eᵢ = −log(uᵢ) with
+    u from the identical (pool row, ctx) counter hash as
+    ``pool_keys_math`` / ``selection.hash_uniform``. The survival-pruned
+    scoring pass derives per-row key bounds Eᵢ/ŝᵢ from these while the
+    scores are still partial."""
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    h = fmix32(idx * jnp.uint32(0x9E3779B9) ^ jnp.asarray(ctx_u32, jnp.uint32))
+    h = fmix32(h + jnp.uint32(0x6A09E667))
+    u = (h >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0 ** -24) \
+        + jnp.float32(2.0 ** -25)
+    return -jnp.log(u)
+
+
 def pool_keys_math(scores, idx_u32, ctx_u32, inv_total):
     """The per-row key math, shared verbatim by the kernel body and the
     ``ref.py`` oracle: hash (pool row, ctx) → u ∈ (0,1) (identical uint32

@@ -24,9 +24,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.ce_score.ce_score import ce_score_pallas
-from repro.kernels.fused_presample.fused_presample import (pool_keys_pallas,
+from repro.kernels.ce_score.ce_score import (NEG, ce_score_block_pallas,
+                                             ce_score_pallas)
+from repro.kernels.fused_presample.fused_presample import (pool_exponentials,
+                                                           pool_keys_pallas,
                                                            row_score_pallas)
+
+# per-token ceiling on the paper's ĝ² = ‖softmax(z) − onehot(y)‖₂² < 2
+# (‖p‖₁ = 1 ⇒ ‖p − e_y‖² = ‖p‖² − 2p_y + 1 < 2): the max-possible
+# remaining-chunk contribution the survival bound charges per
+# still-unscored supervised token
+G2MAX = 2.0
 
 
 def _on_tpu():
@@ -73,6 +81,122 @@ def _select_pool(scores, ctx, *, k, block_t=1024):
     pi = -jnp.expm1(-probs * thr)
     w = 1.0 / (B * jnp.maximum(pi, jnp.float32(1e-30)))
     return idx, probs, w, thr
+
+
+def pruned_pool_score(logits, labels, ctx, *, k, block_b=None, block_t=None,
+                      block_v=2048, chunk_t=None, margin=1e-5):
+    """Survival-pruned pool scoring: chunk the CE pass over time-blocks
+    and stop paying for rows that already lost the race.
+
+    Each pool row's race key is rᵢ = Eᵢ/sᵢ where the exponential variate
+    Eᵢ = −log(uᵢ) is a counter hash of (ctx, row) known BEFORE scoring —
+    only the score sᵢ is unknown. Between time chunks the running partial
+    ĝ² gives a monotone score band: s̲ᵢ = sqrt(partial) ≤ sᵢ ≤ ŝᵢ =
+    sqrt(partial + 2·remaining supervised tokens) (ĝ² < 2 per token), so
+    rᵢ ∈ [Eᵢ/ŝᵢ, Eᵢ/s̲ᵢ]. θ, the (k+1)-th smallest key UPPER bound,
+    caps the true (k+1)-th key; any row whose key LOWER bound exceeds
+    θ·(1+margin) can never reach the top-(k+1) and is killed — its row
+    block drops out of every later ``ce_score_block_pallas`` tile.
+    Conservative by construction: the ≥ k+1 rows with the smallest upper
+    bounds stay alive every chunk (θ is their own (k+1)-th bound), so
+    survivors accumulate every chunk in the unpruned chunk order and
+    their final scores are BITWISE the unpruned chunked pass's; killed
+    rows surface their last partial (an understatement — they lost with
+    room to spare, so the race ranks them identically).
+
+    logits: (B, T, V); labels: (B, T) (< 0 = unsupervised); ctx: plan
+    context (int or traced uint32 scalar); k: rows the race will select.
+    Block sizes adapt to the pool when unset: ``block_t ≈ T/8`` (≈ 8
+    prune checkpoints), ``block_b = 8`` for pools ≥ 128 rows else 1 (row
+    granularity — tiny pools rarely kill 8 neighbours together).
+
+    Returns ``(scores, alive, loss_ps, stats)``: (B,) f32 scores (exact
+    for survivors), the (B,) survival mask, per-row mean CE over
+    supervised tokens, and an f32 (4,) receipt [rows_killed,
+    tiles_skipped, tiles_total, flops_saved].
+    """
+    B, T, _ = logits.shape
+    if block_b is None:
+        block_b = 8 if B >= 128 else 1
+    if block_t is None:
+        eighth = -(-T // 8)                       # ceil(T/8)
+        block_t = min(128, -(-eighth // 8) * 8)   # …rounded up to a lane of 8
+    if chunk_t is None:
+        chunk_t = block_t
+    if chunk_t % block_t:
+        raise ValueError(f"chunk_t={chunk_t} must be a multiple of "
+                         f"block_t={block_t}")
+    ctx = ctx.astype(jnp.uint32) if isinstance(ctx, jax.Array) \
+        else _ctx_u32(ctx)
+    return _pruned_pool_score(logits, labels, ctx, k=k, block_b=block_b,
+                              block_t=block_t, block_v=block_v,
+                              chunk_t=chunk_t, margin=margin)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_b", "block_t",
+                                             "block_v", "chunk_t", "margin"))
+def _pruned_pool_score(logits, labels, ctx, *, k, block_b, block_t, block_v,
+                       chunk_t, margin):
+    B, T, V = logits.shape
+    labels = labels.astype(jnp.int32)
+    nc = -(-T // chunk_t)
+    Tp = nc * chunk_t
+    if Tp != T:
+        logits = jnp.pad(logits, ((0, 0), (0, Tp - T), (0, 0)),
+                         constant_values=NEG)
+        labels = jnp.pad(labels, ((0, 0), (0, Tp - T)), constant_values=-1)
+    mask = labels >= 0
+    ntok = jnp.maximum(jnp.sum(mask, axis=-1).astype(jnp.float32), 1.0)
+    # supervised tokens strictly after chunk c — the bound's "remaining"
+    cnt = mask.reshape(B, nc, chunk_t).sum(axis=2).astype(jnp.float32)
+    rem_after = jnp.concatenate(
+        [jnp.cumsum(cnt[:, ::-1], axis=1)[:, ::-1][:, 1:],
+         jnp.zeros((B, 1), jnp.float32)], axis=1)
+    E = pool_exponentials(B, ctx)
+
+    # k+1 ≥ B: ratio-1 degenerate pool — everything must survive the
+    # race, nothing is prunable. Single chunk: no checkpoint to prune at.
+    prune = (k + 1 < B) and (nc > 1)
+    bb = min(block_b, B)
+    nb = -(-B // bb)
+    nt_chunk = chunk_t // block_t
+
+    alive = jnp.ones((B,), jnp.float32)
+    cerun = jnp.zeros((B,), jnp.float32)
+    g2run = jnp.zeros((B,), jnp.float32)
+    skipped = jnp.float32(0.0)
+    for c in range(nc):
+        blk = jnp.max(jnp.pad(alive, (0, nb * bb - B)).reshape(nb, bb),
+                      axis=1) > 0.0
+        skipped += (nb - jnp.sum(blk.astype(jnp.float32))) * nt_chunk
+        lo = c * chunk_t
+        ce_c, g2_c = ce_score_block_pallas(
+            logits[:, lo:lo + chunk_t, :], labels[:, lo:lo + chunk_t],
+            alive, block_b=block_b, block_t=block_t, block_v=block_v,
+            interpret=not _on_tpu())
+        cerun = cerun + ce_c
+        g2run = g2run + g2_c
+        if prune and c < nc - 1:
+            s_lo = jnp.sqrt(jnp.maximum(g2run, 1e-20))
+            s_hi = jnp.sqrt(jnp.maximum(
+                g2run + jnp.float32(G2MAX) * rem_after[:, c], 1e-20))
+            r_hi = E / s_lo                       # ≥ the true key
+            r_lo = E / s_hi                       # ≤ the true key
+            neg, _ = jax.lax.top_k(-r_hi, k + 1)
+            theta = -neg[k]                       # ≥ true (k+1)-th key
+            alive = alive * (r_lo <= theta * (1.0 + margin)) \
+                .astype(jnp.float32)
+
+    scores = jnp.sqrt(jnp.maximum(g2run, 1e-20))
+    Vp = -(-V // block_v) * block_v
+    # flops_saved: ~12 flops/element over each skipped (bb, bt, vocab) slab
+    stats = jnp.stack([
+        jnp.float32(B) - jnp.sum(alive),
+        skipped,
+        jnp.float32(nc * nb * nt_chunk),
+        skipped * jnp.float32(bb * block_t) * jnp.float32(Vp * 12.0),
+    ])
+    return scores, alive, cerun / ntok, stats
 
 
 def fused_presample(logits, labels, rows, ctx, *, k, block_b=128,

@@ -17,8 +17,9 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.ce_score.ref import ce_score_ref
+from repro.kernels.ce_score.ref import ce_score_block_ref, ce_score_ref
 from repro.kernels.fused_presample.fused_presample import pool_keys_math
+from repro.kernels.topk_keys.topk_keys import fmix32
 
 
 def select_pool_ref(scores, ctx, *, k):
@@ -42,6 +43,84 @@ def select_pool_ref(scores, ctx, *, k):
     pi = -jnp.expm1(-probs * thr)
     w = 1.0 / (B * jnp.maximum(pi, jnp.float32(1e-30)))
     return idx, probs, w, thr
+
+
+def pool_exponentials_ref(n, ctx):
+    """float64 twin of ``pool_exponentials``: the uint32 hash is
+    bit-identical by definition (and to ``selection.hash_uniform``); the
+    −log tail runs in f64 — the oracle's exponential variates."""
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    h = fmix32(idx * jnp.uint32(0x9E3779B9)
+               ^ jnp.uint32(np.uint32(int(ctx) & 0xFFFFFFFF)))
+    h = fmix32(h + jnp.uint32(0x6A09E667))
+    u = np.asarray(h >> jnp.uint32(8), np.float64) * 2.0 ** -24 + 2.0 ** -25
+    return -np.log(u)
+
+
+def pruned_pool_score_ref(logits, labels, ctx, *, k, block_b=None,
+                          block_t=None, chunk_t=None, margin=1e-5):
+    """Oracle for ``ops.pruned_pool_score``: the identical conservative
+    recurrence — per-chunk masked sums from the direct ``ce_score_ref``
+    formulation (via ``ce_score_block_ref``, which reproduces the
+    kernel's block-granular freeze: rows in all-dead row blocks stop
+    accumulating), f64 bound math, same block-size defaults and return
+    contract. Scores/alive agree with the op to the kernel-vs-ref
+    tolerance; the MC property tests check both against the true race."""
+    B, T, _ = logits.shape
+    if block_b is None:
+        block_b = 8 if B >= 128 else 1
+    if block_t is None:
+        eighth = -(-T // 8)
+        block_t = min(128, -(-eighth // 8) * 8)
+    if chunk_t is None:
+        chunk_t = block_t
+    labels = np.asarray(labels)
+    logits = np.asarray(logits, np.float32)
+    nc = -(-T // chunk_t)
+    Tp = nc * chunk_t
+    if Tp != T:
+        logits = np.pad(logits, ((0, 0), (0, Tp - T), (0, 0)))
+        labels = np.pad(labels, ((0, 0), (0, Tp - T)), constant_values=-1)
+    mask = labels >= 0
+    ntok = np.maximum(mask.sum(-1).astype(np.float64), 1.0)
+    cnt = mask.reshape(B, nc, chunk_t).sum(axis=2).astype(np.float64)
+    rem_after = np.concatenate(
+        [np.cumsum(cnt[:, ::-1], axis=1)[:, ::-1][:, 1:],
+         np.zeros((B, 1), np.float64)], axis=1)
+    E = pool_exponentials_ref(B, ctx)
+
+    prune = (k + 1 < B) and (nc > 1)
+    nb = -(-B // min(block_b, B))
+    nt_chunk = chunk_t // block_t
+    alive = np.ones((B,), np.float64)
+    cerun = np.zeros((B,), np.float64)
+    g2run = np.zeros((B,), np.float64)
+    skipped = 0.0
+    for c in range(nc):
+        bb = min(block_b, B)
+        blk = np.max(np.pad(alive, (0, nb * bb - B)).reshape(nb, bb),
+                     axis=1) > 0.0
+        skipped += float(nb - blk.sum()) * nt_chunk
+        lo = c * chunk_t
+        ce_c, g2_c = ce_score_block_ref(
+            jnp.asarray(logits[:, lo:lo + chunk_t, :]),
+            jnp.asarray(labels[:, lo:lo + chunk_t]),
+            jnp.asarray(alive, jnp.float32), block_b=block_b)
+        cerun += np.asarray(ce_c, np.float64)
+        g2run += np.asarray(g2_c, np.float64)
+        if prune and c < nc - 1:
+            s_lo = np.sqrt(np.maximum(g2run, 1e-20))
+            s_hi = np.sqrt(np.maximum(g2run + 2.0 * rem_after[:, c], 1e-20))
+            r_hi = E / s_lo
+            r_lo = E / s_hi
+            theta = np.partition(r_hi, k)[k]
+            alive = alive * (r_lo <= theta * (1.0 + margin))
+
+    scores = np.sqrt(np.maximum(g2run, 1e-20)).astype(np.float32)
+    stats = np.array([B - alive.sum(), skipped,
+                      float(nc * nb * nt_chunk), 0.0], np.float32)
+    return (scores, alive.astype(np.float32),
+            (cerun / ntok).astype(np.float32), stats)
 
 
 def fused_presample_ref(logits, labels, rows, ctx, *, k):

@@ -198,6 +198,38 @@ class LM:
         score = jnp.sqrt(jnp.maximum((g2 * mask).sum(-1), 1e-20))
         return loss_ps, score
 
+    def pool_stats_pruned(self, params, batch, ctx, *, k, score_dtype=None,
+                          impl="auto"):
+        """Survival-pruned twin of ``sample_stats`` for the fused
+        presample pool: the CE pass runs chunked over time-blocks
+        (``repro.kernels.fused_presample.ops.pruned_pool_score``) and
+        rows whose race key can no longer reach the top-(k+1) stop being
+        scored mid-pool. ``ctx`` is the plan's selection hash context
+        (traced uint32 ok); same ``score_dtype`` cast as ``sample_stats``.
+
+        Returns (per_sample_loss, scores, alive, prune_stats): survivor
+        scores are BITWISE the chunked unpruned pass's; killed rows carry
+        their last partial (an understatement — the race ranks them
+        identically because they lost with room to spare)."""
+        from repro.kernels.fused_presample.ops import pruned_pool_score
+        cfg = self.cfg
+        if score_dtype is not None:
+            dt = jnp.dtype(score_dtype)
+            params = jax.tree_util.tree_map(
+                lambda p: p.astype(dt)
+                if jnp.issubdtype(p.dtype, jnp.floating) else p, params)
+        logits, _ = self.logits(jax.lax.stop_gradient(params), batch,
+                                impl=impl)
+        labels = batch["labels"]
+        if cfg.input_mode == "tokens+image":
+            pad = logits.shape[1] - labels.shape[1]
+            if pad:
+                labels = jnp.pad(labels, ((0, 0), (pad, 0)),
+                                 constant_values=-1)
+        scores, alive, loss_ps, stats = pruned_pool_score(
+            logits, labels, ctx, k=k)
+        return loss_ps, scores, alive, stats
+
     def score_engine(self, run_cfg, mesh=None):
         """The decoupled scoring path: a ``repro.scoring.ScoreEngine`` whose
         jitted forward-only score fn wraps this model's ``sample_stats``."""

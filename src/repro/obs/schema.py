@@ -67,6 +67,19 @@ SCHEMA = (
     ("health.tau", "gauge", "live tau of the selection distribution"),
     ("health.tau_margin", "gauge", "tau - tau_th"),
     ("health.variance_gain", "gauge", "sec. 3.3 variance gain 1 - 1/tau^2"),
+    ("kernels.prune.blocks_skipped", "counter",
+     "whole (block_b, block_t) scoring tiles skipped because every row "
+     "in the block had already lost the race (imp.score_prune)"),
+    ("kernels.prune.flops_saved", "counter",
+     "estimated flops the skipped tiles would have cost (~12 per "
+     "logits element over each skipped row-block x time-block x vocab "
+     "slab)"),
+    ("kernels.prune.rows_killed", "counter",
+     "pool rows whose race-key lower bound E_i/s_hat exceeded the "
+     "(k+1)-th key upper bound mid-scoring — conservatively pruned"),
+    ("kernels.prune.tiles_total", "counter",
+     "total (block_b, block_t) scoring tiles the pruned pass planned "
+     "(blocks_skipped / tiles_total = the measured skip fraction)"),
     ("loop.dispatch", "span", "step dispatch (device work is async)"),
     ("loop.drain_feedback", "span",
      "score feedback D2H + ScoreStore merge, off the dispatch path"),

@@ -288,6 +288,12 @@ class HostPresampleSampler(Sampler):
         self.tau_th = self.icfg.resolved_tau_th(self.b)
         self.tau_ema = np.zeros((), np.float64)
         self.overlap = bool(self.icfg.overlap_scoring)
+        # survival-pruned scoring: loser rows stop being scored mid-pool,
+        # so ALL presample paths switch to the survivor-closed plan math
+        # (raw race keys + HT-estimated τ̂ — selection.
+        # presample_race_select_raw); "off" is the PR-7 byte-exact path
+        self.prune = (getattr(self.icfg, "score_prune", "off")
+                      == "conservative")
 
     @property
     def active(self) -> bool:
@@ -306,8 +312,15 @@ class HostPresampleSampler(Sampler):
         handle = {"pstate": pstate, "step": step, "cplan": cplan,
                   "cands": cands, "nxt": nxt, "fut": None}
         if self.overlap and params is not None and self.engine is not None:
-            # async dispatch: runs behind whatever update is in flight
-            handle["fut"] = self.engine.score(params, cands)
+            # async dispatch: runs behind whatever update is in flight.
+            # Conservative mode scores through the chunked pass (nothing
+            # pruned on the host path) so this host's score bytes equal
+            # the pruned device pass's survivor bytes — plan equality
+            # across paths is byte-level, so the accumulation order must
+            # be too.
+            handle["fut"] = (self.engine.score_chunked(params, cands)
+                             if self.prune
+                             else self.engine.score(params, cands))
         return handle
 
     def finish(self, handle, params=None):
@@ -321,7 +334,9 @@ class HostPresampleSampler(Sampler):
                 raise RuntimeError(
                     "presample_host needs params to score: pass them to "
                     "begin() (overlapped) or finish() (synchronous)")
-            fut = self.engine.score(params, handle["cands"])
+            fut = (self.engine.score_chunked(params, handle["cands"])
+                   if self.prune
+                   else self.engine.score(params, handle["cands"]))
         cplan = handle["cplan"]
         # every host scored only its candidate slice; the gathered vector
         # (identity single-host) is what makes selection globally agreed
@@ -336,12 +351,37 @@ class HostPresampleSampler(Sampler):
         path makes (the counter is the fused benchmark's evidence)."""
         local = np.asarray(jax.device_get(fut[1]), np.float32)
         obs.counter("sampler.d2h_bytes").inc(local.nbytes)
+        if len(fut) > 3:      # pruned pass: (loss, scores, alive, stats)
+            self._record_prune_stats(fut[3])
         return local
+
+    def _record_prune_stats(self, stats) -> None:
+        """The pruned pass's flop receipt: [rows_killed, tiles_skipped,
+        tiles_total, flops_saved] comes back as one tiny device vector
+        (counted host-side — the jitted pass stays obs-free)."""
+        st = np.asarray(jax.device_get(stats), np.float64)
+        obs.counter("kernels.prune.rows_killed").inc(int(st[0]))
+        obs.counter("kernels.prune.blocks_skipped").inc(int(st[1]))
+        obs.counter("kernels.prune.tiles_total").inc(int(st[2]))
+        obs.counter("kernels.prune.flops_saved").inc(int(st[3]))
+
+    def _prune_spec(self, step):
+        """The device pass's race parameters when survival pruning is on:
+        the step's selection hash context (the exponential variates Eᵢ
+        derive from it on device, bit-identically to the host race) and
+        the race k. None on the unpruned path."""
+        if not self.prune:
+            return None
+        return {"ctx": selection.hash_context(self.seed, self.SALT,
+                                              int(step)),
+                "k": self.b}
 
     def _select_plan(self, cplan, scores, step) -> BatchPlan:
         """Gathered (B,) fresh scores -> the step's selection plan. The
         ONE selection both the host and fused paths run, on identical
         score bytes — which is what makes their plans bitwise equal."""
+        if self.prune:
+            return self._select_plan_pruned(cplan, scores, step)
         # out-of-band refresh: every candidate's fresh score enters the
         # memory, trained on or not
         self.store.update(cplan.gids, scores)
@@ -364,6 +404,44 @@ class HostPresampleSampler(Sampler):
         return BatchPlan(step=cplan.step, epoch=cplan.epoch,
                          gids=cplan.gids[idx], probs=g[idx], src_rows=idx,
                          weights=w, is_flag=max(float(self.tau_ema), 1.0))
+
+    def _select_plan_pruned(self, cplan, scores, step) -> BatchPlan:
+        """The survivor-closed plan math (``imp.score_prune=
+        "conservative"``). Under pruning the losers' score bytes are
+        understated partials, so nothing full-vector is trustworthy —
+        every plan quantity must be a function of the race's top-(k+1)
+        keys alone, which conservative pruning preserves bit-for-bit:
+
+        * the RAW-key race (``selection.presample_race_select_raw``)
+          selects the identical set (scale only shifts all keys), and its
+          HT totals give τ̂ and probs_hat in place of the exact Σs forms;
+        * τ̂ feeds the same EMA/seeding rule and gate as the exact τ;
+        * the store refresh takes only the b winners' (exact) scores —
+          loser partials never enter the memory;
+        * the race runs EVERY step (warmup included) so the τ̂ controller
+          sees the same signal cadence as the exact controller; the
+          warmup plan itself is unchanged (first b, unit weights).
+
+        Every presample path runs this same function on its score bytes
+        — pruned fused, unpruned fused, and host_score plans stay
+        bitwise identical within the mode."""
+        ctx = selection.hash_context(self.seed, self.SALT, int(step))
+        idx, probs_hat, w, _thr, tau_hat = \
+            selection.presample_race_select_raw(scores, self.b, ctx=ctx)
+        self.store.update(cplan.gids[idx], scores[idx])
+        self.tau_ema = np.asarray(
+            tau_hat if self.tau_ema == 0.0
+            else self.icfg.ema * float(self.tau_ema)
+            + (1.0 - self.icfg.ema) * tau_hat, np.float64)
+        if not self.active:
+            rows = np.arange(self.b, dtype=np.int64)
+            return BatchPlan(step=cplan.step, epoch=cplan.epoch,
+                             gids=cplan.gids[:self.b], src_rows=rows,
+                             weights=np.ones((self.b,), np.float32))
+        return BatchPlan(step=cplan.step, epoch=cplan.epoch,
+                         gids=cplan.gids[idx], probs=probs_hat,
+                         src_rows=idx, weights=w,
+                         is_flag=max(float(self.tau_ema), 1.0))
 
     def _materialize(self, handle, cplan, plan):
         """Selection plan -> device-feedable batch; the host path reuses
@@ -446,7 +524,8 @@ class FusedPresampleSampler(HostPresampleSampler):
         handle = {"step": cplan.step, "cplan": cplan, "cands": pool,
                   "nxt": cursor, "fut": None, "dev": None}
         if self.overlap and params is not None and self.engine is not None:
-            sel = self.engine.score_select(params, pool)
+            sel = self.engine.score_select(
+                params, pool, prune=self._prune_spec(cplan.step))
             handle["dev"], handle["fut"] = sel["pool"], sel["fut"]
         return handle
 
@@ -462,7 +541,9 @@ class FusedPresampleSampler(HostPresampleSampler):
                 raise RuntimeError(
                     "presample_fused needs params to score: pass them to "
                     "begin() (overlapped) or finish() (synchronous)")
-            sel = self.engine.score_select(params, handle["cands"])
+            sel = self.engine.score_select(
+                params, handle["cands"],
+                prune=self._prune_spec(handle["step"]))
             handle["dev"], handle["fut"] = sel["pool"], sel["fut"]
         return super().finish(handle, params)
 
@@ -694,6 +775,11 @@ def make_sampler(run_cfg, source, assembler=None) -> Sampler:
         raise ValueError(
             f"unknown imp.presample_impl {pimpl!r}; "
             f"have ('auto', 'step', 'host', 'fused')")
+    if getattr(run_cfg.imp, "score_prune", "off") not in ("off",
+                                                          "conservative"):
+        raise ValueError(
+            f"unknown imp.score_prune {run_cfg.imp.score_prune!r}; "
+            f"have ('off', 'conservative')")
     scheme = run_cfg.sampler.scheme
     if scheme == "presample":
         # presample execution routing: "auto" keeps the legacy behaviour

@@ -284,6 +284,54 @@ def presample_race_select(scores, k: int, *, ctx: int):
     return idx, g, ht_weights(g[idx], thr, B), thr
 
 
+def presample_race_select_raw(scores, k: int, *, ctx: int):
+    """Survivor-closed race selection for the survival-pruned scoring
+    path (``imp.score_prune="conservative"``).
+
+    Same race as ``presample_race_select`` but on RAW keys rᵢ = Eᵢ/sᵢ —
+    no Σs normalisation, because under conservative pruning the losers'
+    scores are understated partials and any full-vector reduction (Σs,
+    Σg², the exact τ) would read pruned bytes. Scale only multiplies
+    every key by the same 1/Σs, so the selected SET (and its order) is
+    exactly the normalised race's; every plan quantity is then a
+    function of the k+1 smallest keys alone — which conservative pruning
+    preserves bit-for-bit:
+
+    * HT inclusion over raw scores: πᵢ = 1 − exp(−sᵢ·τ*), wᵢ = 1/(B·πᵢ)
+      (the unnormalised bottom-k sketch — scale cancels inside w·x
+      estimators);
+    * the Horvitz–Thompson totals Ŝ₁ = Σ_sel sᵢ/πᵢ ≈ Σs and
+      Ŝ₂ = Σ_sel sᵢ²/πᵢ ≈ Σs² give the plan's
+      τ̂ = sqrt(B·Ŝ₂)/Ŝ₁ — the estimator form of the exact
+      τ = sqrt(B·Σg²) (→ 1 uniform, → √B one-hot) — and
+      probs_hat = s_sel/Ŝ₁ standing in for g = s/Σs.
+
+    Returns (idx, probs_hat, weights, threshold, tau_hat); probs_hat is
+    (k,) — selected rows only, nothing full-vector survives pruning. The
+    k ≥ B ratio-1 pool degenerates to the EXACT unpruned quantities
+    (nothing is prunable there, every byte is true)."""
+    s = np.asarray(scores, np.float64).reshape(-1)
+    B = s.size
+    k = int(k)
+    if k >= B:
+        g = s / max(s.sum(), 1e-20)
+        tau = float(np.sqrt(B * np.square(g).sum()))
+        return (np.arange(B, dtype=np.int64), g,
+                np.full((B,), 1.0 / max(B, 1), np.float32), float("inf"),
+                tau)
+    u = hash_uniform(np.arange(B, dtype=np.int64), ctx)
+    r = -np.log(u) / np.maximum(s, 1e-20)
+    order = np.lexsort((np.arange(B), r))
+    idx = order[:k].astype(np.int64)
+    thr = float(r[order[k]])
+    pi = np.maximum(-np.expm1(-np.maximum(s[idx], 1e-20) * thr), 1e-300)
+    w = (1.0 / (B * pi)).astype(np.float32)
+    s1 = max(float((s[idx] / pi).sum()), 1e-20)
+    s2 = float((np.square(s[idx]) / pi).sum())
+    tau_hat = float(np.sqrt(B * s2) / s1)
+    return idx, s[idx] / s1, w, thr, tau_hat
+
+
 def resolve_selection_impl(impl: str, *, n: int, b: int,
                            n_hosts: int) -> str:
     """Resolve ``imp.selection_impl="auto"`` from the measured crossover.

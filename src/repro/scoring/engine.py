@@ -98,6 +98,24 @@ class ScoreEngine:
             batch = self._to_device(batch)
             return self._fn(batch)(params, batch)
 
+    def score_chunked(self, params, batch):
+        """Chunk-accumulated scoring, nothing pruned: the conservative
+        mode's host-path twin. Survivor scores of the PRUNED pass are
+        bitwise the unpruned chunked pass's (same per-row accumulation
+        order — row slicing doesn't change it), so a host that scores its
+        candidate slice through this entry emits plan bytes identical to
+        a host running the pruned device pass. Same async contract as
+        ``score``; the fut is the pruned pass's 4-tuple (alive all ones,
+        zero tiles skipped)."""
+        obs.counter("engine.dispatches").inc()
+        with obs.span("engine.dispatch"):
+            batch = self._to_device(batch)
+            rows = int(batch["labels"].shape[0])
+            # k = rows hits the degenerate no-prune branch: full chunked
+            # scoring; the (unused) race context is pinned to 0
+            return self._fn_pruned(batch, rows)(params, batch,
+                                                jnp.uint32(0))
+
     def _to_device(self, batch):
         """jnp.asarray every value, charging anything that actually crosses
         the host boundary to ``engine.h2d_bytes`` (already-device arrays are
@@ -108,18 +126,47 @@ class ScoreEngine:
             obs.counter("engine.h2d_bytes").inc(h2d)
         return {k: jnp.asarray(v) for k, v in batch.items()}
 
+    def _fn_pruned(self, batch, k: int):
+        """Jit cache for the survival-pruned pool pass, keyed on (batch
+        structure, race k). The hash context rides as a TRACED uint32 —
+        it changes every step and must not retrigger compilation."""
+        key = (self._key(batch), int(k))
+        fn = self._jitted.get(key)
+        if fn is None:
+            obs.counter("engine.jit_compiles").inc()
+
+            def pruned(params, batch, ctx):
+                loss_ps, scores, alive, stats = self.lm.pool_stats_pruned(
+                    params, batch, ctx, k=k, score_dtype=self.score_dtype)
+                return (loss_ps.astype(jnp.float32),
+                        jax.lax.stop_gradient(scores.astype(jnp.float32)),
+                        alive, stats)
+            fn = jax.jit(pruned)
+            self._jitted[key] = fn
+        return fn
+
     # -- fused presample entries ---------------------------------------------
-    def score_select(self, params, batch):
+    def score_select(self, params, batch, prune=None):
         """Device-resident scoring for the fused presample path: push the
         candidate pool up ONCE, dispatch the score pass on it, and keep the
         device refs so the winners can later be gathered on-chip
         (``take_rows``) instead of re-uploaded from host. Returns
         ``{"pool": device batch, "fut": (loss_ps, scores)}`` — same async
-        non-blocking contract as ``score``."""
+        non-blocking contract as ``score``.
+
+        ``prune={"ctx": ..., "k": ...}`` routes through the survival-pruned
+        chunked pass (``LM.pool_stats_pruned``): rows that already lost the
+        step's race stop being scored, and ``fut`` grows to (loss_ps,
+        scores, alive, prune_stats)."""
         pool = self._to_device(batch)
         obs.counter("engine.dispatches").inc()
         with obs.span("engine.dispatch"):
-            fut = self._fn(pool)(params, pool)
+            if prune is not None:
+                ctx = jnp.asarray(np.uint32(int(prune["ctx"]) & 0xFFFFFFFF))
+                fut = self._fn_pruned(pool, int(prune["k"]))(params, pool,
+                                                            ctx)
+            else:
+                fut = self._fn(pool)(params, pool)
         return {"pool": pool, "fut": fut}
 
     def take_rows(self, handle, idx, weights=None):

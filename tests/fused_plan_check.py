@@ -17,6 +17,13 @@ Per step every one of the 17 samplers must emit the bitwise-identical
 concatenate to the single-host fused batch. Exercises both τ phases
 (warmup first-b and the race-WOR IS branch).
 
+The same trio then runs with ``imp.score_prune="conservative"``: the
+single-host fused engine MAULS every raced-out loser's score (the
+survival-pruned pass surfaces understated partials for killed rows)
+while the host fleets score everything exactly through the chunked
+pass — the survivor-closed plan math must still emit bitwise-identical
+plans across all 17 samplers, in both τ phases.
+
 Run: ``PYTHONPATH=src python tests/fused_plan_check.py``
 """
 import dataclasses
@@ -29,6 +36,7 @@ from repro.configs.base import (ISConfig, OptimConfig, RunConfig,
                                 SamplerConfig, ShapeConfig)
 from repro.data.pipeline import PipelineState, SyntheticLM
 from repro.distributed.collectives import interleave_shards, pad_shard
+from repro.kernels.fused_presample.ref import pool_exponentials_ref
 from repro.sampler import make_sampler
 
 N_EX = 100       # NOT divisible by 8: uneven shards on purpose
@@ -39,9 +47,15 @@ STEPS = 12
 
 class FakeEngine:
     """Deterministic per-row scores from the token bytes — what a
-    replicated score pass produces, without a real model. Speaks both
-    engine surfaces: ``score`` (host path / multi-host fused fallback)
-    and ``score_select``/``take_rows`` (single-host fused finalize)."""
+    replicated score pass produces, without a real model. Speaks every
+    engine surface: ``score`` (host path / multi-host fused fallback),
+    ``score_chunked`` (the conservative host twin — exact bytes, 4-tuple
+    fut), and ``score_select``/``take_rows`` (single-host fused
+    finalize; under ``prune=`` it maims every raced-out loser's score,
+    exactly what the survival-pruned device pass does)."""
+
+    def __init__(self):
+        self.rows_mauled = 0
 
     @staticmethod
     def _row_scores(tokens):
@@ -52,9 +66,26 @@ class FakeEngine:
         s = self._row_scores(batch["tokens"])
         return np.zeros_like(s), s
 
-    def score_select(self, params, pool):
+    def score_chunked(self, params, batch):
+        s = self._row_scores(batch["tokens"])
+        return (np.zeros_like(s), s, np.ones_like(s),
+                np.zeros((4,), np.float32))
+
+    def score_select(self, params, pool, prune=None):
         s = self._row_scores(pool["tokens"])
-        return {"pool": pool, "fut": (None, s)}
+        if prune is None:
+            return {"pool": pool, "fut": (None, s)}
+        # the pruned pass's observable contract, worst case: only the
+        # true top-(k+1) keep exact bytes, every loser is understated
+        E = pool_exponentials_ref(s.size, prune["ctx"])
+        r = E / np.maximum(s.astype(np.float64), 1e-20)
+        theta = np.partition(r, prune["k"])[prune["k"]]
+        alive = (r <= theta).astype(np.float32)
+        mauled = np.where(alive > 0, s, s * 0.25).astype(np.float32)
+        self.rows_mauled += int(s.size - alive.sum())
+        stats = np.array([s.size - alive.sum(), 1.0, 8.0, 0.0], np.float32)
+        return {"pool": pool,
+                "fut": (np.zeros_like(s), mauled, alive, stats)}
 
     def take_rows(self, handle, idx, weights=None):
         idx = np.asarray(idx, np.int64)
@@ -65,7 +96,7 @@ class FakeEngine:
         return batch
 
 
-def _run_cfg(pimpl, host_score):
+def _run_cfg(pimpl, host_score, prune="off", tau_th=1.005, stau=1.001):
     return RunConfig(
         model=get_config("lm-tiny"),
         shape=ShapeConfig("t", seq_len=16, global_batch=B_GLOBAL,
@@ -73,9 +104,9 @@ def _run_cfg(pimpl, host_score):
         optim=OptimConfig(name="adamw", lr=1e-3),
         # τ_ema of this stream hovers ~1.005: the gate stays shut for the
         # first few steps (warmup branch) then opens (race-WOR IS branch)
-        imp=ISConfig(enabled=True, presample_ratio=2, tau_th=1.005,
-                     presample_impl=pimpl),
-        sampler=SamplerConfig(scheme="presample", tau_th=1.001,
+        imp=ISConfig(enabled=True, presample_ratio=2, tau_th=tau_th,
+                     presample_impl=pimpl, score_prune=prune),
+        sampler=SamplerConfig(scheme="presample", tau_th=stau,
                               host_score=host_score),
         remat=False)
 
@@ -118,20 +149,24 @@ def _fleet_step(samplers, board, sts, step, params):
     return outs
 
 
-def main():
-    # two independent boards: each fleet merges only its own shards
+def _drive_trio(cfg_host, cfg_fused, cfg_single):
+    """Run the H-host host fleet, the H-host fused fleet, and the
+    single-host fused sampler over the same stream; assert bitwise plan
+    equality per step and shard-concat batch equality. Returns
+    (saw_warmup, saw_is, digest, single_engine)."""
     board_h, board_f = {}, {}
-    host_fleet, refresh_h = _fleet(_run_cfg("host", True), board_h)
-    fused_fleet, refresh_f = _fleet(_run_cfg("fused", True), board_f)
+    host_fleet, refresh_h = _fleet(cfg_host, board_h)
+    fused_fleet, refresh_f = _fleet(cfg_fused, board_f)
     assert host_fleet[0].scheme == "presample_host", host_fleet[0].scheme
     assert fused_fleet[0].scheme == "presample_fused", fused_fleet[0].scheme
     assert not fused_fleet[0].plan_is_pure      # multi-host: parent fallback
 
-    single = make_sampler(_run_cfg("fused", False), SyntheticLM(
+    single = make_sampler(cfg_single, SyntheticLM(
         get_config("lm-tiny").vocab_size, 16, n_examples=N_EX,
         seed=9, host_id=0, n_hosts=1))
     assert single.scheme == "presample_fused" and single.plan_is_pure
-    single.bind_engine(FakeEngine())
+    eng_s = FakeEngine()
+    single.bind_engine(eng_s)
 
     sts_h = [PipelineState() for _ in range(H)]
     sts_f = [PipelineState() for _ in range(H)]
@@ -167,11 +202,43 @@ def main():
         saw_is |= splan.is_flag > 0
         saw_warmup |= not splan.is_flag
         digest.append(sigs.pop()[:8])
+    return saw_warmup, saw_is, digest, eng_s
+
+
+def main():
+    saw_warmup, saw_is, digest, _ = _drive_trio(
+        _run_cfg("host", True), _run_cfg("fused", True),
+        _run_cfg("fused", False))
     assert saw_is, "the race-WOR IS branch never ran"
     assert saw_warmup, "the warmup branch never ran"
-
     print(f"fused plan check OK: {STEPS} steps x ({H}+{H}+1) samplers, "
           f"plans identical; sig digest {'.'.join(digest[:4])}…")
+
+    # conservative trio, gate OPEN (τ̂ is the biased-low HT estimate —
+    # a low threshold forces the race-WOR branch): exact host bytes vs
+    # the single fused engine's mauled losers, plans still bitwise
+    def cons(pimpl, host_score, tau):
+        return _run_cfg(pimpl, host_score, prune="conservative",
+                        tau_th=tau, stau=tau)
+    _, saw_is, digest_c, eng = _drive_trio(
+        cons("host", True, 0.5), cons("fused", True, 0.5),
+        cons("fused", False, 0.5))
+    assert saw_is, "conservative trio: the IS branch never ran"
+    assert eng.rows_mauled > 0, (
+        "conservative trio: the pruned engine never mauled a loser — "
+        "the check proved nothing")
+    print(f"conservative plan check OK (IS): {eng.rows_mauled} loser "
+          f"scores mauled, plans identical; digest "
+          f"{'.'.join(digest_c[:4])}…")
+
+    # conservative trio, gate SHUT: the warmup first-b branch must be
+    # prune-safe too (the race still runs for τ̂, rows still die)
+    saw_warmup, _, _, eng_w = _drive_trio(
+        cons("host", True, 50.0), cons("fused", True, 50.0),
+        cons("fused", False, 50.0))
+    assert saw_warmup, "conservative trio: the warmup branch never ran"
+    assert eng_w.rows_mauled > 0
+    print("conservative plan check OK (warmup): plans identical")
     return 0
 
 

@@ -47,9 +47,15 @@ REQUIRED_COUNTERS = ["loop.steps", "plane.batches",
 REQUIRED_GAUGES = ["health.tau", "health.tau_margin", "health.is_active",
                    "health.variance_gain", "health.speedup_est"]
 # the fused presample leg's plane: on-device row gathers, the score-pull
-# D2H bytes, and the device-put skip (pool already on device)
+# D2H bytes, the device-put skip (pool already on device), and the
+# survival-pruning receipt (rows killed + tiles skipped at ratio 3 —
+# conservative pruning that never skips is broken, not cautious)
 REQUIRED_FUSED = ["engine.row_gathers", "sampler.d2h_bytes",
-                  "plane.device_put_skipped"]
+                  "plane.device_put_skipped",
+                  "kernels.prune.rows_killed",
+                  "kernels.prune.blocks_skipped",
+                  "kernels.prune.tiles_total",
+                  "kernels.prune.flops_saved"]
 REQUIRED_STEP = ["step.loss", "step.dt", "step.attempts", "step.dt_total",
                  "step.variance_gain", "step.speedup_est"]
 
@@ -98,9 +104,11 @@ def main():
     assert any(h.get("sampler_active") for h in hist), \
         "history gate never opened: the health leg carries no IS signal"
     # leg 3: fused device presample (interpret-mode kernel composition on
-    # CPU — same ops the TPU path runs as Pallas programs)
+    # CPU — same ops the TPU path runs as Pallas programs), with the
+    # survival-pruned scoring pass on so the prune receipt is live
     run3 = build_run(arch="lm-tiny", preset="smoke", overrides={
-        **common, "imp.presample_impl": "fused", "imp.tau_th": "1.0001"})
+        **common, "imp.presample_impl": "fused", "imp.tau_th": "1.0001",
+        "imp.score_prune": "conservative"})
     repro.Experiment(run3, source="lm").fit()
 
     import glob

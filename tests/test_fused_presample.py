@@ -282,3 +282,80 @@ def test_fused_transfer_counters_shrink_vs_host(tmp_path):
     assert fused["engine.row_gathers"] == 8
     # both paths pull the same B-float score vector per step
     assert fused["sampler.d2h_bytes"] == host["sampler.d2h_bytes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# survival-pruned scoring (imp.score_prune=conservative), real engine
+# ---------------------------------------------------------------------------
+class _PrunePlanRec(_PlanRec):
+    def __init__(self):
+        super().__init__()
+        self.is_steps = 0
+
+    def on_step_start(self, loop, step, batch, meta):
+        super().on_step_start(loop, step, batch, meta)
+        self.is_steps += bool(getattr(meta, "is_flag", 0))
+
+
+def _fit_prune(overrides, steps=10):
+    from repro.api.config import build_run
+    # τ̂ under pruning is the biased-low HT estimate: a LOW threshold
+    # forces the gate open so the race-WOR branch actually runs (at
+    # tau_th near 1 this test would pass trivially on warmup plans)
+    ov = {"steps": steps, "imp.tau_th": 0.5,
+          "imp.score_prune": "conservative", **overrides}
+    exp = Experiment(build_run(arch="lm-tiny", preset="smoke", overrides=ov))
+    rec = _PrunePlanRec()
+    exp.fit(hooks=[rec])
+    return rec
+
+
+def test_conservative_prune_plans_bitwise_identical():
+    """The tentpole's end-to-end contract on the REAL engine: with
+    ``score_prune=conservative`` the host_score path (chunked, nothing
+    pruned) and the fused path (survival-pruned device pass) emit
+    bitwise-identical BatchPlans and losses — with the τ-gate genuinely
+    open, so the race-WOR branch is what's being compared."""
+    host = _fit_prune({"sampler.host_score": "true"})
+    fused = _fit_prune({"imp.presample_impl": "fused"})
+    assert len(host.sigs) == len(fused.sigs) == 10
+    assert host.sigs == fused.sigs
+    assert host.losses == fused.losses
+    assert host.is_steps > 0, "gate never opened — trivial equality"
+    assert host.is_steps == fused.is_steps
+
+    # warmup phase too (gate pinned shut): first-b plans, still bitwise
+    host_w = _fit_prune({"sampler.host_score": "true",
+                         "imp.tau_th": 50.0}, steps=4)
+    fused_w = _fit_prune({"imp.presample_impl": "fused",
+                          "imp.tau_th": 50.0}, steps=4)
+    assert host_w.sigs == fused_w.sigs and host_w.is_steps == 0
+
+
+def test_conservative_prune_counters(tmp_path):
+    """The fused+conservative run proves its work in counters: rows
+    killed and whole tiles skipped, with the flop receipt scaling off
+    the skip count (obs-schema'd; the CI fused leg asserts the same)."""
+    ov = {"steps": 8, "imp.tau_th": 0.5, "imp.presample_impl": "fused",
+          "imp.score_prune": "conservative", "obs.enabled": "true",
+          "obs.dir": str(tmp_path)}
+    from repro.api.config import build_run
+    exp = Experiment(build_run(arch="lm-tiny", preset="smoke", overrides=ov))
+    obs.reset()
+    exp.fit()
+    snap = obs.snapshot()
+    obs.configure(ObsConfig())
+    assert snap["kernels.prune.rows_killed"] > 0
+    assert snap["kernels.prune.blocks_skipped"] > 0
+    assert snap["kernels.prune.tiles_total"] > snap["kernels.prune.blocks_skipped"]
+    assert snap["kernels.prune.flops_saved"] > 0
+
+
+def test_score_prune_config_validation():
+    from repro.api.config import build_run
+    run = build_run(arch="lm-tiny", preset="smoke",
+                    overrides={"imp.score_prune": "typo"})
+    src = SyntheticLM(run.model.vocab_size, 32, n_examples=64, seed=7,
+                      host_id=0, n_hosts=1)
+    with pytest.raises(ValueError, match="score_prune"):
+        make_sampler(run, src)

@@ -453,6 +453,48 @@ def test_selective_sharded_plans_bitwise_equal_gather():
             f"impl fork at step {step}"
 
 
+def test_sample_sharded_default_kernel_routing(monkeypatch):
+    """``use_kernel=None`` resolves from the backend: TPU routes the
+    key-gen hot loop through the fused ``topk_keys`` device program,
+    anything else takes the numpy production loop — and an explicit
+    ``use_kernel`` beats the backend either way. Pins the ROADMAP
+    "route ``sample_sharded`` through the kernel on TPU" default."""
+    store = ScoreStore(32)
+    store.update(np.arange(32),
+                 np.random.default_rng(0).uniform(0.1, 2.0, 32))
+    stats = selection.shard_stats(store.scores, store.seen, 1.0)
+    dist = selection.GlobalDist(stats, 32, 0.1, 1.0)
+    calls = []
+    real_np = selection.local_candidates
+    # the kernel stand-in returns the numpy block: this test pins WHICH
+    # path the default picks, not the kernel numerics (test_kernels.py)
+    monkeypatch.setattr(
+        selection, "local_candidates_kernel",
+        lambda st_, dist_, kk, *, ctx: (calls.append("kernel"), real_np(
+            st_.scores, st_.seen, st_.global_ids(np.arange(st_.n_local)),
+            dist_, kk, ctx=ctx))[1])
+    monkeypatch.setattr(
+        selection, "local_candidates",
+        lambda *a, **kw: (calls.append("numpy"), real_np(*a, **kw))[1])
+    import jax
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    selection.sample_sharded(store, dist, 4, seed=1, salt=2, step=0)
+    assert calls == ["kernel"]
+    calls.clear()
+    monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
+    selection.sample_sharded(store, dist, 4, seed=1, salt=2, step=1)
+    assert calls == ["numpy"]
+    calls.clear()
+    selection.sample_sharded(store, dist, 4, seed=1, salt=2, step=2,
+                             use_kernel=True)
+    assert calls == ["kernel"]
+    calls.clear()
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    selection.sample_sharded(store, dist, 4, seed=1, salt=2, step=3,
+                             use_kernel=False)
+    assert calls == ["numpy"]
+
+
 def test_sharded_selection_chi_square_matches_proportional():
     """Distributional equivalence: sharded Gumbel/exponential top-k
     inclusion frequencies match exact proportional sampling.

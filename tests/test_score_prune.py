@@ -1,0 +1,242 @@
+"""Survival-pruned pool scoring (``imp.score_prune="conservative"``).
+
+Three layers of contract, bottom-up:
+
+* ``ce_score_block`` vs ``ce_score_block_ref`` — the alive-masked,
+  (block_b, block_t)-tiled CE stage: parity with the direct oracle,
+  block-granular freeze semantics (an all-dead row block contributes
+  exactly 0.0; live rows are untouched by their neighbours' deaths);
+* ``pruned_pool_score`` vs ``pruned_pool_score_ref`` — the chunked
+  conservative recurrence: identical alive masks, survivor scores
+  BITWISE equal to the unpruned chunked pass (k ≥ B degenerate), ragged
+  shapes, all-ties pools;
+* the race property — Monte-Carlo over random pools: the conservative
+  bound NEVER kills a true top-(k+1) winner, and the host race on the
+  mauled score vector (exact survivors + understated losers) selects
+  exactly the true winners with bitwise-identical plan quantities
+  (``selection.presample_race_select_raw``).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ce_score.ops import ce_score_block
+from repro.kernels.ce_score.ref import ce_score_block_ref, ce_score_ref
+from repro.kernels.fused_presample.ops import pruned_pool_score
+from repro.kernels.fused_presample.ref import (pool_exponentials_ref,
+                                               pruned_pool_score_ref)
+from repro.sampler import selection
+
+
+def _pool(rng, B, T, V, scale=2.0, frac_pad=0.0):
+    z = rng.standard_normal((B, T, V)).astype(np.float32) * scale
+    y = rng.integers(0, V, (B, T)).astype(np.int32)
+    if frac_pad:
+        y[rng.random((B, T)) < frac_pad] = -1
+    return jnp.asarray(z), jnp.asarray(y)
+
+
+# ---------------------------------------------------------------------------
+# ce_score_block: op vs oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,T,V,bb,bt,bv", [
+    (8, 16, 128, 1, 8, 128),     # exact tiles, row granularity
+    (8, 16, 128, 4, 8, 64),      # row blocks + vocab tiles
+    (7, 13, 100, 4, 8, 64),      # padding in all three dims
+    (3, 1, 50, 2, 8, 128),       # single token, tiles bigger than data
+])
+def test_ce_score_block_matches_ref(B, T, V, bb, bt, bv):
+    rng = np.random.default_rng(B * T * V)
+    z, y = _pool(rng, B, T, V, frac_pad=0.2)
+    alive = jnp.ones((B,), jnp.float32)
+    ce, g2 = ce_score_block(z, y, alive, block_b=bb, block_t=bt, block_v=bv)
+    cer, g2r = ce_score_block_ref(z, y, alive, block_b=bb)
+    np.testing.assert_allclose(np.asarray(ce), np.asarray(cer),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(g2), np.asarray(g2r),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ce_score_block_freeze_semantics():
+    """Dead row blocks emit exactly 0.0; killing a block leaves every
+    OTHER row's bytes untouched (tile skipping must be invisible to
+    survivors — that is the whole bitwise-plan argument)."""
+    rng = np.random.default_rng(3)
+    B, bb = 8, 2
+    z, y = _pool(rng, B, 12, 64, frac_pad=0.1)
+    all_alive = jnp.ones((B,), jnp.float32)
+    ce_full, g2_full = ce_score_block(z, y, all_alive, block_b=bb,
+                                      block_t=8, block_v=64)
+    # kill rows 2..3 — one whole row block at bb=2
+    alive = jnp.asarray([1, 1, 0, 0, 1, 1, 1, 1], jnp.float32)
+    ce, g2 = ce_score_block(z, y, alive, block_b=bb, block_t=8, block_v=64)
+    assert np.asarray(ce)[2:4].tolist() == [0.0, 0.0]
+    assert np.asarray(g2)[2:4].tolist() == [0.0, 0.0]
+    live = [0, 1, 4, 5, 6, 7]
+    np.testing.assert_array_equal(np.asarray(ce)[live],
+                                  np.asarray(ce_full)[live])
+    np.testing.assert_array_equal(np.asarray(g2)[live],
+                                  np.asarray(g2_full)[live])
+    # a HALF-dead block still computes (block granularity: one survivor
+    # keeps the whole block hot) — row 2 dead alone changes nothing
+    half = jnp.asarray([1, 1, 0, 1, 1, 1, 1, 1], jnp.float32)
+    ce_h, _ = ce_score_block(z, y, half, block_b=bb, block_t=8, block_v=64)
+    np.testing.assert_array_equal(np.asarray(ce_h), np.asarray(ce_full))
+    # and the oracle freezes the same rows
+    _, g2r = ce_score_block_ref(z, y, alive, block_b=bb)
+    assert np.asarray(g2r)[2:4].tolist() == [0.0, 0.0]
+
+
+# ---------------------------------------------------------------------------
+# pruned_pool_score: op vs oracle, bitwise survivor contract, edge cases
+# ---------------------------------------------------------------------------
+def test_pruned_pool_score_matches_ref():
+    rng = np.random.default_rng(17)
+    B, T, V, k = 24, 32, 64, 8
+    z, y = _pool(rng, B, T, V, frac_pad=0.15)
+    s, alive, loss, stats = pruned_pool_score(z, y, 0xDEADBEEF, k=k)
+    sr, aliver, lossr, statsr = pruned_pool_score_ref(
+        np.asarray(z), np.asarray(y), 0xDEADBEEF, k=k)
+    np.testing.assert_array_equal(np.asarray(alive), aliver)
+    live = np.asarray(alive) > 0
+    np.testing.assert_allclose(np.asarray(s)[live], sr[live],
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(loss)[live], lossr[live],
+                               rtol=2e-4, atol=2e-4)
+    # same tiles skipped, same rows killed (slots 0..2; flops is op-only)
+    np.testing.assert_array_equal(np.asarray(stats)[:3], statsr[:3])
+    assert float(stats[0]) > 0 and float(stats[1]) > 0
+
+
+def test_pruned_survivors_bitwise_vs_unpruned_chunked():
+    """THE tentpole contract: survivor scores of the pruned pass equal —
+    byte for byte — the unpruned chunked pass's (k = B hits the
+    no-prune branch but runs the identical chunk accumulation)."""
+    rng = np.random.default_rng(29)
+    B, T, V, k = 24, 32, 64, 8
+    z, y = _pool(rng, B, T, V, frac_pad=0.1)
+    s_p, alive, loss_p, _ = pruned_pool_score(z, y, 1234, k=k)
+    s_u, alive_u, loss_u, stats_u = pruned_pool_score(z, y, 1234, k=B)
+    assert np.asarray(alive_u).all() and float(stats_u[1]) == 0.0
+    live = np.asarray(alive) > 0
+    assert live.sum() >= k + 1
+    np.testing.assert_array_equal(np.asarray(s_p)[live],
+                                  np.asarray(s_u)[live])
+    np.testing.assert_array_equal(np.asarray(loss_p)[live],
+                                  np.asarray(loss_u)[live])
+
+
+@pytest.mark.parametrize("B,T", [(37, 23), (13, 17), (8, 9)])
+def test_pruned_ragged_shapes(B, T):
+    """B not divisible by block_b, T not divisible by block_t/chunk_t:
+    padding must never fabricate supervised tokens, kill real rows, or
+    break the survivor-bitwise contract."""
+    rng = np.random.default_rng(B + T)
+    V, k = 50, max(B // 3, 2)
+    z, y = _pool(rng, B, T, V, frac_pad=0.2)
+    s_p, alive, _, stats = pruned_pool_score(z, y, 777, k=k)
+    s_u, _, _, _ = pruned_pool_score(z, y, 777, k=B)
+    live = np.asarray(alive) > 0
+    assert live.sum() >= min(k + 1, B)
+    np.testing.assert_array_equal(np.asarray(s_p)[live],
+                                  np.asarray(s_u)[live])
+    _, aliver, _, statsr = pruned_pool_score_ref(
+        np.asarray(z), np.asarray(y), 777, k=k)
+    np.testing.assert_array_equal(np.asarray(alive), aliver)
+    np.testing.assert_array_equal(np.asarray(stats)[:3], statsr[:3])
+
+
+def test_pruned_k_ge_B_degenerate():
+    """k ≥ B (ratio-1 pool): nothing is prunable — everything survives,
+    zero tiles skipped, and the scores are the full chunked pass's."""
+    rng = np.random.default_rng(5)
+    z, y = _pool(rng, 8, 16, 32)
+    for k in (8, 20):
+        s, alive, _, stats = pruned_pool_score(z, y, 42, k=k)
+        assert np.asarray(alive).all()
+        assert float(stats[0]) == 0.0 and float(stats[1]) == 0.0
+        full = np.sqrt(np.maximum(np.asarray(
+            ce_score_ref(z.reshape(-1, 32).astype(jnp.float32),
+                         jnp.maximum(y.reshape(-1), 0))[1]
+        ).reshape(8, 16).sum(-1), 1e-20))
+        np.testing.assert_allclose(np.asarray(s), full, rtol=2e-4)
+
+
+def test_all_ties_pool():
+    """Identical rows → identical scores: the race is decided by the
+    exponentials alone and the conservative bound must keep (at least)
+    the true top-(k+1) alive."""
+    rng = np.random.default_rng(11)
+    B, T, V, k = 16, 24, 40, 5
+    z1 = rng.standard_normal((1, T, V)).astype(np.float32) * 2
+    z = jnp.asarray(np.repeat(z1, B, axis=0))
+    y = jnp.asarray(np.repeat(rng.integers(0, V, (1, T)), B, axis=0))
+    s, alive, _, _ = pruned_pool_score(z, y, 909, k=k)
+    s, alive = np.asarray(s), np.asarray(alive) > 0
+    # killed rows surface understated partials; SURVIVORS are exact,
+    # hence identical across the tied rows
+    assert np.all(s[alive] == s[alive][0])
+    E = pool_exponentials_ref(B, 909)
+    winners = np.argsort(E / np.float64(s[alive][0]),
+                         kind="stable")[:k + 1]
+    assert alive[winners].all()
+
+
+def test_mc_conservative_never_kills_a_winner():
+    """Monte-Carlo over random pools: (1) every true top-(k+1) row (f64
+    oracle keys on the TRUE scores) survives the device pruning; (2) the
+    host race on the mauled vector — exact survivor bytes, understated
+    loser partials — returns plan quantities bitwise identical to the
+    race on the fully-scored vector. That is the end-to-end soundness of
+    ``score_prune=conservative``."""
+    rng = np.random.default_rng(2024)
+    for trial in range(30):
+        B = int(rng.integers(10, 40))
+        T = int(rng.integers(8, 40))
+        V = int(rng.integers(20, 80))
+        k = int(rng.integers(2, max(B // 2, 3)))
+        ctx = int(rng.integers(0, 2 ** 32))
+        z, y = _pool(rng, B, T, V, scale=float(rng.uniform(0.5, 4.0)),
+                     frac_pad=float(rng.uniform(0.0, 0.3)))
+        s_p, alive, _, _ = pruned_pool_score(z, y, ctx, k=k)
+        s_u, _, _, _ = pruned_pool_score(z, y, ctx, k=B)
+        s_p, alive, s_u = map(np.asarray, (s_p, alive, s_u))
+
+        E = pool_exponentials_ref(B, ctx)
+        true_keys = E / np.maximum(s_u.astype(np.float64), 1e-20)
+        winners = np.lexsort((np.arange(B), true_keys))[:min(k + 1, B)]
+        assert alive[winners].all(), \
+            f"trial {trial}: pruning killed a true winner"
+
+        sel_true = selection.presample_race_select_raw(s_u, k, ctx=ctx)
+        sel_maul = selection.presample_race_select_raw(s_p, k, ctx=ctx)
+        for a, b in zip(sel_true, sel_maul):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pruned_chunk_t_validation():
+    z, y = _pool(np.random.default_rng(0), 4, 16, 32)
+    with pytest.raises(ValueError, match="multiple"):
+        pruned_pool_score(z, y, 1, k=2, block_t=8, chunk_t=12)
+
+
+# ---------------------------------------------------------------------------
+# the survivor-closed host race (plan math under pruning)
+# ---------------------------------------------------------------------------
+def test_race_select_raw_degenerate_and_estimates():
+    rng = np.random.default_rng(8)
+    s = rng.uniform(0.1, 3.0, 64).astype(np.float32)
+    idx, g, w, thr, tau = selection.presample_race_select_raw(s, 64, ctx=5)
+    np.testing.assert_array_equal(idx, np.arange(64))
+    np.testing.assert_allclose(np.asarray(g), s / s.sum(), rtol=1e-6)
+    assert thr == np.inf
+    exact_tau = float(np.sqrt(64 * np.square(s / s.sum()).sum()))
+    assert tau == pytest.approx(exact_tau, rel=1e-6)
+
+    # k < B: selected set is the raw-key bottom-k; HT totals are sane
+    idx, g, w, thr, tau = selection.presample_race_select_raw(s, 16, ctx=5)
+    keys = -np.log(selection.hash_uniform(np.arange(64), 5)) / s
+    np.testing.assert_array_equal(np.sort(idx), np.sort(np.argsort(keys)[:16]))
+    # τ̂ is an ESTIMATOR (HT ratio): finite and positive, but unlike the
+    # exact τ it is NOT bounded below by 1 — it runs low at small k
+    assert (np.asarray(w) > 0).all() and np.isfinite(tau) and tau > 0.0
