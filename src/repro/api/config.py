@@ -25,10 +25,10 @@ import dataclasses
 import json
 
 from repro.configs import get_config
-from repro.configs.base import (DataConfig, ISConfig, MLAConfig, ModelConfig,
-                                MoEConfig, ObsConfig, OptimConfig, RunConfig,
-                                SSMConfig, SamplerConfig, Segment,
-                                ShapeConfig, reduced)
+from repro.configs.base import (DataConfig, FaultsConfig, ISConfig, MLAConfig,
+                                ModelConfig, MoEConfig, ObsConfig, OptimConfig,
+                                RunConfig, RuntimeConfig, SSMConfig,
+                                SamplerConfig, Segment, ShapeConfig, reduced)
 
 
 class ConfigError(ValueError):
@@ -46,8 +46,9 @@ _NESTED = {
     RunConfig: {"model": ModelConfig, "shape": ShapeConfig,
                 "optim": OptimConfig, "imp": ISConfig,
                 "sampler": SamplerConfig, "data": DataConfig,
-                "obs": ObsConfig},
+                "obs": ObsConfig, "runtime": RuntimeConfig},
     ModelConfig: {"moe": MoEConfig, "mla": MLAConfig, "ssm": SSMConfig},
+    RuntimeConfig: {"faults": FaultsConfig},
 }
 
 

@@ -38,7 +38,7 @@ import numpy as np
 
 from repro.api.config import (ConfigError, apply_overrides, build_run,
                               from_dict, get_preset, parse_cli, truthy)
-from repro.checkpoint.ckpt import Checkpointer
+from repro.checkpoint.ckpt import Checkpointer, TopologyMismatch
 from repro.configs.base import ModelConfig, RunConfig
 from repro.core.is_train import StepSpec, build_step, train_state_init
 from repro.data.pipeline import (DataPlane, PipelineState, SyntheticCLS,
@@ -102,6 +102,14 @@ class Experiment:
         # the run config from the first instant of the run)
         from repro import obs
         obs.configure(run_cfg.obs)
+        # arm the elastic runtime before any collective can fire: the
+        # deadline/retry envelope on every collective op, and the (off by
+        # default, zero-cost when off) deterministic fault plane
+        from repro.distributed import collectives
+        from repro.runtime import faults
+        collectives.configure(run_cfg.runtime)
+        faults.configure(run_cfg.runtime.faults,
+                         host_id=jax.process_index())
         self.lm = LM(run_cfg.model)
         self.opt = get_optimizer(run_cfg.optim)
         self.mesh = mesh
@@ -233,6 +241,30 @@ class Experiment:
         """Checkpoint payload: train state + the sampler's score memory."""
         return {"train": state, "sampler": self.sampler.state_dict()}
 
+    def on_membership_change(self, event):
+        """The loop's membership handler: resolve the survivor set (an
+        unknown-survivor timeout degrades to a solo pod of this host),
+        reshard the sampler in place through the elastic path, and rebuild
+        the straggler monitor (its deadline EMA described the old pod).
+        Returns ``(resolved event, reshard stats)``; the loop restarts the
+        data plane at its current plan cursor afterwards."""
+        from repro.runtime import elastic
+        old = set(elastic.member_uids(self.sampler.store.ownership))
+        uid = int(getattr(self.sampler.store.ownership, "me_uid",
+                          self.sampler.store.host_id))
+        event = elastic.solo_event(event, uid)
+        event = dataclasses.replace(
+            event, departed=tuple(sorted(old - set(event.members))))
+        stats = self.sampler_reshard(event)
+        self.monitor = StragglerMonitor(self.run.step_deadline_factor)
+        return event, stats
+
+    def sampler_reshard(self, event):
+        """Reshard the sampler onto ``event.members`` (overridable seam:
+        tests inject simulated collectives through ``elastic`` directly)."""
+        from repro.runtime import elastic
+        return elastic.reshard_sampler(self.sampler, event)
+
     def resume_or_init(self):
         """Restart-from-checkpoint: the node-failure recovery entry point."""
         if self.ckpt and self.ckpt.latest_step() is not None:
@@ -240,6 +272,8 @@ class Experiment:
             try:
                 payload, step = self.ckpt.restore({"train": template})
                 state = payload["train"]
+            except TopologyMismatch as tm:
+                return self._resume_resharded(tm, template, pstate)
             except KeyError:
                 # legacy layout: train state at the payload root
                 state, step = self.ckpt.restore(template)
@@ -257,6 +291,47 @@ class Experiment:
             return state, pstate, step
         state, pstate = self.init_state()
         return state, pstate, 0
+
+    def _resume_resharded(self, tm: TopologyMismatch, template, pstate):
+        """Restart into a DIFFERENT pod size than the checkpoint's writers
+        (``TopologyMismatch``): the membership-change-across-a-restart
+        case. The train state merges fine (every old host's shard file is
+        on disk, and train leaves share key names AND values), but the
+        sampler's score shards were laid out for the old membership — so
+        instead of the strict restore they route through the elastic
+        degradation contract: reassemble the global sentinel vector from
+        the old strided shards and adopt it via ``update`` (write-through
+        on the cold store, so migration is exact; and since ALL old
+        shards are on disk — unlike a live host death — nothing is lost).
+        """
+        from repro import obs
+        payload, step = self.ckpt.restore({"train": template},
+                                          check_topology=False)
+        state = payload["train"]
+        store = self.sampler.store
+        n = store.n
+        global_vec = np.full(n, -1.0, np.float64)
+        h_old = tm.ckpt_hosts
+        for h, arrs in self.ckpt.shards(step).items():
+            scores = arrs.get("sampler/store/scores")
+            seen = arrs.get("sampler/store/seen")
+            if scores is None or seen is None:
+                continue  # pre-plan-world layout: sampler starts cold
+            gids = np.arange(scores.size, dtype=np.int64) * h_old + int(h)
+            keep = (gids < n) & seen.astype(bool)
+            global_vec[gids[keep]] = np.asarray(scores, np.float64)[keep]
+        ids = np.flatnonzero(global_vec >= 0)
+        if ids.size:
+            store.update(ids, global_vec[ids])
+        if hasattr(self.sampler, "_gate_dirty"):
+            self.sampler._gate_dirty = True
+        obs.counter("runtime.membership.events").inc()
+        obs.gauge("runtime.membership.n_hosts").set(store.n_hosts)
+        obs.counter("runtime.membership.migrated_ids").inc(int(ids.size))
+        meta = self.ckpt.meta(step)
+        pstate = PipelineState.from_dict(
+            meta.get("pipeline", pstate.as_dict()))
+        return state, pstate, step
 
     # -- entry points ----------------------------------------------------------
     def fit(self, steps=None, log_every=None, callback=None, hooks=()):

@@ -54,6 +54,9 @@ class Hook:
     def on_checkpoint(self, loop, step, payload):
         pass
 
+    def on_membership_change(self, loop, step, event, stats):
+        pass
+
     def on_loop_end(self, loop, state, history):
         pass
 
@@ -122,7 +125,27 @@ class CheckpointHook(Hook):
 class StragglerHook(Hook):
     """Straggler escalation as a hook: feed every attempt's wall-clock to
     the experiment's ``StragglerMonitor`` (read at call time, so tests can
-    swap ``exp.monitor``) and vote to retry while it reports a skip."""
+    swap ``exp.monitor``) and vote to retry while it reports a skip.
+
+    When the monitor reports ``escalate`` — batch-shrink floored AND skip
+    budget exhausted, i.e. this host is persistently over deadline — the
+    hook stops limping and raises ``MembershipChange`` into the loop's
+    membership path: a resync over the current member set (store
+    migration is a no-op, but the plane restarts from the plan cursor and
+    the monitor is rebuilt). Peers mid-collective hit their own deadline
+    envelope and converge on the same path. ``.get`` keeps fake monitors
+    that predate the ``escalate`` key working."""
 
     def on_step_timed(self, loop, step, attempt, dt):
-        return bool(loop.exp.monitor.observe(dt)["skip"])
+        action = loop.exp.monitor.observe(dt)
+        if action.get("escalate"):
+            from repro.runtime import elastic
+            from repro.runtime.membership import (MembershipChange,
+                                                  MembershipEvent)
+            store = loop.exp.sampler.store
+            raise MembershipChange(MembershipEvent(
+                kind="straggler", step=step,
+                members=elastic.member_uids(store.ownership),
+                reason=f"host over deadline for {attempt + 1} attempts "
+                       f"with shrink floored and skip budget spent"))
+        return bool(action["skip"])

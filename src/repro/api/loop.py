@@ -51,9 +51,11 @@ import numpy as np
 
 from repro import obs
 from repro.distributed import collectives
+from repro.runtime import faults
+from repro.runtime.membership import MembershipChange
 
 EVENTS = ("loop_start", "step_start", "step_timed", "retry", "step_end",
-          "scores_ready", "checkpoint", "loop_end")
+          "scores_ready", "checkpoint", "membership_change", "loop_end")
 
 
 class TrainLoop:
@@ -116,8 +118,11 @@ class TrainLoop:
         # (StragglerHook), so acting on it alone would re-dispatch the
         # jitted step — and its collectives — on this host only: the
         # lockstep deadlock. OR-reduce so every host takes the same
-        # branch (identity in single-process runs).
-        return collectives.allreduce_any(local)
+        # branch (identity single-process AND after a solo reshard —
+        # which is why n_hosts is the sampler's CURRENT membership, not
+        # the launch-time process count).
+        return collectives.allreduce_any(
+            local, n_hosts=self.exp.sampler.n_hosts)
 
     # -- score feedback (deferred, off the dispatch critical path) ------------
     def drain_feedback(self) -> None:
@@ -187,6 +192,43 @@ class TrainLoop:
             # worker threads must not outlive the run
             plane.stop()
 
+    def _handle_membership(self, exc, plane, step):
+        """A collective deadline, an injected fault, or straggler
+        escalation surfaced as a ``MembershipChange`` at ``step``. Stop
+        the (possibly wedged) plane, let the experiment resolve the
+        survivor set and reshard onto it, and hand back a fresh plane —
+        the caller re-``begin``s at the SAME plan cursor, so the
+        interrupted step replays under the new membership (bitwise the
+        plan a cold start at this cursor + membership would produce)."""
+        import dataclasses
+        event = dataclasses.replace(exc.event, step=step)
+        plane.stop()
+        event, stats = self.exp.on_membership_change(event)
+        self.emit("membership_change", step, event, stats)
+        plane = self.plane = self.exp.make_plane()
+        return plane
+
+    def _finish_with_retry(self, plane, handle, state):
+        """Pop the step's batch. On a pipelined (pop-again) plane a
+        surfaced gather error is transient by contract — the worker has
+        already re-queued the plan, so the retried batch is right behind
+        the error — re-pop within the retry budget. Fatal plan errors,
+        passthrough/finalize planes (whose handles are consumed by
+        ``finish``), and membership changes propagate untouched."""
+        retriable = getattr(plane, "pipelined", False) \
+            and not getattr(plane, "finalize", False)
+        budget = self.exp.run.max_step_retries
+        for attempt in range(budget + 1):
+            try:
+                return plane.finish(handle, params=state["params"])
+            except MembershipChange:
+                raise
+            except Exception:
+                if not retriable or attempt == budget \
+                        or getattr(plane, "fatal", None) is not None:
+                    raise
+                self._c_retries.inc()
+
     def _run_steps(self, plane, state, pstate, start, steps, overlap,
                    history):
         exp = self.exp
@@ -195,60 +237,79 @@ class TrainLoop:
             pstate, start, params=state["params"] if overlap else None)
         i = start
         while i < steps:
-            batch, plan, pstate_next = plane.finish(
-                handle, params=state["params"])
-            # the train path's H2D: fused presample hands device arrays
-            # through (asarray is a no-op) and the counter stays at zero —
-            # the per-step transfer claim the fused benchmark checks
-            h2d = sum(np.asarray(v).nbytes for v in batch.values()
-                      if not isinstance(v, jax.Array))
-            if h2d:
-                self._c_h2d.inc(h2d)
-            batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
-            self.emit("step_start", i, batch, plan)
-            launched_next = False
-            dt_total = 0.0
-            for attempt in range(run.max_step_retries + 1):
-                t0 = time.time()
-                prev_state = state
-                with self._sp_dispatch:
-                    if exp.step_is_flagged:
-                        state, metrics = exp.step_fn(
-                            state, batch,
-                            jax.numpy.asarray(plan["is_flag"],
-                                              jax.numpy.float32))
-                    else:
-                        state, metrics = exp.step_fn(state, batch)
-                if not launched_next and i + 1 < steps:
-                    # double-buffer: launch batch k+1's scoring against the
-                    # PRE-update params while batch k's update runs (scores
-                    # one step stale — selection tolerates that)
-                    handle = plane.begin(
-                        pstate_next, i + 1,
-                        params=prev_state["params"] if overlap else None)
-                    launched_next = True
+            faults.set_step(i)
+            faults.die_if(i)
+            step_state0 = state
+            try:
+                batch, plan, pstate_next = self._finish_with_retry(
+                    plane, handle, state)
+                # the train path's H2D: fused presample hands device arrays
+                # through (asarray is a no-op) and the counter stays at
+                # zero — the per-step transfer claim the fused benchmark
+                # checks
+                h2d = sum(np.asarray(v).nbytes for v in batch.values()
+                          if not isinstance(v, jax.Array))
+                if h2d:
+                    self._c_h2d.inc(h2d)
+                batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+                self.emit("step_start", i, batch, plan)
+                launched_next = False
+                dt_total = 0.0
+                for attempt in range(run.max_step_retries + 1):
+                    t0 = time.time()
+                    prev_state = state
+                    with self._sp_dispatch:
+                        if exp.step_is_flagged:
+                            state, metrics = exp.step_fn(
+                                state, batch,
+                                jax.numpy.asarray(plan["is_flag"],
+                                                  jax.numpy.float32))
+                        else:
+                            state, metrics = exp.step_fn(state, batch)
+                    if not launched_next and i + 1 < steps:
+                        # double-buffer: launch batch k+1's scoring against
+                        # the PRE-update params while batch k's update runs
+                        # (scores one step stale — selection tolerates that)
+                        handle = plane.begin(
+                            pstate_next, i + 1,
+                            params=prev_state["params"] if overlap else None)
+                        launched_next = True
+                    self.state = state
+                    # previous step's score feedback overlaps device work
+                    self.drain_feedback()
+                    scores = metrics.pop("sample_scores", None)
+                    metrics = {k: float(v) for k, v in metrics.items()}
+                    dt = time.time() - t0 + faults.slow_penalty(i)
+                    dt_total += dt
+                    if not self._vote_retry(i, attempt, dt) \
+                            or attempt == run.max_step_retries:
+                        # accepted — or retries exhausted, in which case
+                        # the (already computed, merely slow) update is
+                        # kept: the batch is RETRIED under a skip and never
+                        # dropped
+                        break
+                    # straggler escalation: drop this attempt's result
+                    # (params AND score feedback) and RETRY THE SAME BATCH
+                    # — bounded by max_step_retries; the monitor's own skip
+                    # budget forces a sync once exhausted
+                    state = prev_state
+                    self.state = state
+                    self._c_retries.inc()
+                    with self._sp_retry:
+                        self.emit("retry", i, attempt, dt)
+            except MembershipChange as mc:
+                # membership is a loop event, not a crash: drop this step's
+                # partial work (params AND the previous step's undrained
+                # feedback — its row slicing belonged to the old
+                # membership), reshard, and replay step i from the same
+                # plan cursor under the survivors.
+                state = step_state0
                 self.state = state
-                # previous step's score feedback overlaps the device work
-                self.drain_feedback()
-                scores = metrics.pop("sample_scores", None)
-                metrics = {k: float(v) for k, v in metrics.items()}
-                dt = time.time() - t0
-                dt_total += dt
-                if not self._vote_retry(i, attempt, dt) \
-                        or attempt == run.max_step_retries:
-                    # accepted — or retries exhausted, in which case the
-                    # (already computed, merely slow) update is kept: the
-                    # batch is RETRIED under a skip and never dropped
-                    break
-                # straggler escalation: drop this attempt's result (params
-                # AND score feedback) and RETRY THE SAME BATCH — bounded by
-                # max_step_retries; the monitor's own skip budget forces a
-                # sync once exhausted
-                state = prev_state
-                self.state = state
-                self._c_retries.inc()
-                with self._sp_retry:
-                    self.emit("retry", i, attempt, dt)
+                self._pending = None
+                plane = self._handle_membership(mc, plane, i)
+                handle = plane.begin(
+                    pstate, i, params=state["params"] if overlap else None)
+                continue
             if scores is not None:
                 # close the loop lazily: scores flow into the score memory
                 # behind the NEXT step's device work (drain_feedback)

@@ -45,12 +45,36 @@ def _flatten(tree):
     return items, treedef
 
 
+class TopologyMismatch(RuntimeError):
+    """A committed checkpoint was written by a different number of hosts
+    than are restoring it. The train state still merges (every writer's
+    shard file is on disk), but host-sharded state (the sampler's score
+    shards) needs the elastic resharding path — ``Experiment`` routes
+    this through it instead of restoring blind."""
+
+    def __init__(self, ckpt_hosts: int, now_hosts: int, step: int):
+        self.ckpt_hosts = int(ckpt_hosts)
+        self.now_hosts = int(now_hosts)
+        self.step = int(step)
+        super().__init__(
+            f"checkpoint step {step} was written by {ckpt_hosts} host(s) "
+            f"but {now_hosts} are restoring it — reshard, don't restore")
+
+
 class Checkpointer:
     def __init__(self, directory, keep=3):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self._thread = None
+        # reap orphaned step_*.tmp-* dirs: a host that died mid-_write
+        # (before the atomic rename) leaves its nonce dir behind forever —
+        # restore already ignores them, but they accumulate a dead run's
+        # full state per crash. Startup is before any writer thread, so
+        # everything matching the tmp pattern here is a previous run's.
+        for p in self.dir.glob("step_*.tmp-*"):
+            if p.is_dir():
+                shutil.rmtree(p, ignore_errors=True)
 
     # -- write ---------------------------------------------------------------
     def _write(self, step: int, host_items: dict, meta: dict):
@@ -113,18 +137,32 @@ class Checkpointer:
         s = self.steps()
         return s[-1] if s else None
 
-    def restore(self, template_state, step=None, shardings=None, strict=True):
+    def restore(self, template_state, step=None, shardings=None, strict=True,
+                check_topology=True):
         """Restore into the structure of ``template_state``; place on the
         current mesh per ``shardings`` (same pytree) if given.
 
         ``strict=False`` keeps the template's value for keys absent from
         the checkpoint (e.g. restoring a sampler whose scheme — and thus
         state-dict shape — changed since the save) instead of raising.
+
+        ``check_topology`` (default on) raises ``TopologyMismatch`` BEFORE
+        touching any shard when the manifest's writer count differs from
+        the current process count: the merged view silently overwrites
+        host-sharded keys (every writer uses the same key names), so a
+        blind cross-topology restore would keep exactly one host's score
+        shard and call it the world. Callers that have already routed
+        through the reshard path pass ``check_topology=False``.
         """
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
         d = self.dir / f"step_{step}"
+        if check_topology:
+            man = json.loads((d / "manifest.json").read_text())
+            ckpt_hosts = int(man.get("n_hosts", 1))
+            if ckpt_hosts != jax.process_count():
+                raise TopologyMismatch(ckpt_hosts, jax.process_count(), step)
         data = {}
         for shard in d.glob("shard_*.npz"):
             with np.load(shard) as z:
@@ -155,3 +193,24 @@ class Checkpointer:
         step = step if step is not None else self.latest_step()
         m = json.loads((self.dir / f"step_{step}" / "manifest.json").read_text())
         return m.get("meta", {})
+
+    def manifest(self, step=None) -> dict:
+        """The full manifest (incl. ``n_hosts``, the writer count)."""
+        step = step if step is not None else self.latest_step()
+        return json.loads(
+            (self.dir / f"step_{step}" / "manifest.json").read_text())
+
+    def shards(self, step=None) -> dict:
+        """Per-writer shard payloads: ``{host_id: {key: array}}``.
+
+        The cross-topology resume path reads these to reassemble
+        host-sharded state (the sampler's strided score shards) that the
+        merged ``restore`` view would overwrite key-for-key."""
+        step = step if step is not None else self.latest_step()
+        d = self.dir / f"step_{step}"
+        out = {}
+        for shard in sorted(d.glob("shard_*.npz")):
+            h = int(shard.stem.split("_", 1)[1])
+            with np.load(shard) as z:
+                out[h] = {k: z[k] for k in z.files}
+        return out

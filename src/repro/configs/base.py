@@ -309,6 +309,45 @@ class ObsConfig:
 
 
 @dataclass(frozen=True)
+class FaultsConfig:
+    """Deterministic fault injection (``repro.runtime.faults``).
+
+    ``spec`` is a seeded schedule, ``;``-separated entries of the form
+    ``kind@step[:host[:arg]]`` — e.g. ``"timeout@3:1;die@8:1;slow@5:0:0.4"``.
+    Kinds: ``timeout`` (a collective attempt raises an injected deadline
+    error; ``arg`` = how many attempts fail, default 1), ``gather`` (one
+    injected data-plane gather error at that step), ``die`` (the targeted
+    host exits abruptly — host death), ``slow`` (``arg`` seconds added to
+    the step's measured wall time — a deterministic straggler, no real
+    sleep). ``host`` omitted → every host. Off by default and free when
+    disabled (one attribute check per site — the ``repro.obs``
+    discipline).
+    """
+    enabled: bool = False
+    seed: int = 0
+    spec: str = ""
+
+
+@dataclass(frozen=True)
+class RuntimeConfig:
+    """Elastic membership runtime (``repro.runtime``).
+
+    Deadline-guards every production collective: each attempt gets
+    ``collective_timeout_s``; a timed-out attempt is retried up to
+    ``collective_retries`` times with bounded exponential backoff
+    (``backoff_base_s`` doubling, capped at ``backoff_max_s``); a
+    persistent timeout escalates into a ``MembershipChange`` event
+    instead of hanging the pod. ``faults`` is the deterministic
+    fault-injection schedule used by the chaos tests.
+    """
+    collective_timeout_s: float = 120.0
+    collective_retries: int = 2
+    backoff_base_s: float = 0.5
+    backoff_max_s: float = 8.0
+    faults: FaultsConfig = field(default_factory=FaultsConfig)
+
+
+@dataclass(frozen=True)
 class OptimConfig:
     name: str = "sgd"              # sgd | adamw
     lr: float = 0.1
@@ -334,6 +373,7 @@ class RunConfig:
     sampler: SamplerConfig = field(default_factory=SamplerConfig)
     data: DataConfig = field(default_factory=DataConfig)
     obs: ObsConfig = field(default_factory=ObsConfig)
+    runtime: RuntimeConfig = field(default_factory=RuntimeConfig)
     steps: int = 100
     microbatches: int = 1          # gradient accumulation
     remat: bool = True

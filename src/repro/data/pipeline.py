@@ -42,6 +42,8 @@ import jax
 import numpy as np
 
 from repro import obs
+from repro.runtime import faults
+from repro.runtime.membership import MembershipChange
 
 
 @dataclasses.dataclass
@@ -403,6 +405,14 @@ class DataPlane:
             t.join(timeout=2.0)
         self._threads = []
 
+    @property
+    def fatal(self):
+        """The terminal plan-stage error, if any. Surfaced errors with no
+        fatal set are transient gather errors by contract (the worker has
+        already re-queued the plan) — the loop's bounded re-pop keys on
+        this distinction."""
+        return self._fatal
+
     def state_dict(self) -> dict:
         """The plan cursor: pipeline state after the last consumed plan
         (identical to what the loop checkpoints as ``meta['pipeline']``)."""
@@ -461,11 +471,24 @@ class DataPlane:
                     self._gathers_started += 1
                     self._gather_cv.notify_all()
                 try:
+                    # injected gather fault (deterministic chaos harness):
+                    # keyed to the PLAN's step and consumed on firing, so
+                    # the worker's retry of the same plan then succeeds —
+                    # exactly the surface-then-retry contract real flaky
+                    # gathers get
+                    faults.raise_if("gather",
+                                    step=int(getattr(plan, "step", -1)))
                     with self._sp_gather:
                         batch = self.sampler.assembler.assemble(plan)
                 except BaseException as e:
                     # surface on the consuming call, then retry this plan
                     sink.put(("err", e))
+                    if isinstance(e, MembershipChange):
+                        # a peer is gone, not a flaky gather: re-running
+                        # the collective would just block for another full
+                        # deadline envelope. Park until the loop reshards
+                        # (it stops this plane and builds a fresh one).
+                        break
                     continue
                 sink.put(("ok", batch, plan, cursor))
                 break

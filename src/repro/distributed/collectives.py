@@ -8,6 +8,7 @@ run anywhere. The special axis name ``"dp"`` expands to ("pod", "data").
 from __future__ import annotations
 
 import itertools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -15,6 +16,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import obs
+from repro.runtime import faults
 
 
 def _note_collective(name: str, payload) -> None:
@@ -113,8 +115,43 @@ def _require_multiprocess(name, n_hosts):
 
 
 
-_KV_TIMEOUT_MS = 120_000
+# deadline envelope defaults (RunConfig.runtime; see ``configure``)
+_RT = {"timeout_s": 120.0, "retries": 2,
+       "backoff_base_s": 0.5, "backoff_max_s": 8.0}
 _kv_seq = itertools.count()
+
+
+def configure(runtime_cfg=None) -> None:
+    """Install the pod's ``RunConfig.runtime`` deadline/retry envelope
+    (None restores defaults). Called once by ``Experiment.__init__``;
+    module-level because the collectives are free functions."""
+    _RT.update(
+        timeout_s=float(getattr(runtime_cfg, "collective_timeout_s", 120.0)),
+        retries=int(getattr(runtime_cfg, "collective_retries", 2)),
+        backoff_base_s=float(getattr(runtime_cfg, "backoff_base_s", 0.5)),
+        backoff_max_s=float(getattr(runtime_cfg, "backoff_max_s", 8.0)))
+
+
+def _timeout_ms() -> int:
+    return max(1, int(_RT["timeout_s"] * 1000.0))
+
+
+class CollectiveTimeout(RuntimeError):
+    """A collective attempt exceeded its deadline (retryable)."""
+
+
+def _is_timeout_error(e) -> bool:
+    """Classify an exception from the cross-process funnel as a deadline
+    breach (retryable) vs a real bug (re-raised). The coordination
+    service surfaces breaches as XlaRuntimeError with DEADLINE_EXCEEDED /
+    barrier-timeout texts; injected faults and explicit
+    ``CollectiveTimeout`` count too."""
+    if isinstance(e, (CollectiveTimeout, faults.FaultInjected)):
+        return True
+    msg = str(e).lower()
+    return any(tok in msg for tok in
+               ("deadline", "timed out", "timeout", "barrier",
+                "unavailable", "connection reset"))
 
 
 def _kv_allgather(v: np.ndarray) -> np.ndarray:
@@ -123,7 +160,8 @@ def _kv_allgather(v: np.ndarray) -> np.ndarray:
     computations, so CPU multi-process launches — the 2-process CI smoke,
     dev rigs — ride this instead of ``process_allgather``. Every process
     must issue its collectives in the same order (standard SPMD): the
-    monotonic call counter is the rendezvous id."""
+    monotonic call counter is the rendezvous id. The barrier timeout is
+    the deadline clock of the retry envelope above."""
     from jax._src import distributed
     client = distributed.global_state.client
     if client is None:
@@ -132,14 +170,14 @@ def _kv_allgather(v: np.ndarray) -> np.ndarray:
     pid, n = jax.process_index(), jax.process_count()
     key = f"repro/ag{next(_kv_seq)}"
     client.key_value_set(f"{key}/{pid}", v.tobytes().hex())
-    client.wait_at_barrier(f"{key}/ready", timeout_in_ms=_KV_TIMEOUT_MS)
+    client.wait_at_barrier(f"{key}/ready", timeout_in_ms=_timeout_ms())
     shards = [np.frombuffer(
         bytes.fromhex(client.blocking_key_value_get(f"{key}/{i}",
-                                                    _KV_TIMEOUT_MS)),
+                                                    _timeout_ms())),
         v.dtype).reshape(v.shape) for i in range(n)]
     # best-effort cleanup once everyone has read (long CPU runs would
     # otherwise grow the coordinator's store without bound)
-    client.wait_at_barrier(f"{key}/done", timeout_in_ms=_KV_TIMEOUT_MS)
+    client.wait_at_barrier(f"{key}/done", timeout_in_ms=_timeout_ms())
     if pid == 0:
         try:
             client.key_value_delete(f"{key}/")
@@ -148,16 +186,49 @@ def _kv_allgather(v: np.ndarray) -> np.ndarray:
     return np.stack(shards)
 
 
-def _process_allgather(v) -> np.ndarray:
+def _process_allgather(v, *, op: str = "allgather") -> np.ndarray:
     """The one cross-process all-gather all collectives ride: XLA
     ``process_allgather`` on accelerator backends, the coordination-
     service KV path on CPU (where XLA has no multi-process programs).
-    Returns the (n_processes, ...) stack, identical on every process."""
+    Returns the (n_processes, ...) stack, identical on every process.
+
+    This funnel carries the DEADLINE ENVELOPE: each attempt is bounded
+    by ``runtime.collective_timeout_s`` (the KV barrier's timeout is the
+    clock — no host clock is read here), a breached attempt is retried
+    up to ``runtime.collective_retries`` times behind bounded
+    exponential backoff, and a persistent breach escalates into a
+    ``MembershipChange`` event instead of hanging the pod. Injected
+    ``timeout`` faults enter through the same classification, so the
+    chaos tests exercise exactly the production path. Non-deadline
+    errors re-raise unwrapped.
+    """
     v = np.asarray(v)
-    if jax.default_backend() == "cpu":
-        return _kv_allgather(v)
-    from jax.experimental import multihost_utils
-    return np.asarray(multihost_utils.process_allgather(v))
+    retries = int(_RT["retries"])
+    last = None
+    for attempt in range(retries + 1):
+        try:
+            faults.raise_if("timeout", op=op)
+            if jax.default_backend() == "cpu":
+                return _kv_allgather(v)
+            from jax.experimental import multihost_utils
+            return np.asarray(multihost_utils.process_allgather(v))
+        except Exception as e:
+            if not _is_timeout_error(e):
+                raise
+            last = e
+            obs.counter(f"collectives.{op}.timeouts").inc()
+        if attempt < retries:
+            time.sleep(min(_RT["backoff_base_s"] * (2.0 ** attempt),
+                           _RT["backoff_max_s"]))
+    # retry budget exhausted: escalate to a membership event — the
+    # detecting host cannot know which peers survive, so members stays
+    # unknown and the degradation ladder drops it to a solo pod
+    from repro.runtime.membership import MembershipChange, MembershipEvent
+    raise MembershipChange(MembershipEvent(
+        kind="timeout",
+        reason=f"collective {op!r} exceeded its "
+               f"{_RT['timeout_s']:g}s deadline on all "
+               f"{retries + 1} attempts: {last}")) from last
 
 
 def strided_shard_size(n_global: int, host_id: int, n_hosts: int) -> int:
@@ -233,7 +304,8 @@ def gather_host_scores(local_scores, *, host_id=None, n_hosts=None,
     # means the plan sharding itself diverged, so aborting THIS host loudly
     # beats feeding the gather garbage; peers are bounded by the KV-barrier
     # timeout rather than hanging forever
-    shards = _process_allgather(pad_shard(local, n_global, n_hosts))
+    shards = _process_allgather(pad_shard(local, n_global, n_hosts),
+                                op="gather_host_scores")
     return interleave_shards(shards, n_global)
 
 
@@ -260,7 +332,7 @@ def allgather_rows(local_rows, *, n_rows: int, n_hosts=None):
     out = {}
     for k, v in tree.items():
         v = np.asarray(v)
-        shards = _process_allgather(v)
+        shards = _process_allgather(v, op="allgather_rows")
         out[k] = shards.reshape((-1,) + v.shape[1:])[:n_rows]
     return out["x"] if single else out
 
@@ -288,8 +360,47 @@ def exchange_rows(contrib, row_mask, *, lo: int, hi: int, n_hosts=None):
     for k, v in contrib.items():
         v = np.where(row_mask.reshape((-1,) + (1,) * (np.asarray(v).ndim - 1)),
                      np.asarray(v), 0)
-        shards = _process_allgather(v)
+        shards = _process_allgather(v, op="exchange_rows")
         out[k] = shards.sum(axis=0)[lo:hi].astype(np.asarray(v).dtype)
+    return out
+
+
+def allgather_owned(values, gids, *, pad_to: int, n_global: int,
+                    n_hosts=None):
+    """Scatter per-host OWNED ``(gid, value)`` pairs into one global
+    vector — the score-migration collective of the elastic reshard path
+    (``repro.runtime.elastic``): each surviving host contributes the
+    (sparse, arbitrarily-assigned) entries it held under the OLD
+    ownership, every host receives the identical dense ``(n_global,)``
+    vector with ``-1`` (the unseen sentinel) where no survivor owned the
+    id. ``pad_to`` is the common block length (max surviving shard size,
+    computed identically on every host from the old ownership), so the
+    exchange rides the one fixed-shape all-gather funnel: gids and
+    values pack into a single ``(2, pad_to)`` f64 block (f64 carries
+    int ids exactly below 2**53). Identity-scatter single-process.
+    """
+    values = np.asarray(values, np.float64).reshape(-1)
+    gids = np.asarray(gids, np.int64).reshape(-1)
+    if values.shape != gids.shape:
+        raise ValueError(f"allgather_owned: {values.size} values vs "
+                         f"{gids.size} gids")
+    _note_collective("allgather_owned", {"gids": gids, "values": values})
+    n_hosts = jax.process_count() if n_hosts is None else int(n_hosts)
+    out = np.full(int(n_global), -1.0, np.float64)
+    if n_hosts == 1:
+        out[gids] = values
+        return out
+    _require_multiprocess("allgather_owned", n_hosts)
+    if values.size > int(pad_to):
+        raise ValueError(f"allgather_owned: {values.size} entries exceed "
+                         f"pad_to {pad_to}")
+    packed = np.full((2, int(pad_to)), -1.0, np.float64)
+    packed[0, :gids.size] = gids
+    packed[1, :values.size] = values
+    shards = _process_allgather(packed, op="allgather_owned")
+    for h in range(n_hosts):
+        keep = shards[h, 0] >= 0
+        out[shards[h, 0, keep].astype(np.int64)] = shards[h, 1, keep]
     return out
 
 
@@ -309,7 +420,7 @@ def allreduce_stats(local_stats, *, n_hosts=None):
     if n_hosts == 1:
         return local.copy()
     _require_multiprocess("allreduce_stats", n_hosts)
-    return _process_allgather(local).sum(axis=0)
+    return _process_allgather(local, op="allreduce_stats").sum(axis=0)
 
 
 def allreduce_any(flag, *, n_hosts=None) -> bool:
@@ -329,7 +440,7 @@ def allreduce_any(flag, *, n_hosts=None) -> bool:
     if n_hosts == 1:
         return bool(flag)
     _require_multiprocess("allreduce_any", n_hosts)
-    return bool(_process_allgather(local).any())
+    return bool(_process_allgather(local, op="allreduce_any").any())
 
 
 def exchange_topk(candidates, *, k_each: int, n_hosts=None):

@@ -38,6 +38,10 @@ SCHEMA = (
      "calls per collective (`gather_host_scores`, `allgather_rows`, "
      "`exchange_rows`, `allreduce_stats`, `exchange_topk`, "
      "`allreduce_any`)"),
+    ("collectives.*.timeouts", "counter",
+     "collective attempts that breached the runtime deadline envelope "
+     "(each is retried with bounded backoff; exhaustion escalates to a "
+     "MembershipChange instead of hanging the pod)"),
     ("collectives.exchange_topk.k_each", "histogram",
      "candidate-block rows per exchange — the knob trading exchange "
      "bandwidth (k_each*H rows) against selection fidelity"),
@@ -54,6 +58,10 @@ SCHEMA = (
     ("engine.row_gathers", "counter",
      "on-device winner gathers out of a device-resident pool"),
     ("engine.take_rows", "span", "on-device row-gather dispatch"),
+    ("faults.*", "counter",
+     "injected faults fired, one counter per kind (`timeout` / `gather` "
+     "/ `die` / `slow` — the deterministic chaos schedule of "
+     "RunConfig.runtime.faults)"),
     ("health.ess", "gauge",
      "Kish effective sample size of the step's unbiasedness weights"),
     ("health.ess_frac", "gauge", "ESS / batch size"),
@@ -105,6 +113,19 @@ SCHEMA = (
     ("plane.next_wait", "span", "consumer wait for the next batch"),
     ("plane.plan", "span", "plan worker stage"),
     ("plane.queue_depth", "gauge", "ready batches queued"),
+    ("runtime.membership.events", "counter",
+     "membership transitions handled (host leave/join/timeout "
+     "escalations — each one reshards the ScoreStore and resumes from "
+     "the plan cursor)"),
+    ("runtime.membership.lost_ids", "counter",
+     "score entries owned by departed hosts at reshard (they fall back "
+     "to the unseen prior; the tau-gate/coverage check decides whether "
+     "IS stays on)"),
+    ("runtime.membership.migrated_ids", "counter",
+     "surviving score entries re-homed onto the new ownership at "
+     "reshard"),
+    ("runtime.membership.n_hosts", "gauge",
+     "current membership size after the last transition"),
     ("sampler.d2h_bytes", "counter",
      "score bytes pulled device->host (the ONE pool-sized transfer "
      "either presample path makes)"),
@@ -122,6 +143,13 @@ SCHEMA = (
      "cache invalidations (every update/decay/restore version bump)"),
     ("store.staleness", "histogram",
      "update ticks since each revisited id was last rescored"),
+    ("straggler.b_scale", "gauge",
+     "current straggler batch-shrink factor (1.0 = healthy)"),
+    ("straggler.deadline_s", "gauge",
+     "current per-step deadline (factor x step-time EMA)"),
+    ("straggler.ema_s", "gauge", "step wall-time EMA the deadline tracks"),
+    ("straggler.skips", "counter",
+     "steps skipped (and retried) after a deadline breach"),
 )
 
 KINDS = ("counter", "gauge", "histogram", "span", "record")

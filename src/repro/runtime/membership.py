@@ -1,0 +1,63 @@
+"""Cluster membership as a first-class runtime event.
+
+A ``MembershipEvent`` records the facts of a membership transition —
+which stable host uids survive, which departed, and at which loop step
+it was detected. ``MembershipChange`` is the control-flow spelling: the
+deadline-guarded collectives raise it when a rendezvous times out past
+its retry budget (instead of hanging the pod), and the fault plane /
+straggler escalation raise it deliberately. ``TrainLoop`` catches it,
+emits the event to hooks, and hands it to the experiment's reshard path
+(``repro.runtime.elastic``), which migrates the ``ScoreStore`` shards
+onto the surviving membership and resumes from the plan cursor.
+
+Membership vocabulary: hosts are identified by a stable **uid** (their
+original process index at pod launch — never reused); a host's **rank**
+is its position in the sorted surviving-member tuple, which is what the
+collectives and the strided data slicing consume. The distinction is
+what lets a 8→4 host shrink keep deterministic plans: ranks compact,
+uids don't.
+
+This module is intentionally leaf-level (stdlib only) so collectives,
+the fault plane, the loop, and elastic can all import it without
+cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class MembershipEvent:
+    """The facts of one membership transition.
+
+    ``members`` is the SORTED tuple of surviving host uids. An empty
+    tuple means the survivors are unknown (a bare collective timeout:
+    the detecting host cannot tell who else is alive) — the degradation
+    ladder then drops that host to a solo pod of itself.
+    """
+
+    kind: str                 # "leave" | "join" | "timeout" | "straggler"
+    step: int = -1            # loop step at detection (-1 = pre-loop)
+    members: tuple = ()       # surviving host uids, sorted ascending
+    departed: tuple = ()      # uids that left (empty for joins)
+    reason: str = ""
+
+    @property
+    def n_hosts(self) -> int:
+        return len(self.members)
+
+
+class MembershipChange(RuntimeError):
+    """The pod cannot proceed under its current membership.
+
+    Raised by the collective deadline envelope after retry exhaustion,
+    by the fault plane's scheduled host-death/partition faults, and by
+    the straggler monitor's escalation. Carries the ``MembershipEvent``
+    so the catcher (``TrainLoop``) can reshard without re-deriving the
+    facts.
+    """
+
+    def __init__(self, event: MembershipEvent):
+        super().__init__(f"membership change ({event.kind}): "
+                         f"{event.reason or 'collective deadline exceeded'}")
+        self.event = event

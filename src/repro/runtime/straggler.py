@@ -1,7 +1,7 @@
 """Straggler mitigation.
 
 On a large pod, a slow host shows up as a growing per-step wall time. The
-monitor keeps an EMA of step time and a deadline (factor × EMA). Two
+monitor keeps an EMA of step time and a deadline (factor × EMA). Three
 mitigations, in escalation order:
 
 1. shrink the importance-sampling pre-sample B toward b (the scoring phase
@@ -9,12 +9,21 @@ mitigations, in escalation order:
    optional, so degrading B trades variance reduction for wall time,
    never correctness);
 2. signal the caller to skip the straggling step's global sync and re-issue
-   the batch (bounded by ``max_skips``).
+   the batch (bounded by ``max_skips``);
+3. escalate: with the shrink floor reached AND the skip budget exhausted
+   the host is persistently slow — the monitor sets ``escalate`` and the
+   ``StragglerHook`` turns it into a ``MembershipChange`` event (the
+   elastic-runtime path) instead of letting the pod limp forever.
+
+Health is visible through the ``straggler.*`` obs instruments (inert
+when telemetry is disabled, like every ``repro.obs`` site).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+
+from repro import obs
 
 
 @dataclasses.dataclass
@@ -33,6 +42,10 @@ class StragglerMonitor:
         self.max_skips = max_skips
         self.min_b_scale = min_b_scale
         self.state = StragglerState()
+        self._g_ema = obs.gauge("straggler.ema_s")
+        self._g_deadline = obs.gauge("straggler.deadline_s")
+        self._g_b_scale = obs.gauge("straggler.b_scale")
+        self._c_skips = obs.counter("straggler.skips")
 
     def deadline(self):
         if self.state.count < 5:
@@ -40,12 +53,15 @@ class StragglerMonitor:
         return self.f * self.state.ema
 
     def observe(self, dt: float):
-        """Record a step time; returns an action dict."""
+        """Record a step time; returns an action dict. ``escalate`` goes
+        True only once the milder rungs are spent: over deadline with the
+        batch shrink floored and the skip budget exhausted."""
         st = self.state
         over = st.count >= 5 and dt > self.f * st.ema
         st.ema = dt if st.count == 0 else self.alpha * st.ema + (1 - self.alpha) * dt
         st.count += 1
-        action = {"over_deadline": over, "b_scale": st.b_scale, "skip": False}
+        action = {"over_deadline": over, "b_scale": st.b_scale,
+                  "skip": False, "escalate": False}
         if over:
             if st.b_scale > self.min_b_scale:
                 st.b_scale = max(self.min_b_scale, st.b_scale * 0.5)
@@ -53,8 +69,15 @@ class StragglerMonitor:
             elif st.skips < self.max_skips:
                 st.skips += 1
                 action["skip"] = True
+                self._c_skips.inc()
+            else:
+                action["escalate"] = True
         else:
             st.skips = 0
             st.b_scale = min(1.0, st.b_scale * 1.1)
             action["b_scale"] = st.b_scale
+        self._g_ema.set(st.ema)
+        if st.count >= 5:              # warm-up deadline is inf: not a stat
+            self._g_deadline.set(self.f * st.ema)
+        self._g_b_scale.set(st.b_scale)
         return action

@@ -371,7 +371,11 @@ def sample_sharded(store, dist: GlobalDist, k: int, *, seed: int, salt: int,
         use_kernel = jax.default_backend() == "tpu"
 
     def block(st):
-        if use_kernel:
+        # the fused kernel hard-codes strided gid arithmetic; rendezvous
+        # stores (post-reshard ownership) take the numpy candidates path
+        strided = getattr(getattr(st, "ownership", None), "kind",
+                          "strided") == "strided"
+        if use_kernel and strided:
             return local_candidates_kernel(st, dist, k + 1, ctx=ctx)
         return local_candidates(st.scores, st.seen,
                                 st.global_ids(np.arange(st.n_local)),

@@ -5,12 +5,17 @@ bound, eq. 20) of every training example it has seen, so selection schemes
 can reuse scores across epochs instead of paying a fresh scoring forward
 pass per batch (Algorithm 1's presample cost).
 
-Sharding: global example ids are strided over hosts — host ``h`` of ``H``
-owns ids ``{i : i % H == h}`` — so each host keeps an N/H-slot slice that is
-consistent with the data pipeline's global indexing regardless of where the
-sequential cursor happens to be. Updates with unowned or sentinel
-(negative) scores are dropped; in the single-host runs used by tests and
-benchmarks every id is owned.
+Sharding: shard assignment is an OWNERSHIP policy object. The default
+(``StridedOwnership``) strides global example ids over hosts — host ``h``
+of ``H`` owns ids ``{i : i % H == h}`` — so each host keeps an N/H-slot
+slice that is consistent with the data pipeline's global indexing
+regardless of where the sequential cursor happens to be. After an elastic
+membership change (``repro.runtime.elastic``) stores switch to
+``RendezvousOwnership``: HRW (highest-random-weight) hashing over
+(id, member uid), which keys on STABLE uids so a later leave/join moves
+only ~n/H entries instead of reshuffling every id. Updates with unowned
+or sentinel (negative) scores are dropped; in the single-host runs used
+by tests and benchmarks every id is owned.
 
 Score dynamics:
 * EMA merge on revisit: ``s ← a·s_old + (1-a)·s_new`` (first visit writes
@@ -31,20 +36,116 @@ from repro.distributed.collectives import (gather_host_scores,
                                            strided_shard_size)
 
 
-class ScoreStore:
-    def __init__(self, n_examples: int, *, host_id: int = 0, n_hosts: int = 1,
-                 ema: float = 0.9, staleness: float = 0.9):
-        if not 0 <= host_id < n_hosts:
-            raise ValueError(f"host_id {host_id} not in [0, {n_hosts})")
-        self.n = int(n_examples)
+class StridedOwnership:
+    """The default ``i % H == h`` partition — the id math every selection
+    path (including the Pallas kernel) was built on; byte-exact with the
+    pre-policy store."""
+
+    kind = "strided"
+
+    def __init__(self, n: int, host_id: int, n_hosts: int):
+        self.n = int(n)
         self.host_id = int(host_id)
         self.n_hosts = int(n_hosts)
+        self.n_local = strided_shard_size(self.n, self.host_id, self.n_hosts)
+
+    def owned(self, gids):
+        return (np.asarray(gids) % self.n_hosts) == self.host_id
+
+    def slot(self, gids):
+        return np.asarray(gids) // self.n_hosts
+
+    def global_ids(self, slots):
+        return np.asarray(slots) * self.n_hosts + self.host_id
+
+    def my_global_ids(self) -> np.ndarray:
+        """All ids this host owns, ascending (== global_ids(arange))."""
+        return np.arange(self.n_local, dtype=np.int64) * self.n_hosts \
+            + self.host_id
+
+    def shard_sizes(self) -> np.ndarray:
+        """Per-rank shard sizes (identical on every host)."""
+        return np.array([strided_shard_size(self.n, h, self.n_hosts)
+                         for h in range(self.n_hosts)], np.int64)
+
+
+class RendezvousOwnership:
+    """HRW (rendezvous) ownership over stable member uids.
+
+    ``owner(i) = argmax_uid hash(i, uid)`` — every host computes the
+    identical owner table from the sorted member-uid tuple, no
+    coordination. Keying on uids (not ranks) is the point: when a member
+    leaves, only ITS ids re-home (uniformly over the survivors); everyone
+    else's hash arguments — and hence shards — are untouched. Local slots
+    are this host's owned ids in ascending gid order; ``slot`` maps via
+    binary search. The id→slot math is data-dependent, so selection's
+    Pallas kernel path (strided-only index arithmetic) is bypassed for
+    rendezvous stores (``sample_sharded`` falls back to the numpy
+    candidates path).
+    """
+
+    kind = "rendezvous"
+
+    def __init__(self, n: int, members: tuple, me_uid: int):
+        from repro.sampler.selection import _fmix32
+        self.n = int(n)
+        self.members = tuple(sorted(int(u) for u in members))
+        if len(set(self.members)) != len(self.members):
+            raise ValueError(f"duplicate member uids {members}")
+        if int(me_uid) not in self.members:
+            raise ValueError(f"uid {me_uid} not in members {self.members}")
+        self.me_uid = int(me_uid)
+        self.host_id = self.members.index(self.me_uid)   # rank
+        self.n_hosts = len(self.members)
+        gids = np.arange(self.n, dtype=np.int64)
+        with np.errstate(over="ignore"):    # uint32 wrap IS the hash
+            g32 = (gids & 0xFFFFFFFF).astype(np.uint32)
+            keys = np.stack([
+                _fmix32(_fmix32(g32 * np.uint32(0x9E3779B9)
+                                ^ np.uint32((uid * 0x85EBCA6B) & 0xFFFFFFFF))
+                        + np.uint32(0x6A09E667))
+                for uid in self.members])
+        # ties (astronomically rare) break to the LOWEST rank: argmax
+        # returns the first maximal row, and rows are rank-ordered
+        self.owner = keys.argmax(axis=0).astype(np.int64)
+        self._my_gids = np.flatnonzero(self.owner == self.host_id) \
+            .astype(np.int64)
+        self.n_local = int(self._my_gids.size)
+
+    def owned(self, gids):
+        return self.owner[np.asarray(gids, np.int64)] == self.host_id
+
+    def slot(self, gids):
+        return np.searchsorted(self._my_gids, np.asarray(gids, np.int64))
+
+    def global_ids(self, slots):
+        return self._my_gids[np.asarray(slots)]
+
+    def my_global_ids(self) -> np.ndarray:
+        return self._my_gids
+
+    def shard_sizes(self) -> np.ndarray:
+        return np.bincount(self.owner, minlength=self.n_hosts) \
+            .astype(np.int64)
+
+
+class ScoreStore:
+    def __init__(self, n_examples: int, *, host_id: int = 0, n_hosts: int = 1,
+                 ema: float = 0.9, staleness: float = 0.9, members=None):
+        if members is not None:
+            self.ownership = RendezvousOwnership(n_examples, members, host_id)
+        else:
+            if not 0 <= host_id < n_hosts:
+                raise ValueError(f"host_id {host_id} not in [0, {n_hosts})")
+            self.ownership = StridedOwnership(n_examples, host_id, n_hosts)
+        self.n = int(n_examples)
+        # host_id is this host's RANK (what row slicing and the gather
+        # collective consume); rendezvous members carry the stable uids
+        self.host_id = self.ownership.host_id
+        self.n_hosts = self.ownership.n_hosts
         self.ema = float(ema)
         self.staleness = float(staleness)
-        # owned ids: host_id, host_id + H, host_id + 2H, ... — the one
-        # shard-size definition (collectives.strided_shard_size), correct
-        # for any n % n_hosts
-        self.n_local = strided_shard_size(self.n, self.host_id, self.n_hosts)
+        self.n_local = self.ownership.n_local
         self.scores = np.zeros((self.n_local,), np.float32)
         self.seen = np.zeros((self.n_local,), np.uint8)
         self.updates = np.zeros((), np.int64)
@@ -66,18 +167,25 @@ class ScoreStore:
         self._tick = 0
         self._last_tick = None
 
-    # -- id mapping -----------------------------------------------------------
+    # -- id mapping (delegated to the ownership policy) -----------------------
     def owned(self, gids: np.ndarray) -> np.ndarray:
         """Boolean mask of which global ids live on this host."""
-        gids = np.asarray(gids)
-        return (gids % self.n_hosts) == self.host_id
+        return self.ownership.owned(gids)
 
     def slot(self, gids: np.ndarray) -> np.ndarray:
         """Local slot of (owned) global ids."""
-        return np.asarray(gids) // self.n_hosts
+        return self.ownership.slot(gids)
 
     def global_ids(self, slots: np.ndarray) -> np.ndarray:
-        return np.asarray(slots) * self.n_hosts + self.host_id
+        return self.ownership.global_ids(slots)
+
+    def my_global_ids(self) -> np.ndarray:
+        """Every id this host owns, in slot order (ascending gid)."""
+        return self.ownership.my_global_ids()
+
+    def shard_sizes(self) -> np.ndarray:
+        """Per-rank shard sizes under this ownership (same on all hosts)."""
+        return self.ownership.shard_sizes()
 
     # -- writes ---------------------------------------------------------------
     def update(self, gids, scores) -> int:
@@ -182,11 +290,21 @@ class ScoreStore:
         local = self.sentinel_scores()
         if self.n_hosts == 1:
             out = local
-        else:
+        elif self.ownership.kind == "strided":
             gather = gather_fn or gather_host_scores
             out = np.asarray(gather(local, host_id=self.host_id,
                                     n_hosts=self.n_hosts, n_global=self.n),
                              np.float32)
+        else:
+            # rendezvous shards don't interleave: ride the (gid, value)
+            # scatter collective (or the injected simulated one)
+            from repro.distributed.collectives import allgather_owned
+            gather = gather_fn or allgather_owned
+            out = np.asarray(
+                gather(local, self.my_global_ids(),
+                       pad_to=int(self.shard_sizes().max()),
+                       n_global=self.n, n_hosts=self.n_hosts),
+                np.float32)
         if use_cache:
             self._gcache, self._gcache_version = out, self.version
         return out

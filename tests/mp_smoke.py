@@ -12,9 +12,20 @@ KV store (XLA's CPU backend has no multi-process computations —
 ``collectives._kv_allgather``); on TPU/GPU pods the same call sites ride
 ``multihost_utils.process_allgather``.
 
+The CHAOS leg (``--launch-chaos``) proves the elastic runtime's real
+failure path: the fault plane kills process 1 mid-run (``die@k:1``,
+``os._exit``), the survivor's next collective hits the deadline
+envelope, escalates ``MembershipChange``, degrades to a solo pod
+(``elastic.solo_event`` → ``reshard_sampler``), and RESUMES the plan
+chain from the same cursor — no restart, no checkpoint round-trip. The
+survivor then replays the identical schedule against the in-process
+simulated-host harness and asserts the full plan digest matches:
+production death == simulated membership transition, bitwise.
+
 Usage::
 
     python tests/mp_smoke.py --launch              # driver: spawns both
+    python tests/mp_smoke.py --launch-chaos        # driver: kill-one leg
     python tests/mp_smoke.py --process-id i --port P   # one worker
 
 Wired into the CI ``multihost`` job next to plan_determinism_check.py.
@@ -114,6 +125,181 @@ def _worker(process_id: int, port: int) -> int:
     return 0
 
 
+DIE_STEP = 5       # process 1 dies at the top of this step
+
+
+def _chaos_run_cfg():
+    from repro.configs import get_config
+    from repro.configs.base import (ISConfig, OptimConfig, RunConfig,
+                                    SamplerConfig, ShapeConfig)
+    # history/sharded drives BOTH sharded collectives (stats allreduce +
+    # candidate exchange) and the τ-gate refresh gather
+    return RunConfig(
+        model=get_config("lm-tiny"),
+        shape=ShapeConfig("t", seq_len=16, global_batch=8, kind="train"),
+        optim=OptimConfig(name="adamw", lr=1e-3),
+        imp=ISConfig(enabled=True, presample_ratio=2, tau_th=1.2,
+                     selection_impl="sharded"),
+        sampler=SamplerConfig(scheme="history", min_coverage=0.2,
+                              tau_th=1.001, temperature=0.5),
+        remat=False, seed=0)
+
+
+def _sim_pair(run):
+    """Two in-process simulated hosts wired with snapshot collectives —
+    the reference the chaos survivor's production chain must match."""
+    from repro.data.pipeline import SyntheticLM
+    from repro.sampler import make_sampler
+
+    samplers = [make_sampler(run, SyntheticLM(
+        run.model.vocab_size, 16, n_examples=N_EX, seed=9, host_id=h,
+        n_hosts=2)) for h in range(2)]
+    n = samplers[0].store.n
+    board = {}
+
+    def refresh():
+        snap = np.full(n, np.float32(-1.0), np.float32)
+        shards = []
+        for s in samplers:
+            snap[s.store.my_global_ids()] = s.store.sentinel_scores()
+            shards.append((s.store.scores.copy(), s.store))
+        board["snap"], board["shards"] = snap, shards
+
+    def sim_gather(local, *args, **kw):
+        return board["snap"]
+
+    def sim_reduce(local_stats_fn):
+        return np.stack([local_stats_fn(st)
+                         for _, st in board["shards"]]).sum(axis=0)
+
+    def sim_topk(block_fn, *, k_each, n_hosts):
+        blocks = [block_fn(st) for _, st in board["shards"]]
+        return {k: np.concatenate([b[k] for b in blocks])
+                for k in blocks[0]}
+
+    for s in samplers:
+        s.gather_fn, s.reduce_fn, s.topk_fn = sim_gather, sim_reduce, sim_topk
+    refresh()
+    return samplers, refresh
+
+
+def _chaos_chain(sampler, score_seq, *, on_membership):
+    """Drive one plan chain over ``score_seq``, funnelling any
+    ``MembershipChange`` through ``on_membership`` and REPLAYING the
+    interrupted step at the same cursor. Returns the digest."""
+    import dataclasses
+    import hashlib as hl
+
+    from repro.data.pipeline import PipelineState
+    from repro.runtime import faults
+    from repro.runtime.membership import MembershipChange
+
+    digest = hl.sha256()
+    pstate, step = PipelineState(), 0
+    while step < len(score_seq):
+        faults.set_step(step)
+        faults.die_if(step)
+        try:
+            sampler._tick_epoch(pstate.epoch)
+            plan, pstate_next = sampler.plan(pstate, step)
+        except MembershipChange as mc:
+            on_membership(sampler, dataclasses.replace(mc.event, step=step))
+            continue                      # replay the SAME step
+        digest.update(plan.signature().encode())
+        sampler.observe(plan, score_seq[step][plan.gids])
+        pstate = pstate_next
+        step += 1
+    return digest.hexdigest()
+
+
+def _chaos_worker(process_id: int, port: int) -> int:
+    import jax
+    jax.distributed.initialize(f"localhost:{port}", num_processes=2,
+                               process_id=process_id)
+    h = jax.process_index()
+
+    from repro.configs.base import FaultsConfig, RuntimeConfig
+    from repro.distributed import collectives
+    from repro.runtime import elastic, faults
+    from repro.sampler import make_sampler
+    from repro.data.pipeline import SyntheticLM
+
+    # tight deadline so the survivor escalates in seconds, not minutes
+    collectives.configure(RuntimeConfig(
+        collective_timeout_s=4.0, collective_retries=1,
+        backoff_base_s=0.2, backoff_max_s=0.4))
+    faults.configure(FaultsConfig(enabled=True, spec=f"die@{DIE_STEP}:1"),
+                     host_id=h)
+
+    run = _chaos_run_cfg()
+    sampler = make_sampler(run, SyntheticLM(
+        run.model.vocab_size, 16, n_examples=N_EX, seed=9))
+    assert sampler.n_hosts == 2
+    rng = np.random.default_rng(5)
+    score_seq = [rng.uniform(0.1, 4.0, N_EX).astype(np.float32)
+                 for _ in range(STEPS)]
+    events = []
+
+    def survive(sp, event):
+        uid = int(getattr(sp.store.ownership, "me_uid", sp.store.host_id))
+        stats = elastic.reshard_sampler(sp, elastic.solo_event(event, uid))
+        events.append((event.step, event.kind, stats["n_hosts"]))
+        print(f"proc {h} degraded to {stats['n_hosts']} host(s) at step "
+              f"{event.step}: migrated {stats['migrated']}, lost "
+              f"{stats['lost']}", flush=True)
+
+    got = _chaos_chain(sampler, score_seq, on_membership=survive)
+    assert events == [(DIE_STEP, "timeout", 1)], events
+
+    # the reference: the SAME schedule against the simulated-host board —
+    # two sim hosts to DIE_STEP, then the solo membership transition
+    faults.configure(None)
+    sims, refresh = _sim_pair(run)
+    import hashlib as hl
+
+    from repro.data.pipeline import PipelineState
+    digest = hl.sha256()
+    pstate, step = PipelineState(), 0
+    solo = None
+    while step < STEPS:
+        if step == DIE_STEP and solo is None:
+            from repro.runtime.membership import MembershipEvent
+            mig = np.full(N_EX, -1.0, np.float64)
+            st = sims[0].store
+            mig[st.my_global_ids()] = st.sentinel_scores()
+            elastic.reshard_sampler(
+                sims[0], MembershipEvent(kind="timeout", step=step,
+                                         members=(0,)),
+                allgather=lambda v, g, **kw: mig)
+            # solo: production identity collectives, board gone
+            sims[0].gather_fn = sims[0].reduce_fn = sims[0].topk_fn = None
+            solo = sims[0]
+        live = [solo] if solo is not None else sims
+        if solo is None:
+            refresh()
+        for sp in live:
+            sp._tick_epoch(pstate.epoch)
+        if solo is None:
+            refresh()
+        plans = []
+        for sp in live:
+            plan, pstate_next = sp.plan(pstate, step)
+            plans.append(plan)
+        assert len({p.signature() for p in plans}) == 1
+        digest.update(plans[0].signature().encode())
+        for sp, plan in zip(live, plans):
+            sp.observe(plan, score_seq[step][plan.gids])
+        pstate = pstate_next
+        step += 1
+    want = digest.hexdigest()
+    assert got == want, (f"production chaos chain diverged from the "
+                         f"simulated transition: {got} != {want}")
+    print(f"proc {h} CHAOS OK {got}", flush=True)
+    # the peer is dead: jax.distributed's atexit shutdown barrier can
+    # only abort — the run is verified, skip it
+    os._exit(0)
+
+
 def _free_port() -> int:
     s = socket.socket()
     s.bind(("localhost", 0))
@@ -159,16 +345,67 @@ def launch(timeout: int = 300) -> int:
     return 0
 
 
+def launch_chaos(timeout: int = 300) -> int:
+    """Spawn both workers with the kill-one fault schedule: process 1
+    must die with the fault plane's exit code, process 0 must degrade to
+    a solo pod, resume from the plan cursor, match the simulated
+    membership transition bitwise, and exit 0."""
+    port = _free_port()
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    procs = [subprocess.Popen(
+        [sys.executable, os.path.abspath(__file__), "--chaos",
+         "--process-id", str(i), "--port", str(port)],
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True)
+        for i in range(2)]
+    outs = []
+    for p in procs:
+        try:
+            out, err = p.communicate(timeout=timeout)
+        except subprocess.TimeoutExpired:
+            for q in procs:
+                q.kill()
+            print("TIMEOUT: a collective blocked past its deadline "
+                  "envelope", file=sys.stderr)
+            return 1
+        outs.append((p.returncode, out, err))
+    (code0, out0, err0), (code1, out1, err1) = outs
+    if code1 != 17:
+        print(f"process 1 should have died with the fault plane's exit "
+              f"code 17, got {code1}", file=sys.stderr)
+        print(err1[-4000:], file=sys.stderr)
+        return 1
+    if code0 != 0:
+        print(out0, file=sys.stderr)
+        print(err0[-4000:], file=sys.stderr)
+        return code0 or 1
+    ok = [ln for ln in out0.strip().splitlines() if " CHAOS OK " in ln]
+    if not ok:
+        print(f"survivor never confirmed the resumed chain:\n{out0}",
+              file=sys.stderr)
+        return 1
+    print(out0.strip())
+    print("chaos smoke OK: host death -> deadline escalation -> solo "
+          "reshard -> resumed plan chain matches the simulated transition")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--launch", action="store_true")
+    ap.add_argument("--launch-chaos", action="store_true")
+    ap.add_argument("--chaos", action="store_true")
     ap.add_argument("--process-id", type=int, default=None)
     ap.add_argument("--port", type=int, default=None)
     args = ap.parse_args(argv)
     if args.launch:
         return launch()
+    if args.launch_chaos:
+        return launch_chaos()
     if args.process_id is None or args.port is None:
-        raise SystemExit("need --launch, or --process-id AND --port")
+        raise SystemExit("need --launch/--launch-chaos, or --process-id "
+                         "AND --port")
+    if args.chaos:
+        return _chaos_worker(args.process_id, args.port)
     return _worker(args.process_id, args.port)
 
 

@@ -14,7 +14,12 @@ Three 20-step legs share one process (and therefore one registry):
 * a **fused-presample** leg (``imp.presample_impl=fused``, interpret-mode
   kernels on CPU) — covers the fused data plane: ``engine.row_gathers``
   (on-device selection gathers), ``sampler.d2h_bytes`` (the score pull),
-  and the plane's device-put skip counter.
+  and the plane's device-put skip counter;
+* a **chaos** leg with the fault plane injecting six consecutive slow
+  steps — covers the elastic runtime: ``faults.*`` firing counters, the
+  straggler monitor's EMA/deadline/shrink gauges and skip counter, and —
+  once the skip budget escalates to a ``MembershipChange`` resync — the
+  ``runtime.membership.*`` reshard instruments.
 
 Every record of every emitted file must match the record shape, every
 metric NAME must resolve against the declared schema
@@ -58,6 +63,15 @@ REQUIRED_FUSED = ["engine.row_gathers", "sampler.d2h_bytes",
                   "kernels.prune.flops_saved"]
 REQUIRED_STEP = ["step.loss", "step.dt", "step.attempts", "step.dt_total",
                  "step.variance_gain", "step.speedup_est"]
+# the chaos leg's elastic runtime: injected-fault firings, the straggler
+# monitor's deadline machinery, and the membership reshard that its
+# escalation triggers
+REQUIRED_ELASTIC_COUNTERS = ["faults.slow", "straggler.skips",
+                             "runtime.membership.events",
+                             "runtime.membership.migrated_ids"]
+REQUIRED_ELASTIC_GAUGES = ["straggler.ema_s", "straggler.deadline_s",
+                           "straggler.b_scale",
+                           "runtime.membership.n_hosts"]
 
 
 def check_record(rec):
@@ -110,6 +124,17 @@ def main():
         **common, "imp.presample_impl": "fused", "imp.tau_th": "1.0001",
         "imp.score_prune": "conservative"})
     repro.Experiment(run3, source="lm").fit()
+    # leg 4: deterministic chaos walking the straggler ladder end to end —
+    # steps 8/9 breach once each (shrink to the floor), then EVERY attempt
+    # of step 10 breaches (duplicate entries fire once per observation):
+    # three skips exhaust the budget and the fourth breach escalates into
+    # a MembershipChange resync (a solo reshard at H=1)
+    slow = ";".join(["slow@8:0:99", "slow@9:0:99"] + ["slow@10:0:99"] * 4)
+    run4 = build_run(arch="lm-tiny", preset="smoke", overrides={
+        **common, "runtime.faults.enabled": "true",
+        "runtime.faults.spec": slow})
+    _, hist4 = repro.Experiment(run4, source="lm").fit()
+    assert len(hist4) == 20, "chaos leg must complete every step"
 
     import glob
     files = sorted(glob.glob(f"{tmp}/obs-p*.jsonl"))
@@ -129,6 +154,12 @@ def main():
         assert name in last, f"gauge {name} missing"
     for name in REQUIRED_FUSED:
         assert last.get(name, 0) > 0, f"fused-path counter {name} dead"
+    for name in REQUIRED_ELASTIC_COUNTERS:
+        assert last.get(name, 0) > 0, f"elastic counter {name} dead"
+    for name in REQUIRED_ELASTIC_GAUGES:
+        assert name in last, f"elastic gauge {name} missing"
+    assert last["runtime.membership.n_hosts"] == 1
+    assert "runtime.membership.lost_ids" in last   # 0 at a solo resync
     assert last["health.variance_gain"] > 0, "variance gain never > 0"
     stepped = [r["metrics"] for r in recs if r["event"] == "step"]
     for name in REQUIRED_STEP:

@@ -215,7 +215,7 @@ def test_allreduce_any_or_semantics(monkeypatch):
                         ((True, True), True)]:
         monkeypatch.setattr(
             coll, "_process_allgather",
-            lambda v, _votes=votes: np.array([[b] for b in _votes]))
+            lambda v, _votes=votes, **kw: np.array([[b] for b in _votes]))
         assert coll.allreduce_any(votes[0], n_hosts=2) is want
 
 

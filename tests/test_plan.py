@@ -235,8 +235,21 @@ def _run_cfg(scheme, impl="sharded", **skw):
         remat=False)
 
 
-def _sim_hosts(run, H, seed=9):
-    """H host-sharded samplers + the in-process cross-host collectives.
+class _StoreSnap:
+    """A frozen view of one host's shard: copied arrays + the store's
+    (pure) id math — what that host would contribute to a collective
+    fired at the snapshot point."""
+
+    def __init__(self, store):
+        self.scores, self.seen = store.scores.copy(), store.seen.copy()
+        self.n, self.n_local = store.n, store.n_local
+        self.host_id, self.n_hosts = store.host_id, store.n_hosts
+        self.owned, self.slot = store.owned, store.slot
+        self.global_ids = store.global_ids
+
+
+def _wire_board(samplers):
+    """Install in-process cross-host collectives over ``samplers``.
 
     All injected collectives serve a SNAPSHOT the driver refreshes at
     each lockstep phase boundary — a real multi-process collective has
@@ -248,31 +261,24 @@ def _sim_hosts(run, H, seed=9):
     receive the per-shard BLOCK BUILDER and apply it to every snapshot
     shard, host-major — the same reduction order as
     `collectives.allreduce_stats`/`exchange_topk`.
+
+    The gather scatters each shard by ``my_global_ids`` (bitwise equal to
+    the old interleave for strided ownership, and the only correct
+    assembly for rendezvous ownership after a membership change); it
+    accepts both the ``gather_host_scores`` and ``allgather_owned``
+    calling conventions so one injection serves both ownership kinds.
     """
-    samplers = [make_sampler(run, SyntheticLM(
-        run.model.vocab_size, 16, n_examples=N_EX, seed=seed, host_id=h,
-        n_hosts=H)) for h in range(H)]
+    n = samplers[0].store.n
     board = {}
 
-    class _StoreSnap:
-        """A frozen view of one host's shard: copied arrays + the store's
-        (pure) id math — what that host would contribute to a collective
-        fired at the snapshot point."""
-
-        def __init__(self, store):
-            self.scores, self.seen = store.scores.copy(), store.seen.copy()
-            self.n, self.n_local = store.n, store.n_local
-            self.host_id, self.n_hosts = store.host_id, store.n_hosts
-            self.owned, self.slot = store.owned, store.slot
-            self.global_ids = store.global_ids
-
     def refresh():
-        board["snap"] = interleave_shards(
-            np.stack([pad_shard(s.store.sentinel_scores(), N_EX, H)
-                      for s in samplers]), N_EX)
+        snap = np.full(n, np.float32(-1.0), np.float32)
+        for s in samplers:
+            snap[s.store.my_global_ids()] = s.store.sentinel_scores()
+        board["snap"] = snap
         board["shards"] = [_StoreSnap(s.store) for s in samplers]
 
-    def sim_gather(local, *, host_id, n_hosts, n_global):
+    def sim_gather(local, *args, **kw):
         return board["snap"]
 
     def sim_reduce(local_stats_fn):
@@ -288,7 +294,16 @@ def _sim_hosts(run, H, seed=9):
         s.reduce_fn = sim_reduce
         s.topk_fn = sim_topk
     refresh()
-    return samplers, refresh
+    return refresh
+
+
+def _sim_hosts(run, H, seed=9):
+    """H host-sharded samplers + the in-process cross-host collectives
+    (``_wire_board``)."""
+    samplers = [make_sampler(run, SyntheticLM(
+        run.model.vocab_size, 16, n_examples=N_EX, seed=seed, host_id=h,
+        n_hosts=H)) for h in range(H)]
+    return samplers, _wire_board(samplers)
 
 
 @pytest.mark.parametrize("impl", ["gather", "sharded"])
@@ -359,6 +374,181 @@ def test_plans_bitwise_identical_across_hosts(scheme, impl):
         activations += getattr(single, "active", False)
     if scheme == "history":
         assert activations > 0       # the IS phase actually ran
+
+
+# ---------------------------------------------------------------------------
+# mid-run membership transitions (the elastic runtime's determinism pin)
+# ---------------------------------------------------------------------------
+_AUX_ATTRS = ("tau_ema", "tau_gate", "_obs", "_cov_global", "_gate_dirty",
+              "_epoch")
+
+
+def _copy_aux(src, dst):
+    """Carry a survivor's scalar selection state onto a fresh sampler —
+    the state a restarted host would restore from its checkpoint."""
+    import copy
+    for attr in _AUX_ATTRS:
+        if hasattr(src, attr):
+            setattr(dst, attr, copy.deepcopy(getattr(src, attr)))
+
+
+def _cold_member_sampler(run, members, uid, mig_vec, seed=9):
+    """A sampler as a COLD START at membership ``members`` would build it
+    for host ``uid``: rendezvous-owned store adopting the migrated global
+    sentinel vector (write-through on the fresh store — exact)."""
+    members = tuple(sorted(int(u) for u in members))
+    rank, H = members.index(int(uid)), len(members)
+    sp = make_sampler(run, SyntheticLM(
+        run.model.vocab_size, 16, n_examples=N_EX, seed=seed, host_id=rank,
+        n_hosts=H))
+    store = ScoreStore(N_EX, host_id=int(uid), ema=sp.store.ema,
+                       staleness=sp.store.staleness, members=members)
+    ids = np.flatnonzero(mig_vec >= 0)
+    if ids.size:
+        store.update(ids, np.asarray(mig_vec, np.float64)[ids])
+    sp.store = store
+    return sp
+
+
+def _lockstep(groups, step, scores):
+    """Advance every (samplers, refresh, pstates) group one step in
+    lockstep; returns each group's (plans, token concat)."""
+    outs = []
+    for samplers, refresh, sts in groups:
+        refresh()
+        for h, sp in enumerate(samplers):
+            sp._tick_epoch(sts[h].epoch)
+        refresh()
+        plans, toks = [], []
+        for h, sp in enumerate(samplers):
+            batch, plan, sts[h] = sp.next_batch(sts[h], step)
+            plans.append(plan)
+            toks.append(batch["tokens"])
+        assert len({p.signature() for p in plans}) == 1, \
+            f"hosts forked at step {step}"
+        for sp, plan in zip(samplers, plans):
+            sp.observe(plan, scores[plan.gids])
+        outs.append((plans, np.concatenate(toks)))
+    return outs
+
+
+def _survived_global_vector(samplers, uids):
+    """What ``allgather_owned`` over the survivors returns: every
+    surviving shard scattered by its owned ids, ``-1`` elsewhere."""
+    mig = np.full(N_EX, -1.0, np.float64)
+    for u in uids:
+        st = samplers[u].store
+        mig[st.my_global_ids()] = st.sentinel_scores()
+    return mig
+
+
+@pytest.mark.parametrize("impl", ["gather", "sharded"])
+@pytest.mark.parametrize("scheme", ["uniform", "presample", "history",
+                                    "selective"])
+def test_membership_leave_plans_match_cold_start(scheme, impl):
+    """Hosts die mid-run; the survivors reshard IN PLACE through
+    ``elastic.reshard_sampler`` (rendezvous re-ownership + migrated
+    surviving scores, departed shards falling to the unseen prior) and
+    keep planning from the same cursor. Every post-transition plan must
+    be bitwise identical across survivors AND bitwise identical to a
+    cold start at the same cursor with the new membership (fresh
+    samplers + migrated store + checkpoint-equivalent scalars) — the
+    elastic runtime's acceptance pin: no checkpoint round-trip needed.
+    """
+    from repro.runtime import elastic
+    from repro.runtime.membership import MembershipEvent
+    H0, survivors, pre, post = 8, (0, 2, 5, 6), 10, 12
+    run = _run_cfg(scheme, impl=impl)
+    samplers, refresh = _sim_hosts(run, H0)
+    rng = np.random.default_rng(7)
+    sts = [PipelineState() for _ in range(H0)]
+    for step in range(pre):
+        _lockstep([(samplers, refresh, sts)], step,
+                  rng.uniform(0.05, 4.0, N_EX).astype(np.float32))
+    # -- the membership change ------------------------------------------------
+    mig = _survived_global_vector(samplers, survivors)
+    event = MembershipEvent(kind="leave", step=pre, members=survivors,
+                            departed=(1, 3, 4, 7))
+    stats = [elastic.reshard_sampler(samplers[u], event,
+                                     allgather=lambda v, g, **kw: mig)
+             for u in survivors]
+    live = [samplers[u] for u in survivors]
+    refresh = _wire_board(live)
+    live_sts = [PipelineState(sts[0].epoch, sts[0].cursor)
+                for _ in survivors]
+    H = len(survivors)
+    assert [s["rank"] for s in stats] == list(range(H))
+    assert all(s["n_hosts"] == H for s in stats)
+    assert all(s["migrated"] == int((mig >= 0).sum()) for s in stats)
+    # the departed hosts' shards fell back to the unseen prior
+    assert stats[0]["lost"] == N_EX - sum(
+        strided_shard_size(N_EX, u, H0) for u in survivors)
+    # ownership partitions the id space across survivors
+    all_owned = np.concatenate([s.store.my_global_ids() for s in live])
+    np.testing.assert_array_equal(np.sort(all_owned), np.arange(N_EX))
+    # -- the reference: cold start at this cursor with this membership --------
+    ref = [_cold_member_sampler(run, survivors, u, mig) for u in survivors]
+    for r, s in zip(ref, live):
+        _copy_aux(s, r)
+    ref_refresh = _wire_board(ref)
+    ref_sts = [PipelineState(sts[0].epoch, sts[0].cursor)
+               for _ in survivors]
+    for step in range(pre, pre + post):
+        scores = rng.uniform(0.05, 4.0, N_EX).astype(np.float32)
+        (plans, toks), (rplans, rtoks) = _lockstep(
+            [(live, refresh, live_sts), (ref, ref_refresh, ref_sts)],
+            step, scores)
+        assert plans[0].signature() == rplans[0].signature(), \
+            f"reshard diverged from cold start at step {step}"
+        np.testing.assert_array_equal(toks, rtoks)
+
+
+@pytest.mark.parametrize("impl", ["gather", "sharded"])
+@pytest.mark.parametrize("scheme", ["uniform", "presample", "history",
+                                    "selective"])
+def test_membership_join_plans_match_cold_start(scheme, impl):
+    """Hosts JOIN mid-run (4 → 8): incumbents reshard in place, joiners
+    build cold at the new membership and adopt the migrated vector (plus
+    the broadcast scalar selection state); nothing is lost (every old
+    shard survives) and all eight hosts' plans are bitwise identical to
+    the cold-start reference at the same cursor."""
+    from repro.runtime import elastic
+    from repro.runtime.membership import MembershipEvent
+    H0, pre, post = 4, 8, 10
+    members = tuple(range(8))
+    run = _run_cfg(scheme, impl=impl)
+    samplers, refresh = _sim_hosts(run, H0)
+    rng = np.random.default_rng(13)
+    sts = [PipelineState() for _ in range(H0)]
+    for step in range(pre):
+        _lockstep([(samplers, refresh, sts)], step,
+                  rng.uniform(0.05, 4.0, N_EX).astype(np.float32))
+    mig = _survived_global_vector(samplers, range(H0))
+    event = MembershipEvent(kind="join", step=pre, members=members)
+    stats = [elastic.reshard_sampler(sp, event,
+                                     allgather=lambda v, g, **kw: mig)
+             for sp in samplers]
+    assert all(s["lost"] == 0 for s in stats)      # every old shard lives
+    joiners = [_cold_member_sampler(run, members, u, mig)
+               for u in range(H0, 8)]
+    for j in joiners:
+        _copy_aux(samplers[0], j)
+    live = samplers + joiners                      # rank order == uid order
+    refresh = _wire_board(live)
+    live_sts = [PipelineState(sts[0].epoch, sts[0].cursor) for _ in live]
+    ref = [_cold_member_sampler(run, members, u, mig) for u in members]
+    for r in ref:
+        _copy_aux(samplers[0], r)
+    ref_refresh = _wire_board(ref)
+    ref_sts = [PipelineState(sts[0].epoch, sts[0].cursor) for _ in ref]
+    for step in range(pre, pre + post):
+        scores = rng.uniform(0.05, 4.0, N_EX).astype(np.float32)
+        (plans, toks), (rplans, rtoks) = _lockstep(
+            [(live, refresh, live_sts), (ref, ref_refresh, ref_sts)],
+            step, scores)
+        assert plans[0].signature() == rplans[0].signature(), \
+            f"join diverged from cold start at step {step}"
+        np.testing.assert_array_equal(toks, rtoks)
 
 
 def test_presample_host_plans_identical_across_hosts():

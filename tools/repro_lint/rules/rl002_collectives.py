@@ -31,7 +31,7 @@ from tools.repro_lint.rules import common
 # the cross-process primitives they ride
 COLLECTIVES = {
     "gather_host_scores", "allgather_rows", "exchange_rows",
-    "exchange_topk", "allreduce_stats", "allreduce_any",
+    "exchange_topk", "allreduce_stats", "allreduce_any", "allgather_owned",
     "ring_allreduce_compressed", "_process_allgather", "_kv_allgather",
 }
 
